@@ -1,0 +1,5 @@
+"""Benchmark harness: one module per paper table/figure + roofline.
+
+Run everything:  PYTHONPATH=src python -m benchmarks.run
+Run one figure:  PYTHONPATH=src python -m benchmarks.fig5_sws_single
+"""

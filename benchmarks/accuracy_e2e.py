@@ -1,0 +1,62 @@
+"""End-to-end accuracy preservation: train -> deploy -> measure (<1% drop).
+
+The paper's bottom-line constraint at its headline operating point
+(SWS stride-1, p=0.5, 128x10 crossbars): deployment must cost <1% accuracy.
+Evaluated on the trained LM (exact task accuracy) plus fidelity probes.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import banner, save_json
+from benchmarks.trained_lm import eval_accuracy, get_trained_lm
+from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment, deploy_params
+from repro.core.simulator import logit_kl, top1_agreement
+from repro.models import api
+
+
+def run(*, p=0.5, rows=128, cols=10, seed=0) -> dict:
+    cfg, params, batch_fn = get_trained_lm(seed=seed)
+    acc_fp = eval_accuracy(cfg, params, batch_fn)
+
+    plan = build_deployment(
+        params, CrossbarSpec(rows=rows, cols=cols),
+        PlannerConfig(p_stuck=p, min_size=1024, seed=seed),
+    )
+    params_hat = deploy_params(params, plan)
+    acc_cim = eval_accuracy(cfg, params_hat, batch_fn)
+
+    f = lambda pp, b: api.forward(pp, cfg, b)[0]
+    batch = batch_fn(0)
+    t = plan.totals()
+    return {
+        "operating_point": {"p": p, "rows": rows, "cols": cols, "schedule": "stride1"},
+        "accuracy_fp": acc_fp,
+        "accuracy_cim": acc_cim,
+        "accuracy_drop_pct": 100.0 * (acc_fp - acc_cim),
+        "top1_agreement": float(top1_agreement(f, params, params_hat, batch)),
+        "logit_kl": float(logit_kl(f, params, params_hat, batch)),
+        "sws_speedup": t["sws_speedup"],
+        "total_speedup": t["total_speedup"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--p", type=float, default=0.5)
+    ap.add_argument("--cols", type=int, default=10)
+    args = ap.parse_args()
+
+    banner("Accuracy preservation (train -> deploy -> eval)")
+    res = run(p=args.p, cols=args.cols)
+    print(f"  fp accuracy   : {res['accuracy_fp']:.4f}")
+    print(f"  CIM accuracy  : {res['accuracy_cim']:.4f}  (drop {res['accuracy_drop_pct']:+.2f}%)")
+    print(f"  top1 agreement: {res['top1_agreement']:.4f}   logit KL: {res['logit_kl']:.2e}")
+    print(f"  reprog speedup: {res['total_speedup']:.2f}x (sws {res['sws_speedup']:.2f}x)")
+    ok = res["accuracy_drop_pct"] < 1.0
+    print(f"  [paper check] <1% accuracy drop: {'PASS' if ok else 'FAIL'}")
+    save_json("accuracy_e2e", res)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,187 @@
+"""Shared benchmark machinery: shape-faithful model weight sets + helpers.
+
+The paper evaluates trained ResNet/VGG/AlexNet/ViT/DeiT on ImageNet-1K.
+This environment has no ImageNet or pretrained checkpoints (DESIGN.md §2),
+so each model is represented by its *exact published layer shapes* with
+fan-in-scaled gaussian weights — the bell-shaped distribution SWS exploits
+is a property of both trained and initialized DNNs (Han et al. 2015).  The
+LM entries draw their shapes from this framework's assigned architecture
+configs, tying the paper's experiments to the production stack.
+
+``--full`` benchmarks every element of every tensor; the default caps each
+tensor at ``max_elems`` (transitions are a per-element statistic, so a
+uniform subsample is unbiased; validated against --full on VGG16).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+from pathlib import Path
+from typing import Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+
+OUT_DIR = Path("experiments/bench")
+
+PHYS_COLS = 128  # physical crossbar columns (the paper's 128x128 arrays)
+
+
+def weights_per_section(cols: int, rows: int = 128) -> int:
+    """Weights one crossbar holds (paper §II: a 128x128 array with 16
+    power-of-two multipliers stores 128/16 = 8 weights per row, labelled
+    '128x16'; '128x10' stores 12 weights per row)."""
+    return rows * max(1, PHYS_COLS // cols)
+
+# ---------------------------------------------------------------------------
+# Shape-faithful model weight sets
+# ---------------------------------------------------------------------------
+
+def _conv(cout, cin, k):  # torch layout (cout, cin, k, k)
+    return (cout, cin, k, k)
+
+
+def _resnet50_shapes() -> list[tuple[int, ...]]:
+    shapes = [_conv(64, 3, 7)]
+    # (in_planes, planes, blocks, stride) per stage; bottleneck expansion 4
+    stages = [(64, 64, 3), (256, 128, 4), (512, 256, 6), (1024, 512, 3)]
+    for cin, planes, blocks in stages:
+        for b in range(blocks):
+            c_in = cin if b == 0 else planes * 4
+            shapes += [
+                _conv(planes, c_in, 1),
+                _conv(planes, planes, 3),
+                _conv(planes * 4, planes, 1),
+            ]
+            if b == 0:
+                shapes.append(_conv(planes * 4, c_in, 1))  # downsample proj
+    shapes.append((1000, 2048))  # fc
+    return shapes
+
+
+def _vgg16_shapes() -> list[tuple[int, ...]]:
+    cfg = [64, 64, 128, 128, 256, 256, 256, 512, 512, 512, 512, 512, 512]
+    shapes, cin = [], 3
+    for cout in cfg:
+        shapes.append(_conv(cout, cin, 3))
+        cin = cout
+    shapes += [(4096, 25088), (4096, 4096), (1000, 4096)]
+    return shapes
+
+
+def _alexnet_shapes() -> list[tuple[int, ...]]:
+    return [
+        _conv(64, 3, 11), _conv(192, 64, 5), _conv(384, 192, 3),
+        _conv(256, 384, 3), _conv(256, 256, 3),
+        (4096, 9216), (4096, 4096), (1000, 4096),
+    ]
+
+
+def _vit_shapes(d: int, layers: int, heads: int) -> list[tuple[int, ...]]:
+    shapes = [(d, 3 * 16 * 16)]  # patch embed
+    for _ in range(layers):
+        shapes += [(d, 3 * d), (d, d), (d, 4 * d), (4 * d, d)]
+    shapes.append((1000, d))
+    return shapes
+
+
+def _lm_layer_shapes(arch: str) -> list[tuple[int, ...]]:
+    """One transformer layer's matmul weights from an assigned arch config."""
+    from repro.configs import get_arch
+
+    cfg = get_arch(arch)
+    hd = cfg.resolved_head_dim
+    shapes = [
+        (cfg.d_model, cfg.n_heads * hd),
+        (cfg.d_model, cfg.n_kv_heads * hd),
+        (cfg.d_model, cfg.n_kv_heads * hd),
+        (cfg.n_heads * hd, cfg.d_model),
+    ]
+    if cfg.d_ff:
+        shapes += [(cfg.d_model, cfg.d_ff)] * 2 + [(cfg.d_ff, cfg.d_model)]
+    return shapes
+
+
+MODELS: dict[str, Callable[[], list[tuple[int, ...]]]] = {
+    "alexnet": _alexnet_shapes,
+    "vgg16": _vgg16_shapes,
+    "resnet50": _resnet50_shapes,
+    "deit-tiny": lambda: _vit_shapes(192, 12, 3),
+    "deit-base": lambda: _vit_shapes(768, 12, 12),
+    "vit-base": lambda: _vit_shapes(768, 12, 12),
+    # LM-framework tie-ins (one layer each; full model = n_layers x this)
+    "internlm2-layer": lambda: _lm_layer_shapes("internlm2-1.8b"),
+    "yi6b-layer": lambda: _lm_layer_shapes("yi-6b"),
+}
+
+PAPER_DEFAULT_MODELS = ["alexnet", "vgg16", "resnet50", "deit-tiny", "deit-base", "vit-base"]
+
+
+def model_weights(
+    name: str, *, max_elems: int = 2_000_000, seed: int = 0
+) -> Iterable[tuple[str, jax.Array]]:
+    """Yield (tensor_name, flat_weights) with fan-in-scaled gaussian values."""
+    key = jax.random.PRNGKey(seed)
+    for i, shape in enumerate(MODELS[name]()):
+        fan_in = int(jnp.prod(jnp.asarray(shape[1:]))) if len(shape) > 1 else shape[0]
+        n = int(jnp.prod(jnp.asarray(shape)))
+        n_eff = min(n, max_elems) if max_elems else n
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (n_eff,)) * (2.0 / fan_in) ** 0.5
+        yield f"{name}/t{i}{tuple(shape)}", w
+
+
+def model_planes(
+    name: str,
+    *,
+    cols: int = 10,
+    rows: int = 128,
+    sort: bool = True,
+    max_elems: int = 2_000_000,
+    seed: int = 0,
+) -> jax.Array:
+    """bool[S, W, cols] section bit planes for a whole model, W = weights per
+    physical crossbar (see ``weights_per_section``).
+
+    Mirrors the paper's accounting: quantization scale and the SWS sort are
+    *per layer* (a global sort/scale would let small-fan-in layers collapse
+    to zeros and inflate speedups by an order of magnitude), and the
+    per-layer section streams are concatenated in layer order — the model
+    streaming through the crossbar pool layer by layer.
+    """
+    from repro.core import bitslice, sws
+
+    w_per = weights_per_section(cols, rows)
+    chunks = []
+    for _, w in model_weights(name, max_elems=max_elems, seed=seed):
+        if sort:
+            w = w[sws.sws_permutation(w)]
+        qt = bitslice.quantize(w, cols)
+        q = jnp.pad(qt.q, (0, (-w.shape[0]) % w_per))
+        chunks.append(bitslice.bitplanes(q.reshape(-1, w_per), cols))
+    return jnp.concatenate(chunks, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Output helpers
+# ---------------------------------------------------------------------------
+
+def save_json(figname: str, payload: dict) -> Path:
+    OUT_DIR.mkdir(parents=True, exist_ok=True)
+    path = OUT_DIR / f"{figname}.json"
+    path.write_text(json.dumps(payload, indent=1))
+    return path
+
+
+def banner(title: str) -> None:
+    print(f"\n=== {title} " + "=" * max(0, 70 - len(title)))
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

@@ -1,0 +1,93 @@
+"""Paper Fig. 10 — sweeping crossbar columns (bitwidth) at p=0.5.
+
+Speedup (p=1 over p=0.5 on the SWS stride-1 schedule) stays ~constant with
+the column count, while accuracy collapses below ~8-10 columns because the
+stuck LSB is a large fraction of the weight at low bitwidths and quantization
+itself bites.  Paper: accuracy plateaus at 10 columns (78.00% ViT-Base,
+80.31% ResNet-50 — their ImageNet numbers; ours is the trained-LM analogue).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import banner, model_planes, save_json
+from benchmarks.trained_lm import eval_accuracy, get_trained_lm
+from repro.core import schedule, stucking
+from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment, deploy_params
+
+ROWS = 128
+L_CROSSBARS = 16
+COLS_SWEEP = (4, 6, 8, 10, 12, 14, 16)
+P = 0.5
+
+
+def transitions_sweep(models=("vit-base", "resnet50"), *, max_elems=2_000_000, seed=0):
+    # The exact stochastic stucking walk is sequential over sections; cap the
+    # per-tensor sample harder than the other figures (transitions are a
+    # per-element statistic, so a uniform subsample is unbiased; --full lifts).
+    max_elems = min(max_elems, 500_000) if max_elems else 0
+    out = {}
+    key = jax.random.PRNGKey(seed)
+    for m in models:
+        entry = {}
+        for cols in COLS_SWEEP:
+            planes = model_planes(m, cols=cols, sort=True, max_elems=max_elems, seed=seed)
+            chains = schedule.stride_1_chains(planes.shape[0], L_CROSSBARS)
+            key, k1, k2 = jax.random.split(key, 3)
+            t1, _ = stucking.stuck_schedule(planes, chains, 1.0, k1)
+            tp, _ = stucking.stuck_schedule(planes, chains, P, k2)
+            entry[str(cols)] = {
+                "transitions_p1": int(t1),
+                "transitions_p": int(tp),
+                "speedup_p1_over_p": int(t1) / max(int(tp), 1),
+            }
+        out[m] = entry
+    return out
+
+
+def accuracy_sweep(seed=0):
+    cfg, params, batch_fn = get_trained_lm(seed=seed)
+    acc_fp = eval_accuracy(cfg, params, batch_fn)
+    out = {"fp_accuracy": acc_fp, "per_cols": {}}
+    for cols in COLS_SWEEP:
+        plan = build_deployment(
+            params, CrossbarSpec(rows=ROWS, cols=cols),
+            PlannerConfig(p_stuck=P, min_size=1024, seed=seed),
+        )
+        acc = eval_accuracy(cfg, deploy_params(params, plan), batch_fn)
+        out["per_cols"][str(cols)] = {
+            "accuracy": acc,
+            "drop_pct": 100.0 * (acc_fp - acc),
+        }
+    return out
+
+
+def run(*, max_elems=2_000_000, seed=0) -> dict:
+    return {
+        "transitions": transitions_sweep(max_elems=max_elems, seed=seed),
+        "accuracy": accuracy_sweep(seed=seed),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    banner(f"Fig. 10 — column sweep at p={P}")
+    res = run(max_elems=0 if args.full else 2_000_000)
+    for m, entry in res["transitions"].items():
+        sp = "  ".join(f"{c}:{v['speedup_p1_over_p']:.2f}x" for c, v in entry.items())
+        print(f"  {m:10s} {sp}")
+    acc = res["accuracy"]
+    print(f"  trained-LM fp accuracy: {acc['fp_accuracy']:.4f}")
+    for c, r in acc["per_cols"].items():
+        print(f"    cols={c:>2s}: acc={r['accuracy']:.4f} (drop {r['drop_pct']:+.2f}%)")
+    save_json("fig10_columns", res)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper Fig. 5 — SWS speedup for a single 128x16 crossbar.
+
+One physical crossbar walks every section of the model in (a) natural
+unsorted order (ISAAC/CASCADE-style allocation) vs (b) per-layer SWS order;
+speedup = transitions(a) / transitions(b).  Paper band: 1.47x (DeiT-Tiny,
+sharp distribution) to 1.87x (VGG16, smooth distribution).
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.common import PAPER_DEFAULT_MODELS, banner, model_planes, save_json
+from repro.core import cost
+
+ROWS, COLS = 128, 16
+
+
+def run(models=None, *, max_elems=2_000_000, seed=0) -> dict:
+    models = models or PAPER_DEFAULT_MODELS + ["internlm2-layer", "yi6b-layer"]
+    results = {}
+    for m in models:
+        planes_u = model_planes(m, cols=COLS, sort=False, max_elems=max_elems, seed=seed)
+        planes_s = model_planes(m, cols=COLS, sort=True, max_elems=max_elems, seed=seed)
+        t_u = int(cost.chain_transitions(planes_u))
+        t_s = int(cost.chain_transitions(planes_s))
+        results[m] = {
+            "n_sections": int(planes_u.shape[0]),
+            "transitions_unsorted": t_u,
+            "transitions_sws": t_s,
+            "speedup": t_u / max(t_s, 1),
+        }
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    banner("Fig. 5 — SWS single-crossbar (128x16) speedup")
+    res = run(max_elems=0 if args.full else 2_000_000, seed=args.seed)
+    for m, r in res.items():
+        print(f"  {m:18s} sections={r['n_sections']:7d}  speedup={r['speedup']:.2f}x")
+    save_json("fig5_sws_single", res)
+    paper = {"deit-tiny": 1.47, "vgg16": 1.87}
+    for m, want in paper.items():
+        got = res[m]["speedup"]
+        print(f"  [paper check] {m}: paper={want:.2f}x ours={got:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

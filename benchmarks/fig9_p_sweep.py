@@ -1,0 +1,102 @@
+"""Paper Fig. 9 — sweeping the stucking probability p (ViT-Base, ResNet-50).
+
+Two halves, mirroring the paper's two panels under our data constraints
+(DESIGN.md §2 — no ImageNet):
+
+* transitions: swept on the shape-faithful ViT-Base / ResNet-50 weight sets;
+* accuracy: swept on a *trained* reduced LM where task accuracy is directly
+  measurable (deterministic next-token task), deployed at each p.
+
+Paper finding: p can be driven to 0 (stuck column) within a 1% accuracy
+margin; speedup grows as p falls.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import banner, model_planes, save_json
+from benchmarks.trained_lm import eval_accuracy, get_trained_lm
+from repro.core import schedule, stucking
+from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment, deploy_params
+
+ROWS, COLS = 128, 10
+L_CROSSBARS = 16
+PS = (0.0, 0.25, 0.5, 0.75, 1.0)
+
+
+def transitions_sweep(models=("vit-base", "resnet50"), *, max_elems=2_000_000, seed=0):
+    # The exact stochastic stucking walk is sequential over sections; cap the
+    # per-tensor sample harder than the other figures (transitions are a
+    # per-element statistic, so a uniform subsample is unbiased; --full lifts).
+    max_elems = min(max_elems, 500_000) if max_elems else 0
+    out = {}
+    key = jax.random.PRNGKey(seed)
+    for m in models:
+        planes = model_planes(m, cols=COLS, sort=True, max_elems=max_elems, seed=seed)
+        chains = schedule.stride_1_chains(planes.shape[0], L_CROSSBARS)
+        t_ref = None
+        entry = {}
+        for p in PS:
+            key, sub = jax.random.split(key)
+            t, _ = stucking.stuck_schedule(planes, chains, p, sub)
+            t = int(t)
+            if p == 1.0:
+                t_ref = t
+            entry[str(p)] = t
+        out[m] = {
+            "transitions": entry,
+            "speedup_vs_p1": {k: t_ref / max(v, 1) for k, v in entry.items()},
+        }
+    return out
+
+
+def accuracy_sweep(seed=0):
+    cfg, params, batch_fn = get_trained_lm(seed=seed)
+    acc_fp = eval_accuracy(cfg, params, batch_fn)
+    out = {"fp_accuracy": acc_fp, "per_p": {}}
+    for p in PS:
+        plan = build_deployment(
+            params, CrossbarSpec(rows=ROWS, cols=COLS),
+            PlannerConfig(p_stuck=p, min_size=1024, seed=seed),
+        )
+        acc = eval_accuracy(cfg, deploy_params(params, plan), batch_fn)
+        out["per_p"][str(p)] = {
+            "accuracy": acc,
+            "drop_pct": 100.0 * (acc_fp - acc),
+            "total_speedup": plan.totals()["total_speedup"],
+        }
+    return out
+
+
+def run(*, max_elems=2_000_000, seed=0) -> dict:
+    return {
+        "transitions": transitions_sweep(max_elems=max_elems, seed=seed),
+        "accuracy": accuracy_sweep(seed=seed),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    banner("Fig. 9 — p sweep (speedup + accuracy)")
+    res = run(max_elems=0 if args.full else 2_000_000)
+    for m, r in res["transitions"].items():
+        sp = "  ".join(f"p={p}:{v:.2f}x" for p, v in r["speedup_vs_p1"].items())
+        print(f"  {m:10s} {sp}")
+    acc = res["accuracy"]
+    print(f"  trained-LM fp accuracy: {acc['fp_accuracy']:.4f}")
+    for p, r in acc["per_p"].items():
+        print(
+            f"    p={p}: acc={r['accuracy']:.4f} (drop {r['drop_pct']:+.2f}%) "
+            f"deploy-speedup={r['total_speedup']:.2f}x"
+        )
+    save_json("fig9_p_sweep", res)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
+the per-(arch x shape x mesh) three-term roofline table: compute / memory /
+collective seconds, the dominant term, MODEL_FLOPS/HLO_FLOPS, and the
+roofline fraction (useful FLOP/s at the roofline step time over peak).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.common import banner, save_json
+
+DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def load_cells(dryrun_dir: Path = DRYRUN_DIR, variant: str = "") -> list[dict]:
+    cells = []
+    for p in sorted(dryrun_dir.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok":
+            continue
+        if (d.get("variant") or "") != variant:
+            continue
+        cells.append(d)
+    return cells
+
+
+def table_rows(cells: list[dict]) -> list[dict]:
+    rows = []
+    for d in cells:
+        r = d["roofline"]
+        rows.append(
+            {
+                "arch": d["arch"],
+                "shape": d["shape"],
+                "mesh": d["mesh"],
+                "compute_s": r["compute_s"],
+                "memory_s": r["memory_s"],
+                "collective_s": r["collective_s"],
+                "bottleneck": r["bottleneck"],
+                "step_time_s": r["step_time_s"],
+                "useful_flops_ratio": r["useful_flops_ratio"],
+                "roofline_fraction": r["roofline_fraction"],
+            }
+        )
+    return rows
+
+
+def run(variant: str = "") -> dict:
+    cells = load_cells(variant=variant)
+    rows = table_rows(cells)
+    worst = sorted(
+        (r for r in rows if r["roofline_fraction"] is not None and r["mesh"] == "single"),
+        key=lambda r: r["roofline_fraction"],
+    )
+    most_coll = sorted(
+        (r for r in rows if r["mesh"] == "single"),
+        key=lambda r: -(r["collective_s"] / max(r["step_time_s"], 1e-30)),
+    )
+    return {
+        "rows": rows,
+        "worst_roofline_fraction": worst[:3],
+        "most_collective_bound": most_coll[:3],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--mesh", default=None, choices=[None, "single", "multi"])
+    args = ap.parse_args()
+
+    banner("Roofline (from dry-run artifacts)")
+    res = run(variant=args.variant)
+    rows = [r for r in res["rows"] if args.mesh in (None, r["mesh"])]
+    if not rows:
+        print("  no dry-run artifacts found — run: python -m repro.launch.dryrun --all --mesh both")
+        return
+    hdr = f"  {'arch':24s}{'shape':13s}{'mesh':7s}{'compute':>10s}{'memory':>10s}{'coll':>10s}  {'bound':10s}{'frac':>7s}"
+    print(hdr)
+    for r in rows:
+        frac = f"{r['roofline_fraction']:.3f}" if r["roofline_fraction"] is not None else "-"
+        print(
+            f"  {r['arch']:24s}{r['shape']:13s}{r['mesh']:7s}"
+            f"{r['compute_s']:10.2e}{r['memory_s']:10.2e}{r['collective_s']:10.2e}"
+            f"  {r['bottleneck']:10s}{frac:>7s}"
+        )
+    save_json("roofline", res)
+
+
+if __name__ == "__main__":
+    main()

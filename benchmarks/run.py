@@ -1,0 +1,123 @@
+"""Run the full benchmark suite: every paper figure + accuracy + roofline.
+
+  PYTHONPATH=src python -m benchmarks.run [--full]
+
+Writes JSON artifacts to experiments/bench/ and prints each figure's
+summary.  --full removes the per-tensor element cap (slower, exact).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (
+    accuracy_e2e,
+    fig5_sws_single,
+    fig6_strides,
+    fig7_greedy,
+    fig8_stucking,
+    fig9_p_sweep,
+    fig10_columns,
+    redeploy_delta,
+    roofline,
+)
+from benchmarks.common import banner, save_json
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    max_elems = 0 if args.full else 2_000_000
+
+    t0 = time.time()
+    summary = {}
+
+    banner("Fig. 5 — SWS single crossbar")
+    r5 = fig5_sws_single.run(max_elems=max_elems)
+    for m, r in r5.items():
+        print(f"  {m:18s} speedup={r['speedup']:.2f}x")
+    save_json("fig5_sws_single", r5)
+    summary["fig5"] = {m: r["speedup"] for m, r in r5.items()}
+
+    banner("Fig. 6 — stride-L vs stride-1")
+    r6 = fig6_strides.run(max_elems=max_elems)
+    for m, r in r6.items():
+        ls = "  ".join(f"L={l}:{v['speedup']:.2f}x" for l, v in r["strideL"].items())
+        print(f"  {m:10s} {ls}  stride1:{r['stride1']['speedup']:.2f}x")
+    save_json("fig6_strides", r6)
+    summary["fig6"] = {
+        m: {"stride1": r["stride1"]["speedup"], "strideL4": r["strideL"]["4"]["speedup"]}
+        for m, r in r6.items()
+    }
+
+    banner("Fig. 7 — greedy thread balancing (64 threads)")
+    r7 = fig7_greedy.run(max_elems=max_elems)
+    for m, r in r7.items():
+        print(f"  {m:12s} unsorted={r['speedup_unsorted']:5.1f}x  greedy={r['speedup_greedy']:5.1f}x")
+    save_json("fig7_greedy", r7)
+    summary["fig7"] = {m: r["speedup_greedy"] for m, r in r7.items()}
+
+    banner("Fig. 8 — bit stucking p=0.5")
+    r8 = fig8_stucking.run(max_elems=max_elems)
+    for m, r in r8.items():
+        print(f"  {m:12s} saves {r['speedup_pct']:5.1f}%")
+    save_json("fig8_stucking", r8)
+    summary["fig8"] = {m: r["speedup_pct"] for m, r in r8.items()}
+
+    banner("Fig. 9 — p sweep")
+    r9 = fig9_p_sweep.run(max_elems=max_elems)
+    for m, r in r9["transitions"].items():
+        sp = "  ".join(f"p={p}:{v:.2f}x" for p, v in r["speedup_vs_p1"].items())
+        print(f"  {m:10s} {sp}")
+    for p, r in r9["accuracy"]["per_p"].items():
+        print(f"    p={p}: acc drop {r['drop_pct']:+.2f}%  speedup {r['total_speedup']:.2f}x")
+    save_json("fig9_p_sweep", r9)
+    summary["fig9_acc_drop_at_p0"] = r9["accuracy"]["per_p"]["0.0"]["drop_pct"]
+
+    banner("Fig. 10 — column sweep")
+    r10 = fig10_columns.run(max_elems=max_elems)
+    for c, r in r10["accuracy"]["per_cols"].items():
+        print(f"    cols={c:>2s}: acc drop {r['drop_pct']:+.2f}%")
+    save_json("fig10_columns", r10)
+    summary["fig10_acc_drop_at_10cols"] = r10["accuracy"]["per_cols"]["10"]["drop_pct"]
+
+    banner("Accuracy preservation e2e (headline operating point)")
+    racc = accuracy_e2e.run()
+    print(f"  acc drop {racc['accuracy_drop_pct']:+.2f}%  total speedup {racc['total_speedup']:.2f}x")
+    save_json("accuracy_e2e", racc)
+    summary["accuracy_e2e"] = {
+        "drop_pct": racc["accuracy_drop_pct"],
+        "total_speedup": racc["total_speedup"],
+    }
+
+    banner("Redeploy delta (training-time integration, beyond-paper)")
+    rd = redeploy_delta.run()
+    for k, v in rd["tensors"].items():
+        print(f"  {k}: stale-sort streaming {v['stale_sort_speedup']:.2f}x "
+              f"(fresh re-sort {v['fresh_sort_speedup']:.2f}x)")
+    save_json("redeploy_delta", rd)
+    summary["redeploy"] = {k: v["stale_sort_speedup"] for k, v in rd["tensors"].items()}
+
+    rroof = roofline.run()
+    if rroof["rows"]:
+        banner("Roofline (from dry-run artifacts)")
+        n = len(rroof["rows"])
+        bounds = {}
+        for r in rroof["rows"]:
+            bounds[r["bottleneck"]] = bounds.get(r["bottleneck"], 0) + 1
+        print(f"  {n} cells; bottleneck distribution: {bounds}")
+        for r in rroof["worst_roofline_fraction"]:
+            print(f"  worst roofline fraction: {r['arch']} {r['shape']} {r['mesh']} "
+                  f"-> {r['roofline_fraction']:.3f}")
+        save_json("roofline", rroof)
+        summary["roofline_cells"] = n
+
+    banner(f"benchmarks.run complete in {time.time() - t0:.0f}s")
+    save_json("summary", summary)
+    print("  artifacts in experiments/bench/*.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""A trained reduced LM shared by the accuracy benchmarks (fig9/fig10/e2e).
+
+Trains once per process (cached) on the deterministic next-token task, so
+"accuracy" is exact and cheap to evaluate: the model must learn the vocab
+lookup t -> (5t + 7) mod V.  A converged model scores ~1.0; crossbar
+deployment error shows up directly as accuracy drop — the closest CPU-scale
+analogue of the paper's ImageNet top-1 criterion.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.data import DataConfig, make_dataset
+from repro.launch.steps import make_train_step
+from repro.models import api
+from repro.optim import AdamWConfig, adamw_init
+
+ARCH = "internlm2-1.8b"
+STEPS = 120
+SEQ, BATCH = 64, 8
+
+
+@functools.lru_cache(maxsize=2)
+def get_trained_lm(seed: int = 0):
+    cfg = get_arch(ARCH, reduced=True)
+    ds = make_dataset(DataConfig(cfg.vocab_size, SEQ, BATCH, task="copy", seed=seed))
+    step = jax.jit(make_train_step(cfg, AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=STEPS)))
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    opt = adamw_init(params)
+    for s in range(STEPS):
+        params, opt, _ = step(params, opt, ds.batch_at(s))
+
+    def batch_fn(i: int):
+        return ds.batch_at(10_000 + i)  # held-out steps
+
+    return cfg, params, batch_fn
+
+
+def eval_accuracy(cfg, params, batch_fn, *, n_batches: int = 4) -> float:
+    """Next-token accuracy on held-out batches."""
+    correct = total = 0
+    for i in range(n_batches):
+        batch = batch_fn(i)
+        logits, _ = api.forward(params, cfg, batch)
+        pred = jnp.argmax(logits[:, :-1], axis=-1)
+        tgt = batch["tokens"][:, 1:]
+        correct += int(jnp.sum(pred == tgt))
+        total += int(tgt.size)
+    return correct / total

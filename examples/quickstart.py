@@ -1,0 +1,32 @@
+"""Quickstart: price a crossbar deployment of an LM in ~20 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_arch
+from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment
+from repro.models import api
+
+# 1. any model = any pytree of weights; here a reduced assigned architecture
+cfg = get_arch("internlm2-1.8b", reduced=True)
+params = api.init(jax.random.PRNGKey(0), cfg)
+
+# 2. plan the deployment: quantize -> bit-slice -> SWS -> stride-1 schedule
+#    across 16 crossbars -> 64-thread balancing -> bit stucking at p=0.5
+plan = build_deployment(
+    params,
+    CrossbarSpec(rows=128, cols=10),
+    PlannerConfig(schedule="stride1", crossbars=16, threads=64, p_stuck=0.5,
+                  min_size=1024),
+)
+
+# 3. read the report
+t = plan.totals()
+print(f"tensors deployed       : {len(plan.reports)}")
+print(f"baseline transitions   : {t['transitions_baseline']:,}")
+print(f"after SWS              : {t['transitions_sws']:,}  ({t['sws_speedup']:.2f}x)")
+print(f"after SWS + stucking   : {t['transitions_final']:,}  ({t['total_speedup']:.2f}x)")
+print(f"64-thread greedy       : {t['lockstep_speedup_greedy']:.1f}x of ideal 64x")
+for name, r in list(plan.reports.items())[:3]:
+    print(f"  {name:32s} {r.shape!s:14s} sws={r.sws_speedup:.2f}x total={r.total_speedup:.2f}x")

@@ -1,0 +1,6 @@
+"""repro: JAX/Pallas reproduction of 'Efficient Reprogramming of Memristive
+Crossbars for DNNs: Weight Sorting and Bit Stucking' (Farias & Kung, 2024),
+built as a multi-pod training/serving framework with crossbar deployment as a
+first-class backend.  See DESIGN.md for the system map."""
+
+__version__ = "0.1.0"

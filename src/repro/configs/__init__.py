@@ -1,0 +1,38 @@
+"""Architecture configs: one module per assigned architecture + registry."""
+from repro.configs.base import (
+    ArchConfig,
+    MLAConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeSpec,
+    SHAPES,
+    get_arch,
+    list_archs,
+    register,
+)
+
+# importing the modules registers their configs
+from repro.configs import (  # noqa: F401  (registration side effects)
+    xlstm_350m,
+    internvl2_76b,
+    qwen2_moe_a2_7b,
+    deepseek_v2_236b,
+    seamless_m4t_medium,
+    internlm2_1_8b,
+    gemma_2b,
+    phi3_medium_14b,
+    yi_6b,
+    hymba_1_5b,
+)
+
+__all__ = [
+    "ArchConfig",
+    "MLAConfig",
+    "MoEConfig",
+    "SSMConfig",
+    "ShapeSpec",
+    "SHAPES",
+    "get_arch",
+    "list_archs",
+    "register",
+]

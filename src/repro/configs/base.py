@@ -1,0 +1,145 @@
+"""Architecture + shape config schema, and the global registry.
+
+Every assigned architecture registers an exact ``ArchConfig`` (the full
+model, instantiated only via ShapeDtypeStructs in the dry-run) and a
+``reduced()`` variant of the same family for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int
+    n_shared: int
+    top_k: int
+    d_expert: int  # per-expert FFN hidden dim
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # Allocate expert weights padded to this count (> n_routed) so the expert
+    # dim divides the 16-way model axis and clean expert-parallelism applies.
+    # Routing never selects a padded expert; they are dead weights (the
+    # standard production trick for awkward expert counts — §Perf iteration 2
+    # showed the expert-TP fallback costs a 10.7 GB f32 dispatch-buffer psum
+    # per layer in the backward pass, 65% of the step's wire bytes).
+    pad_experts_to: int | None = None
+
+    @property
+    def n_alloc(self) -> int:
+        return self.pad_experts_to or self.n_routed
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 1536
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 16  # per-channel state (mamba N / mlstm dk factor)
+    conv_width: int = 4
+    expand: int = 2  # d_inner = expand * d_model
+    chunk_size: int = 256  # chunkwise-parallel training chunk
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None  # default d_model // n_heads
+    act: str = "swiglu"  # swiglu | geglu
+    norm: str = "rmsnorm"
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    embed_scale: bool = False  # multiply embeddings by sqrt(d_model) (gemma)
+    dtype: str = "bfloat16"
+    # --- family extensions ---
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # block pattern: sequence of (block_kind, repeat); expanded cyclically to
+    # n_layers.  kinds: "attn" (dense attn+mlp), "moe" (attn+moe), "mla_moe",
+    # "mlstm", "slstm", "hymba".
+    block_pattern: tuple[tuple[str, int], ...] = (("attn", 1),)
+    # attention flavour
+    attn_window: Optional[int] = None  # sliding-window size (None = full)
+    global_layer_every: Optional[int] = None  # hymba: every k-th layer is global
+    # enc-dec
+    encdec: bool = False
+    n_enc_layers: int = 0
+    # modality frontend stub: tokens are replaced by precomputed embeddings
+    # for the first `stub_prefix_len` positions (vlm patches / audio frames)
+    stub_prefix_len: int = 0
+    # meta/prefix tokens (hymba): learnable tokens prepended to the sequence
+    n_meta_tokens: int = 0
+    # sub-quadratic? (drives long_500k applicability)
+    subquadratic: bool = False
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    def layer_kinds(self) -> list[str]:
+        """Expand block_pattern cyclically to exactly n_layers kinds."""
+        kinds: list[str] = []
+        while len(kinds) < self.n_layers:
+            for kind, rep in self.block_pattern:
+                kinds.extend([kind] * rep)
+                if len(kinds) >= self.n_layers:
+                    break
+        return kinds[: self.n_layers]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+_REGISTRY: dict[str, ArchConfig] = {}
+_REDUCED: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(cfg: ArchConfig, reduced: Callable[[], ArchConfig]) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    _REDUCED[cfg.name] = reduced
+    return cfg
+
+
+def get_arch(name: str, *, reduced: bool = False) -> ArchConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_REGISTRY)}")
+    return _REDUCED[name]() if reduced else _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Whether (arch, shape) is a runnable dry-run cell (DESIGN.md §4)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, "long_500k needs sub-quadratic attention; pure full-attention arch"
+    return True, ""

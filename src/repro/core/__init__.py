@@ -1,0 +1,31 @@
+"""The paper's primary contribution: efficient crossbar reprogramming.
+
+Pipeline (all pure JAX):
+  bitslice  — quantize + bit-plane slice weights into crossbar sections
+  cost      — transition counting (Eq. 1), per-column breakdowns
+  sws       — Sorted Weight Sectioning + beyond-paper TSP section ordering
+  schedule  — stride-1 / stride-L multi-crossbar schedules, thread balancing
+  stucking  — bit-stucking walks with exact achieved-state tracking
+  planner   — params pytree -> DeploymentPlan (metrics + deployed weights)
+  simulator — CIM forward simulation + accuracy-preservation probes
+  redeploy  — beyond-paper checkpoint-to-checkpoint delta reprogramming
+"""
+from repro.core.planner import (
+    CrossbarSpec,
+    DeploymentPlan,
+    PlannerConfig,
+    TensorReport,
+    analyze_tensor,
+    build_deployment,
+    deploy_params,
+)
+
+__all__ = [
+    "CrossbarSpec",
+    "DeploymentPlan",
+    "PlannerConfig",
+    "TensorReport",
+    "analyze_tensor",
+    "build_deployment",
+    "deploy_params",
+]

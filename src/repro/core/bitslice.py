@@ -1,0 +1,155 @@
+"""Quantization and bit-plane slicing for bit-sliced CIM crossbars.
+
+A bit-sliced crossbar of geometry ``rows x cols`` stores ``rows`` weights, one
+per crossbar row, as ``cols``-bit unsigned magnitudes: column ``j`` is the
+power-of-two multiplier ``2**j``.  Convention used throughout this package:
+
+* plane axis is the **last** axis; index ``0`` is the **lowest-order column**
+  (LSB) — the column the paper's bit-stucking targets.
+* ``sign_magnitude`` encoding: ``w ~= sign * scale * q`` with ``q`` in
+  ``[0, 2**cols - 1]``.  Signs are applied digitally (differential crossbar
+  pairs); sorting by ``|w|`` therefore sorts the stored bit patterns, which is
+  what Sorted Weight Sectioning exploits.
+* ``offset_binary`` encoding (beyond-paper, §7 of DESIGN.md): ``w ~= scale * q
+  + offset`` with all-positive ``q``.  The offset term is a rank-1 digital
+  correction at matmul time: ``x @ W = scale * (x @ Q) + sum(x) * offset``.
+
+All functions are pure JAX and jit-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Encoding = Literal["sign_magnitude", "offset_binary"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Quantized:
+    """A flat quantized tensor ready for sectioning.
+
+    Attributes:
+      q:      int32[n]  unsigned magnitudes in [0, 2**cols - 1].
+      sign:   int8[n]   +1/-1 for sign_magnitude; all +1 for offset_binary.
+      scale:  f32[]     dequantization scale.
+      offset: f32[]     dequantization offset (0 for sign_magnitude).
+      cols:   static    bitwidth.
+      encoding: static  encoding name.
+    """
+
+    q: jax.Array
+    sign: jax.Array
+    scale: jax.Array
+    offset: jax.Array
+    cols: int
+    encoding: str
+
+    def tree_flatten(self):
+        return (self.q, self.sign, self.scale, self.offset), (self.cols, self.encoding)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        q, sign, scale, offset = children
+        cols, encoding = aux
+        return cls(q=q, sign=sign, scale=scale, offset=offset, cols=cols, encoding=encoding)
+
+
+def quantize(w: jax.Array, cols: int, encoding: Encoding = "sign_magnitude") -> Quantized:
+    """Quantize a tensor (any shape; flattened) to ``cols``-bit crossbar form."""
+    flat = jnp.ravel(w).astype(jnp.float32)
+    levels = jnp.float32(2**cols - 1)
+    if encoding == "sign_magnitude":
+        amax = jnp.maximum(jnp.max(jnp.abs(flat)), jnp.finfo(jnp.float32).tiny)
+        scale = amax / levels
+        q = jnp.clip(jnp.round(jnp.abs(flat) / scale), 0, levels).astype(jnp.int32)
+        sign = jnp.where(flat < 0, -1, 1).astype(jnp.int8)
+        offset = jnp.float32(0.0)
+    elif encoding == "offset_binary":
+        lo, hi = jnp.min(flat), jnp.max(flat)
+        rng = jnp.maximum(hi - lo, jnp.finfo(jnp.float32).tiny)
+        scale = rng / levels
+        q = jnp.clip(jnp.round((flat - lo) / scale), 0, levels).astype(jnp.int32)
+        sign = jnp.ones_like(q, dtype=jnp.int8)
+        offset = lo
+    else:
+        raise ValueError(f"unknown encoding: {encoding!r}")
+    return Quantized(q=q, sign=sign, scale=scale, offset=offset, cols=cols, encoding=encoding)
+
+
+def dequantize(qt: Quantized) -> jax.Array:
+    """Inverse of :func:`quantize` (returns the flat tensor)."""
+    mag = qt.q.astype(jnp.float32) * qt.scale
+    if qt.encoding == "sign_magnitude":
+        return mag * qt.sign.astype(jnp.float32)
+    return mag + qt.offset
+
+
+def dequantize_from_planes(
+    planes: jax.Array, sign: jax.Array, scale: jax.Array, offset: jax.Array
+) -> jax.Array:
+    """Reassemble weights from (possibly error-injected) bit planes.
+
+    planes: bool/int[..., cols] with plane 0 = LSB.  Returns f32[...].
+    """
+    cols = planes.shape[-1]
+    weights_of_two = (2 ** jnp.arange(cols, dtype=jnp.int32)).astype(jnp.int32)
+    q = jnp.sum(planes.astype(jnp.int32) * weights_of_two, axis=-1)
+    return q.astype(jnp.float32) * scale * sign.astype(jnp.float32) + offset
+
+
+@partial(jax.jit, static_argnames=("cols",))
+def bitplanes(q: jax.Array, cols: int) -> jax.Array:
+    """Extract bit planes: int[...,] -> bool[..., cols]; plane 0 = LSB."""
+    shifts = jnp.arange(cols, dtype=q.dtype)
+    return ((q[..., None] >> shifts) & 1).astype(jnp.bool_)
+
+
+def pack_rows(planes: jax.Array) -> jax.Array:
+    """Pack the rows axis of bool[S, rows, cols] into uint8 words.
+
+    Returns uint8[S, ceil(rows/8), cols].  Used for XOR+popcount transition
+    counting (8x less data movement than bool planes).
+    """
+    s, rows, cols = planes.shape
+    pad = (-rows) % 8
+    if pad:
+        planes = jnp.pad(planes, ((0, 0), (0, pad), (0, 0)))
+    # jnp.packbits packs along the chosen axis, MSB-first within a byte.
+    return jnp.packbits(planes.astype(jnp.uint8), axis=1)
+
+
+def unpack_rows(packed: jax.Array, rows: int) -> jax.Array:
+    """Inverse of :func:`pack_rows` -> bool[S, rows, cols]."""
+    planes = jnp.unpackbits(packed, axis=1, count=rows)
+    return planes.astype(jnp.bool_)
+
+
+def section(flat: jax.Array, rows: int) -> tuple[jax.Array, int]:
+    """Partition a flat array into crossbar sections of ``rows`` weights.
+
+    Zero-pads the tail.  Returns (sections[S, rows], original_length).
+    Zero padding is exact for both encodings' *transition* accounting: q=0
+    rows have no active memristors in sign_magnitude, and in offset_binary the
+    padding is sliced off before dequantization so its value never matters.
+    """
+    n = flat.shape[0]
+    pad = (-n) % rows
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, rows), n
+
+
+def unsection(sections: jax.Array, n: int) -> jax.Array:
+    """Inverse of :func:`section`: drop padding, return flat[n]."""
+    return sections.reshape(-1)[:n]
+
+
+def section_planes(q: jax.Array, rows: int, cols: int) -> tuple[jax.Array, int]:
+    """int32[n] magnitudes -> bool[S, rows, cols] section bit planes."""
+    sec, n = section(q, rows)
+    return bitplanes(sec, cols), n

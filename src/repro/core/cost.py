@@ -1,0 +1,94 @@
+"""Reprogramming cost model (Eq. 1 of the paper).
+
+The cost of reprogramming a crossbar holding bit matrix ``A`` to hold ``B`` is
+the number of memristors that change state::
+
+    R_AB = sum_ij |a_ij - b_ij|        (Hamming distance)
+
+``chain_transitions`` prices a whole programming *chain* (one physical
+crossbar walking an ordered list of sections); per-column breakdowns feed the
+bit-stucking analysis (low-order columns carry a disproportionate share of
+transitions because their bit values are ~Bernoulli(0.5)).
+
+Two equivalent paths are provided:
+  * bool planes  — direct XOR + sum (clear, differentiable-ish, CPU-friendly)
+  * packed uint8 — XOR + ``lax.population_count`` (8x less data; the Pallas
+    ``hamming`` kernel in ``repro.kernels.hamming`` implements the same
+    contract for TPU and is validated against these functions).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pair_transitions(a: jax.Array, b: jax.Array) -> jax.Array:
+    """R_AB for bool planes of identical shape [..., rows, cols] -> int32[...]."""
+    return jnp.sum(jnp.logical_xor(a, b), axis=(-2, -1), dtype=jnp.int32)
+
+
+def pair_transitions_packed(a: jax.Array, b: jax.Array) -> jax.Array:
+    """R_AB for packed uint8 planes [..., words, cols] -> int32[...]."""
+    x = jax.lax.population_count(jnp.bitwise_xor(a, b))
+    return jnp.sum(x.astype(jnp.int32), axis=(-2, -1))
+
+
+def chain_transitions(
+    planes: jax.Array,
+    order: jax.Array | None = None,
+    *,
+    include_initial: bool = True,
+    per_column: bool = False,
+) -> jax.Array:
+    """Total transitions programming sections along ``order`` on ONE crossbar.
+
+    planes: bool[S, rows, cols]; order: int[T] (defaults to arange(S)).
+    The crossbar starts pristine (all inactive); if ``include_initial`` the
+    first program from the pristine state is counted (the paper counts it —
+    stride-1 'initially incurs higher costs by programming the first L
+    crossbars').
+
+    Returns int32[] total, or int32[cols] per-column totals if requested.
+    """
+    seq = planes if order is None else planes[order]
+    diffs = jnp.logical_xor(seq[1:], seq[:-1])
+    axes = (0, 1, 2) if not per_column else (0, 1)
+    total = jnp.sum(diffs, axis=axes, dtype=jnp.int32)
+    if include_initial:
+        # per-column keeps the cols axis: reduce rows only
+        total = total + jnp.sum(seq[0], axis=0 if per_column else None, dtype=jnp.int32)
+    return total
+
+
+def consecutive_costs(
+    planes: jax.Array, order: jax.Array | None = None, *, include_initial: bool = True
+) -> jax.Array:
+    """Per-step reprogramming costs along a chain -> int32[T] (or [T-1]).
+
+    Step t is the cost of programming section order[t] over the previous
+    state; step 0 (if included) is programming over the pristine crossbar.
+    These per-step costs are the 'jobs' the thread balancer schedules.
+    """
+    seq = planes if order is None else planes[order]
+    step = jnp.sum(jnp.logical_xor(seq[1:], seq[:-1]), axis=(1, 2), dtype=jnp.int32)
+    if include_initial:
+        first = jnp.sum(seq[0], dtype=jnp.int32)[None]
+        step = jnp.concatenate([first, step])
+    return step
+
+
+def active_fraction_per_column(planes: jax.Array) -> jax.Array:
+    """Fraction of active memristors per bit column -> f32[cols].
+
+    The paper's §IV observation: for bell-shaped weights this tends to 0.5 in
+    the lowest-order column and decays toward 0 for high-order columns.
+    """
+    return jnp.mean(planes.astype(jnp.float32), axis=tuple(range(planes.ndim - 1)))
+
+
+def transition_fraction_per_column(planes: jax.Array, order: jax.Array | None = None) -> jax.Array:
+    """Expected per-column share of chain transitions -> f32[cols]."""
+    seq = planes if order is None else planes[order]
+    diffs = jnp.logical_xor(seq[1:], seq[:-1]).astype(jnp.float32)
+    col = jnp.sum(diffs, axis=(0, 1))
+    return col / jnp.maximum(jnp.sum(col), 1.0)

@@ -1,0 +1,256 @@
+"""Deployment planner: DNN params -> crossbar programming plan + cost report.
+
+This is the integration point that makes the paper's technique a first-class
+framework feature: ``build_deployment`` consumes any pytree of weights (all
+matmul weights of the assigned LM architectures), quantizes and bit-slices
+them, applies Sorted Weight Sectioning, chooses a multi-crossbar schedule,
+prices the reprogramming workload against the unsorted ISAAC/CASCADE-style
+baseline, applies bit stucking, and returns both the metrics and the
+*achieved* (error-injected) weights for accuracy evaluation.
+
+Embedding-style lookup tables are excluded (CIM crossbars compute dot
+products; lookups never map to them — DESIGN.md §4); callers control this
+via ``PlannerConfig.exclude`` name patterns and ``min_size``/``min_ndim``.
+
+Internal invariant: every tensor is handled as a *padded flat vector* of
+length ``S * rows`` together with ``perm_full`` — a permutation of
+``range(S * rows)`` mapping crossbar slot -> source element (source indices
+``>= n`` are zero padding).  All orderings (magnitude sort, beyond-paper TSP
+section reorder) compose into ``perm_full``, and reconstruction is a single
+scatter, so index matching stays exact no matter how sections are shuffled.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice, schedule, stucking, sws
+
+
+@dataclasses.dataclass(frozen=True)
+class CrossbarSpec:
+    """Geometry + encoding of the physical crossbars (paper default 128x10)."""
+
+    rows: int = 128
+    cols: int = 10
+    encoding: str = "sign_magnitude"
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    sws: bool = True
+    schedule: str = "stride1"  # "stride1" | "strideL"
+    crossbars: int = 16  # L physical crossbars programmed in parallel
+    threads: int = 64  # T lockstep programming engines (Fig. 7)
+    p_stuck: float = 1.0  # 1.0 = full reprogramming (no stucking)
+    stuck_cols: int = 1
+    include_initial: bool = True
+    section_order: str = "magnitude"  # "magnitude" | "tsp" (beyond-paper)
+    min_size: int = 4096
+    min_ndim: int = 2
+    exclude: tuple[str, ...] = ("embed", "embedding", "lm_head", "pos_emb")
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TensorReport:
+    name: str
+    shape: tuple[int, ...]
+    n_weights: int
+    n_sections: int
+    transitions_baseline: int  # unsorted order, full reprogramming
+    transitions_sws: int  # SWS order, full reprogramming
+    transitions_final: int  # SWS order + bit stucking at p
+    lockstep_time_unsorted: int
+    lockstep_time_greedy: int
+    lockstep_time_ideal: float
+    quant_mse: float  # ||w - w_hat||^2 / n  (quantization + stucking error)
+
+    @property
+    def sws_speedup(self) -> float:
+        return self.transitions_baseline / max(self.transitions_sws, 1)
+
+    @property
+    def total_speedup(self) -> float:
+        return self.transitions_baseline / max(self.transitions_final, 1)
+
+
+@dataclasses.dataclass
+class DeploymentPlan:
+    spec: CrossbarSpec
+    config: PlannerConfig
+    reports: dict[str, TensorReport]
+    deployed: dict[str, jax.Array]  # name -> achieved weights (w_hat)
+
+    def totals(self) -> dict[str, float]:
+        base = sum(r.transitions_baseline for r in self.reports.values())
+        sws_t = sum(r.transitions_sws for r in self.reports.values())
+        fin = sum(r.transitions_final for r in self.reports.values())
+        lk_u = sum(r.lockstep_time_unsorted for r in self.reports.values())
+        lk_g = sum(r.lockstep_time_greedy for r in self.reports.values())
+        lk_i = sum(r.lockstep_time_ideal for r in self.reports.values())
+        return {
+            "transitions_baseline": base,
+            "transitions_sws": sws_t,
+            "transitions_final": fin,
+            "sws_speedup": base / max(sws_t, 1),
+            "total_speedup": base / max(fin, 1),
+            "lockstep_speedup_unsorted": base / lk_u if lk_u else float("nan"),
+            "lockstep_speedup_greedy": sws_t / lk_g if lk_g else float("nan"),
+            "lockstep_time_ideal": lk_i,
+        }
+
+
+def _sort_key(flat_padded: jax.Array, encoding: str) -> jax.Array:
+    # sign_magnitude stores |w|: sort by magnitude so bit patterns sort too.
+    # offset_binary stores w - min: sort by value for the same property.
+    return jnp.abs(flat_padded) if encoding == "sign_magnitude" else flat_padded
+
+
+def _perm_full(
+    flat_padded: jax.Array, spec: CrossbarSpec, config: PlannerConfig, q_padded: jax.Array
+) -> jax.Array:
+    """Slot -> source-element permutation of length S*rows (see module doc)."""
+    total = flat_padded.shape[0]
+    if not config.sws:
+        return jnp.arange(total, dtype=jnp.int32)
+    perm = jnp.argsort(_sort_key(flat_padded, spec.encoding), stable=True).astype(jnp.int32)
+    if config.section_order == "tsp":
+        planes = bitslice.bitplanes(q_padded[perm].reshape(-1, spec.rows), spec.cols)
+        order = sws.tsp_greedy_order(bitslice.pack_rows(planes))
+        slot = (order[:, None] * spec.rows + jnp.arange(spec.rows, dtype=jnp.int32)).reshape(-1)
+        perm = perm[slot]
+    return perm
+
+
+def analyze_tensor(
+    w: jax.Array,
+    spec: CrossbarSpec,
+    config: PlannerConfig,
+    key: jax.Array,
+    name: str = "w",
+) -> tuple[TensorReport, jax.Array]:
+    """Full paper pipeline for one weight tensor.
+
+    Returns (report, w_hat) where w_hat carries the achieved (quantized +
+    stuck-bit) values in the tensor's logical layout.
+    """
+    flat = jnp.ravel(w).astype(jnp.float32)
+    n = flat.shape[0]
+    pad = (-n) % spec.rows
+    flat_padded = jnp.pad(flat, (0, pad))
+    total = flat_padded.shape[0]
+    s = total // spec.rows
+    l = max(1, min(config.crossbars, s))
+
+    qt = bitslice.quantize(flat, spec.cols, spec.encoding)
+    q_padded = jnp.pad(qt.q, (0, pad))
+    sign_padded = jnp.pad(qt.sign, (0, pad), constant_values=1)
+
+    # --- baseline: unsorted natural order, full reprogramming --------------
+    planes_u = bitslice.bitplanes(q_padded.reshape(s, spec.rows), spec.cols)
+    chains = schedule.make_chains(s, l, config.schedule)
+    trans_base = int(
+        schedule.schedule_transitions(planes_u, chains, include_initial=config.include_initial)
+    )
+    jobs_u = schedule.schedule_job_costs(planes_u, chains, include_initial=config.include_initial)
+    lk_unsorted = int(schedule.lockstep_time(jobs_u, config.threads, sort_jobs=False))
+
+    # --- SWS order ----------------------------------------------------------
+    perm = _perm_full(flat_padded, spec, config, q_padded)
+    planes_s = bitslice.bitplanes(q_padded[perm].reshape(s, spec.rows), spec.cols)
+    trans_sws = int(
+        schedule.schedule_transitions(planes_s, chains, include_initial=config.include_initial)
+    )
+    jobs_s = schedule.schedule_job_costs(planes_s, chains, include_initial=config.include_initial)
+    lk_greedy = int(schedule.lockstep_time(jobs_s, config.threads, sort_jobs=True))
+    lk_ideal = float(jnp.sum(jobs_s)) / config.threads
+
+    # --- bit stucking on the SWS schedule ------------------------------------
+    if config.p_stuck < 1.0:
+        total_fin, achieved = stucking.stuck_schedule(
+            planes_s,
+            chains,
+            config.p_stuck,
+            key,
+            stuck_cols=config.stuck_cols,
+            include_initial=config.include_initial,
+        )
+        trans_final = int(total_fin)
+    else:
+        trans_final = trans_sws
+        achieved = planes_s
+
+    # --- reconstruct achieved weights (exact index matching) ----------------
+    sign_slots = sign_padded[perm].reshape(s, spec.rows)
+    w_hat_slots = bitslice.dequantize_from_planes(achieved, sign_slots, qt.scale, qt.offset)
+    logical = jnp.zeros((total,), dtype=jnp.float32).at[perm].set(w_hat_slots.reshape(-1))
+    w_hat_flat = logical[:n]
+    w_hat = w_hat_flat.reshape(w.shape).astype(w.dtype)
+
+    quant_mse = float(jnp.mean((flat - w_hat_flat) ** 2))
+
+    report = TensorReport(
+        name=name,
+        shape=tuple(w.shape),
+        n_weights=int(n),
+        n_sections=int(s),
+        transitions_baseline=trans_base,
+        transitions_sws=trans_sws,
+        transitions_final=trans_final,
+        lockstep_time_unsorted=lk_unsorted,
+        lockstep_time_greedy=lk_greedy,
+        lockstep_time_ideal=lk_ideal,
+        quant_mse=quant_mse,
+    )
+    return report, w_hat
+
+
+def iter_weights(params: Any, config: PlannerConfig):
+    """Yield (name, tensor) for every crossbar-eligible weight in a pytree."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    pat = re.compile("|".join(config.exclude)) if config.exclude else None
+    for path, leaf in flat:
+        if not hasattr(leaf, "ndim"):
+            continue
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        if leaf.ndim < config.min_ndim or leaf.size < config.min_size:
+            continue
+        if pat is not None and pat.search(name.lower()):
+            continue
+        yield name, leaf
+
+
+def build_deployment(
+    params: Any,
+    spec: CrossbarSpec = CrossbarSpec(),
+    config: PlannerConfig = PlannerConfig(),
+    *,
+    progress: Callable[[str], None] | None = None,
+) -> DeploymentPlan:
+    """Plan crossbar deployment for every eligible weight in ``params``."""
+    key = jax.random.PRNGKey(config.seed)
+    reports: dict[str, TensorReport] = {}
+    deployed: dict[str, jax.Array] = {}
+    for name, w in iter_weights(params, config):
+        key, sub = jax.random.split(key)
+        if progress:
+            progress(name)
+        report, w_hat = analyze_tensor(w, spec, config, sub, name=name)
+        reports[name] = report
+        deployed[name] = w_hat
+    return DeploymentPlan(spec=spec, config=config, reports=reports, deployed=deployed)
+
+
+def deploy_params(params: Any, plan: DeploymentPlan) -> Any:
+    """Return a params pytree with deployed tensors replaced by w_hat."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(plan.deployed.get(name, leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)

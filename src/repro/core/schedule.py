@@ -1,0 +1,134 @@
+"""Multi-crossbar reprogramming schedules and thread balancing (§III.B–C).
+
+Given S sections (in SWS order) and L physical crossbars programmable in
+parallel, a *schedule* assigns each crossbar a chain of sections to walk:
+
+* **stride-L** — crossbar ``i`` programs sections ``i, i+L, i+2L, …``: every
+  step jumps L positions in the sorted list, so consecutive programs differ
+  more (larger magnitude gap -> more bit transitions).
+* **stride-1** — crossbar ``i`` is seeded at offset ``i * ceil(S/L)`` and then
+  walks *consecutive* sections.  Each step reprograms between adjacent sorted
+  sections; only the L seed programs are 'far'.  This is the paper's winning
+  schedule (Fig. 3b, Fig. 6b).
+
+Thread balancing (§III.C, Fig. 4): programming engines run in lockstep rounds
+(one crossbar program per thread per round); a round lasts as long as its
+most expensive job.  The paper's greedy groups *similar-cost* jobs into the
+same round (sort all jobs by cost, chunk into rounds of T), which drives
+``sum_r max(round_r)`` down to ~``sum(costs)/T`` — the ideal T-way speedup.
+An LPT (longest-processing-time) makespan balancer is included for the
+asynchronous-threads interpretation as an ablation.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import cost as cost_lib
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def stride_l_chains(s: int, l: int) -> list[jnp.ndarray]:
+    """Chains for stride-L scheduling: chains[i] = [i, i+L, i+2L, ...]."""
+    return [jnp.arange(i, s, l, dtype=jnp.int32) for i in range(min(l, s))]
+
+
+def stride_1_chains(s: int, l: int) -> list[jnp.ndarray]:
+    """Chains for stride-1 scheduling: L contiguous blocks of the sorted list."""
+    block = math.ceil(s / l)
+    chains = []
+    for i in range(l):
+        lo, hi = i * block, min((i + 1) * block, s)
+        if lo >= hi:
+            break
+        chains.append(jnp.arange(lo, hi, dtype=jnp.int32))
+    return chains
+
+
+def make_chains(s: int, l: int, kind: str) -> list[jnp.ndarray]:
+    if kind == "stride1":
+        return stride_1_chains(s, l)
+    if kind == "strideL":
+        return stride_l_chains(s, l)
+    raise ValueError(f"unknown schedule kind: {kind!r}")
+
+
+def schedule_transitions(
+    planes: jax.Array,
+    chains: list[jnp.ndarray],
+    *,
+    include_initial: bool = True,
+) -> jax.Array:
+    """Total transitions across all crossbars -> int32[] (sum over chains)."""
+    totals = [
+        cost_lib.chain_transitions(planes, c, include_initial=include_initial) for c in chains
+    ]
+    return jnp.sum(jnp.stack(totals))
+
+
+def schedule_job_costs(
+    planes: jax.Array,
+    chains: list[jnp.ndarray],
+    *,
+    include_initial: bool = True,
+) -> jax.Array:
+    """Flat per-job costs (one job = one crossbar reprogram) -> int32[njobs]."""
+    per_chain = [
+        cost_lib.consecutive_costs(planes, c, include_initial=include_initial) for c in chains
+    ]
+    return jnp.concatenate(per_chain)
+
+
+# ---------------------------------------------------------------------------
+# Thread balancing
+# ---------------------------------------------------------------------------
+
+def lockstep_time(job_costs: jax.Array, threads: int, *, sort_jobs: bool) -> jax.Array:
+    """Lockstep-rounds total time: sum over rounds of the round's max cost.
+
+    ``sort_jobs=False`` is the unsorted baseline (jobs in arrival order, each
+    round mixes small and large costs and is bottlenecked by the largest);
+    ``sort_jobs=True`` is the paper's greedy similar-cost grouping.
+    """
+    n = job_costs.shape[0]
+    if sort_jobs:
+        job_costs = jnp.sort(job_costs)[::-1]
+    pad = (-n) % threads
+    padded = jnp.pad(job_costs, (0, pad))
+    rounds = padded.reshape(-1, threads)
+    return jnp.sum(jnp.max(rounds, axis=1))
+
+
+def lockstep_speedup(job_costs: jax.Array, threads: int, *, sort_jobs: bool) -> jax.Array:
+    """Parallel speedup vs programming all jobs sequentially on one engine."""
+    seq = jnp.sum(job_costs)
+    t = lockstep_time(job_costs, threads, sort_jobs=sort_jobs)
+    return seq.astype(jnp.float32) / jnp.maximum(t.astype(jnp.float32), 1.0)
+
+
+def lpt_assignment(job_costs: jax.Array, threads: int) -> tuple[jax.Array, jax.Array]:
+    """Longest-processing-time greedy makespan balancing (async ablation).
+
+    Returns (thread_id[njobs], thread_loads[threads]).  Implemented as a scan:
+    jobs sorted descending, each assigned to the least-loaded thread.
+    """
+    order = jnp.argsort(-job_costs, stable=True)
+
+    def step(loads, j):
+        t = jnp.argmin(loads)
+        return loads.at[t].add(job_costs[j].astype(loads.dtype)), t.astype(jnp.int32)
+
+    loads0 = jnp.zeros((threads,), dtype=jnp.int32)
+    loads, tids_sorted = jax.lax.scan(step, loads0, order)
+    tids = jnp.zeros_like(tids_sorted).at[order].set(tids_sorted)
+    return tids, loads
+
+
+def lpt_makespan(job_costs: jax.Array, threads: int) -> jax.Array:
+    _, loads = lpt_assignment(job_costs, threads)
+    return jnp.max(loads)

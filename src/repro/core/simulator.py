@@ -1,0 +1,113 @@
+"""CIM crossbar forward simulation + model fidelity probes.
+
+``cim_linear`` computes a linear layer the way the analog array does: as a
+sum over bit columns of {0,1}-plane dot products scaled by powers of two
+(sign applied digitally for sign_magnitude; rank-1 offset correction for
+offset_binary).  On TPU this dispatches to the fused Pallas ``cim_matmul``
+kernel (one VMEM-resident activation tile accumulates all bit planes); on CPU
+it uses the pure-jnp reference.  Numerically both equal ``x @ w_hat`` for the
+dequantized planes — the value of the simulation is that *error-injected*
+planes (bit stucking, stuck-at faults) flow through the same path the
+hardware would use.
+
+``logit_kl`` / ``output_mse`` are the accuracy-preservation probes used by
+the benchmarks when a labelled task is unavailable (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice
+from repro.core.planner import CrossbarSpec, DeploymentPlan, PlannerConfig, analyze_tensor
+
+
+def prepare_linear(
+    w: jax.Array, spec: CrossbarSpec = CrossbarSpec()
+) -> dict[str, jax.Array]:
+    """Quantize a [K, N] weight matrix into crossbar operands for cim_linear.
+
+    Sections here are per (row-block of K): the natural, unpermuted layout —
+    this is the *execution* path (what the array computes), independent of the
+    *programming order* optimizations which live in the planner.
+    """
+    if w.ndim != 2:
+        raise ValueError("prepare_linear expects a 2-D weight")
+    qt = bitslice.quantize(w, spec.cols, spec.encoding)
+    q = qt.q.reshape(w.shape)
+    sign = qt.sign.reshape(w.shape)
+    planes = bitslice.bitplanes(q, spec.cols)  # bool[K, N, cols]
+    # signed planes in {-1, 0, 1}: sign folded in so the matmul core is a
+    # plain integer dot product per column (kernels/cim_matmul contract:
+    # splanes is [cols, K, N] with plane 0 = LSB).
+    splanes = jnp.moveaxis(planes.astype(jnp.int8) * sign[..., None], -1, 0)
+    return {
+        "splanes": splanes,
+        "scale": qt.scale,
+        "offset": qt.offset,
+        "encoding": spec.encoding,
+    }
+
+
+def cim_linear(x: jax.Array, operands: dict[str, jax.Array], *, use_kernel: bool = False) -> jax.Array:
+    """y = x @ w_hat computed bit-plane by bit-plane (crossbar dataflow)."""
+    if use_kernel:
+        from repro.kernels.cim_matmul import ops as cim_ops
+
+        y = cim_ops.cim_matmul(x, operands["splanes"], operands["scale"])
+    else:
+        from repro.kernels.cim_matmul import ref as cim_ref
+
+        y = cim_ref.cim_matmul(x, operands["splanes"], operands["scale"])
+    if operands["encoding"] == "offset_binary":
+        # rank-1 digital correction: x @ (Q*scale + offset) = core + sum(x)*offset
+        y = y + jnp.sum(x, axis=-1, keepdims=True) * operands["offset"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Fidelity probes
+# ---------------------------------------------------------------------------
+
+def output_mse(f, params_a, params_b, batch) -> jax.Array:
+    """Mean squared error between model outputs under two parameter sets."""
+    ya, yb = f(params_a, batch), f(params_b, batch)
+    return jnp.mean((ya - yb) ** 2)
+
+
+def logit_kl(f, params_a, params_b, batch) -> jax.Array:
+    """KL(softmax(f_a) || softmax(f_b)) averaged over positions.
+
+    The direct analogue of a 'accuracy within 1%' check when no labelled
+    eval set exists: small logit KL bounds the label-flip probability.
+    """
+    la, lb = f(params_a, batch), f(params_b, batch)
+    pa = jax.nn.log_softmax(la, axis=-1)
+    pb = jax.nn.log_softmax(lb, axis=-1)
+    return jnp.mean(jnp.sum(jnp.exp(pa) * (pa - pb), axis=-1))
+
+
+def top1_agreement(f, params_a, params_b, batch) -> jax.Array:
+    """Fraction of positions where argmax predictions agree (accuracy proxy)."""
+    la, lb = f(params_a, batch), f(params_b, batch)
+    return jnp.mean((jnp.argmax(la, -1) == jnp.argmax(lb, -1)).astype(jnp.float32))
+
+
+def deploy_and_probe(
+    f,
+    params,
+    batch,
+    spec: CrossbarSpec = CrossbarSpec(),
+    config: PlannerConfig = PlannerConfig(),
+) -> tuple[DeploymentPlan, dict[str, float]]:
+    """One-call: plan deployment, swap weights, measure fidelity."""
+    from repro.core.planner import build_deployment, deploy_params
+
+    plan = build_deployment(params, spec, config)
+    params_hat = deploy_params(params, plan)
+    probes = {
+        "output_mse": float(output_mse(f, params, params_hat, batch)),
+        "logit_kl": float(logit_kl(f, params, params_hat, batch)),
+        "top1_agreement": float(top1_agreement(f, params, params_hat, batch)),
+    }
+    return plan, probes

@@ -1,0 +1,128 @@
+"""Bit-stucking-based reprogramming (§IV of the paper).
+
+In bell-shaped weight distributions the lowest-order bit column is
+~Bernoulli(0.5): it is both the *most transition-heavy* column (uncorrelated
+bits flip on every reprogram with probability ~0.5) and the *least important*
+one (smallest power-of-two multiplier).  Bit stucking programs only a random
+fraction ``p`` of the transitional memristors in the lowest-order column(s);
+the remaining memristors keep their stale state, injecting a bounded LSB
+error into the deployed weights.
+
+``stuck_chain`` is the exact physical walk: it carries the crossbar state
+along the programming chain, counts actually-programmed transitions, and
+emits the *achieved* bit planes per section — the planes a model would really
+compute with, used by ``core.simulator`` to price the accuracy impact.
+
+p=1 reproduces full reprogramming (no error); p=0 sticks the column at its
+initial state forever (the paper's Fig. 9 extreme).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("stuck_cols", "include_initial"))
+def stuck_chain(
+    planes: jax.Array,
+    order: jax.Array,
+    p: jax.Array | float,
+    key: jax.Array,
+    *,
+    stuck_cols: int = 1,
+    include_initial: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Walk one crossbar through ``order`` with bit stucking.
+
+    Args:
+      planes: bool[S, rows, cols] ideal section bit planes (plane 0 = LSB).
+      order:  int[T] programming order (indices into S).
+      p:      probability of actually programming a transitional memristor in
+              the stuck columns.
+      key:    PRNG key (one subkey per programming step).
+      stuck_cols: how many lowest-order columns are subject to stucking.
+      include_initial: count the first program from the pristine crossbar.
+
+    Returns:
+      total:    int32[] programmed transitions over the walk.
+      achieved: bool[S, rows, cols] the state the crossbar actually held when
+                each section was resident (scattered back to section index;
+                sections not visited by this chain keep their ideal planes).
+    """
+    s, rows, cols = planes.shape
+    t = order.shape[0]
+    seq = planes[order]
+    keys = jax.random.split(key, t)
+    p = jnp.asarray(p, dtype=jnp.float32)
+
+    def step(state, inp):
+        target, k = inp
+        trans = jnp.logical_xor(state, target)
+        program = trans
+        if stuck_cols > 0:
+            mask = jax.random.bernoulli(k, p, shape=(rows, stuck_cols))
+            stuck_part = jnp.logical_and(trans[:, :stuck_cols], mask)
+            program = jnp.concatenate([stuck_part, trans[:, stuck_cols:]], axis=1)
+        new_state = jnp.where(program, target, state)
+        return new_state, (new_state, jnp.sum(program, dtype=jnp.int32))
+
+    state0 = jnp.zeros((rows, cols), dtype=jnp.bool_)
+    _, (states, counts) = jax.lax.scan(step, state0, (seq, keys))
+    total = jnp.sum(counts) if include_initial else jnp.sum(counts[1:])
+    achieved = planes.at[order].set(states)
+    return total, achieved
+
+
+def stuck_schedule(
+    planes: jax.Array,
+    chains: list[jax.Array],
+    p: jax.Array | float,
+    key: jax.Array,
+    *,
+    stuck_cols: int = 1,
+    include_initial: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Run ``stuck_chain`` over every crossbar chain of a schedule (vmapped).
+
+    Chains are padded to equal length by repeating their last section —
+    reprogramming a crossbar with its current contents costs exactly zero
+    transitions and leaves the achieved state unchanged, so the padding is
+    free and exact.
+
+    Returns (total int32[], achieved bool[S, rows, cols]).
+    """
+    max_len = max(int(c.shape[0]) for c in chains)
+    padded = jnp.stack(
+        [jnp.concatenate([c, jnp.full((max_len - c.shape[0],), c[-1], dtype=c.dtype)]) for c in chains]
+    )
+    keys = jax.random.split(key, len(chains))
+
+    totals, achieved_all = jax.vmap(
+        lambda o, k: stuck_chain(
+            planes, o, p, k, stuck_cols=stuck_cols, include_initial=include_initial
+        )
+    )(padded, keys)
+
+    # Each section belongs to exactly one chain in both stride schedules, so
+    # combining per-chain achieved planes is a select on 'was visited here'.
+    achieved = planes
+    for i, c in enumerate(chains):
+        achieved = achieved.at[c].set(achieved_all[i][c])
+    return jnp.sum(totals), achieved
+
+
+def expected_saving_fraction(
+    planes: jax.Array, order: jax.Array, p: float, *, stuck_cols: int = 1
+) -> jax.Array:
+    """Analytic expected fraction of chain transitions avoided by stucking.
+
+    savings ~= (1 - p) * (transitions in stuck cols) / (total transitions).
+    Useful as a napkin check against the measured ``stuck_chain`` totals.
+    """
+    seq = planes[order]
+    diffs = jnp.logical_xor(seq[1:], seq[:-1]).astype(jnp.float32)
+    col = jnp.sum(diffs, axis=(0, 1))
+    total = jnp.maximum(jnp.sum(col), 1.0)
+    return (1.0 - p) * jnp.sum(col[:stuck_cols]) / total

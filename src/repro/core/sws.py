@@ -1,0 +1,95 @@
+"""Sorted Weight Sectioning (SWS) for crossbar reprogramming (§III of the paper).
+
+Weights are sorted by magnitude *once, offline*, then partitioned into
+crossbar-sized sections.  Consecutive sections in the sorted list hold weights
+of near-identical magnitude, hence near-identical high-order bit patterns, so
+programming them in order minimizes memristor state transitions.
+
+Inference correctness is preserved by *index matching*: we keep the sort
+permutation and its inverse so the deployed (permuted) flat weight vector can
+be scattered back into the logical weight layout.  The paper notes this
+requires an input buffer in hardware; in simulation it is an exact gather.
+
+Beyond-paper (§7 of DESIGN.md): ``tsp_greedy_order`` replaces the magnitude
+sort's *section order* with a nearest-neighbour walk on actual bit-pattern
+Hamming distance — magnitude sorting is a proxy for this objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bitslice, cost
+
+
+def sws_permutation(flat: jax.Array, *, descending: bool = False) -> jax.Array:
+    """Sort permutation by |w| (ascending by default: small -> large).
+
+    The direction does not change total chain cost (it reverses the chain);
+    ascending matches the paper's Fig. 2 narrative of gradual small-to-large
+    transitions.
+    """
+    key = jnp.abs(flat)
+    if descending:
+        key = -key
+    return jnp.argsort(key, stable=True)
+
+
+def inverse_permutation(perm: jax.Array) -> jax.Array:
+    inv = jnp.zeros_like(perm)
+    return inv.at[perm].set(jnp.arange(perm.shape[0], dtype=perm.dtype))
+
+
+def sorted_sections(
+    flat: jax.Array, rows: int, *, descending: bool = False
+) -> tuple[jax.Array, jax.Array, int]:
+    """Sort + section: returns (sections[S, rows], perm[n], n)."""
+    perm = sws_permutation(flat, descending=descending)
+    sections, n = bitslice.section(flat[perm], rows)
+    return sections, perm, n
+
+
+def restore_flat(sections: jax.Array, perm: jax.Array, n: int) -> jax.Array:
+    """Undo sort + section: sections[S, rows] -> flat[n] in logical order."""
+    sorted_flat = bitslice.unsection(sections, n)
+    return sorted_flat[inverse_permutation(perm)]
+
+
+def tsp_greedy_order(packed_planes: jax.Array, *, start: int = 0) -> jax.Array:
+    """Beyond-paper: nearest-neighbour section order on true Hamming distance.
+
+    packed_planes: uint8[S, words, cols] (from ``bitslice.pack_rows``).
+    Returns an int32[S] visiting order.  O(S^2) distance evaluations done as a
+    scan with a masked argmin; intended for per-tensor section counts up to a
+    few thousand (typical LM matrices at rows=128).
+    """
+    s = packed_planes.shape[0]
+    flat = packed_planes.reshape(s, -1)
+
+    def dist_from(i):
+        x = jax.lax.population_count(jnp.bitwise_xor(flat, flat[i][None, :]))
+        return jnp.sum(x.astype(jnp.int32), axis=-1)
+
+    def step(carry, _):
+        current, visited = carry
+        d = dist_from(current)
+        d = jnp.where(visited, jnp.iinfo(jnp.int32).max, d)
+        nxt = jnp.argmin(d).astype(jnp.int32)
+        return (nxt, visited.at[nxt].set(True)), nxt
+
+    visited0 = jnp.zeros((s,), dtype=jnp.bool_).at[start].set(True)
+    (_, _), rest = jax.lax.scan(step, (jnp.int32(start), visited0), None, length=s - 1)
+    return jnp.concatenate([jnp.array([start], dtype=jnp.int32), rest])
+
+
+def section_norm_order(sections: jax.Array, *, descending: bool = False) -> jax.Array:
+    """Order *pre-formed* sections by mean |w| (scheduling-only SWS variant).
+
+    Used when the weight layout cannot be permuted element-wise (no index
+    matching hardware): sections keep their natural membership and only the
+    programming order is sorted.  Weaker than full SWS; provided for ablation.
+    """
+    key = jnp.mean(jnp.abs(sections), axis=-1)
+    if descending:
+        key = -key
+    return jnp.argsort(key, stable=True)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  cim_matmul      — fused bit-sliced (crossbar) matmul: the CIM execution path
+  hamming         — XOR + popcount transition counting (Eq. 1 at scale)
+  bitslice        — fused quantize + bit-plane extraction
+  flash_attention — blockwise attention for the 32k-prefill serving path
+
+Each kernel directory has: kernel.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit'd public wrapper with CPU-interpret/TPU dispatch), ref.py (pure
+jnp oracle).  TPU is the target; on this CPU-only container every kernel is
+validated with interpret=True against its oracle (see tests/test_kernels.py).
+"""

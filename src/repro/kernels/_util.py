@@ -1,0 +1,44 @@
+"""Shared helpers for Pallas kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def pad_axis_to(x: jax.Array, axis: int, size: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to ``size`` (no-op if already there)."""
+    cur = x.shape[axis]
+    if cur == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, size - cur)
+    return jnp.pad(x, pads)
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def default_interpret(interpret: bool | None) -> bool:
+    """Kernels run compiled on TPU, interpreted (Python) elsewhere."""
+    return (not on_tpu()) if interpret is None else interpret
+
+
+def popcount_i32(x: jax.Array) -> jax.Array:
+    """SWAR popcount for int32 holding byte values in [0, 255].
+
+    Written with shifts/masks only so it lowers on both Mosaic (TPU) and the
+    interpreter — ``lax.population_count`` support varies by backend/dtype.
+    """
+    x = x - ((x >> 1) & 0x55555555)
+    x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+    x = (x + (x >> 4)) & 0x0F0F0F0F
+    return x & 0xFF

@@ -1,0 +1,34 @@
+"""Public jit'd wrapper for the bitslice kernel (pads, dispatches)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._util import default_interpret, pad_axis_to, round_up
+from repro.kernels.bitslice.kernel import bitslice_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("cols", "bk", "bn", "interpret"))
+def bitslice_planes(
+    w: jax.Array,
+    inv_scale: jax.Array | float,
+    cols: int,
+    *,
+    bk: int = 256,
+    bn: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused quantize + slice: f32[K, N] -> int8[cols, K, N] signed planes."""
+    if w.ndim != 2:
+        raise ValueError("bitslice_planes expects a 2-D weight")
+    k, n = w.shape
+    interp = default_interpret(interpret)
+    bk_ = min(bk, round_up(k, 8))
+    bn_ = min(bn, round_up(n, 128))
+    wp = pad_axis_to(pad_axis_to(w, 0, round_up(k, bk_)), 1, round_up(n, bn_))
+    out = bitslice_kernel(
+        wp, jnp.asarray(inv_scale, jnp.float32), cols=cols, bk=bk_, bn=bn_, interpret=interp
+    )
+    return out[:, :k, :n]

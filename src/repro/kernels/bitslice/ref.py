@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for fused quantize + bit-plane extraction.
+
+Contract (shared with kernel.py / ops.py):
+  w:         f32 [K, N] weights
+  inv_scale: f32 scalar, 1 / quantization scale
+  cols:      bitwidth
+
+  q      = clip(round(|w| * inv_scale), 0, 2**cols - 1)
+  out[b] = ((q >> b) & 1) * sign(w)     (int8 [cols, K, N]; plane 0 = LSB)
+
+This produces exactly the ``splanes`` operand of the CIM matmul kernel for
+sign_magnitude encoding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitslice_planes(w: jax.Array, inv_scale: jax.Array, cols: int) -> jax.Array:
+    levels = 2**cols - 1
+    q = jnp.clip(jnp.round(jnp.abs(w.astype(jnp.float32)) * inv_scale), 0, levels)
+    q = q.astype(jnp.int32)
+    sign = jnp.where(w < 0, -1, 1).astype(jnp.int32)
+    shifts = jnp.arange(cols, dtype=jnp.int32).reshape(cols, *([1] * w.ndim))
+    planes = (q[None] >> shifts) & 1
+    return (planes * sign[None]).astype(jnp.int8)

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel for the bit-sliced CIM matmul.
+
+TPU co-design (DESIGN.md §2): a naive bit-sliced matmul issues one matmul
+per bit column and re-reads the activation tile ``cols`` times from HBM.
+This kernel keeps the activation tile resident in VMEM across all planes and
+offers two execution modes:
+
+  * ``fused_dequant`` (default, TPU-optimal): reconstruct the weight tile in
+    VMEM with a VPU weighted-sum over planes (w = sum_b 2^b * P_b), then one
+    MXU matmul per (bm, bn, bk) tile.  MXU work equals a dense matmul; the
+    bit-plane storage cost is paid only in HBM->VMEM bytes.
+  * ``planes`` (faithful crossbar dataflow): one MXU matmul per plane with
+    power-of-two scaling on the partial sums — mirrors how the analog array
+    accumulates per-column dot products, useful for studying per-column
+    error injection at matmul time.
+
+Grid: (M/bm, N/bn, K/bk), K innermost so the f32 accumulator tile lives in a
+VMEM scratch across the K loop.  Block shapes default to MXU-aligned
+(128, 128) with bk=128; splanes blocks are (cols, bk, bn).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._util import cdiv
+
+
+def _kernel(x_ref, p_ref, o_ref, acc_ref, *, cols: int, n_k: int, mode: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)  # (bm, bk)
+    if mode == "fused_dequant":
+        # VPU: reconstruct the quantized weight tile, then a single MXU dot.
+        w = jnp.zeros(p_ref.shape[1:], dtype=jnp.float32)  # (bk, bn)
+        for b in range(cols):
+            w = w + (2.0**b) * p_ref[b, :, :].astype(jnp.float32)
+        acc_ref[...] += jax.lax.dot(x, w, preferred_element_type=jnp.float32)
+    elif mode == "planes":
+        # Faithful per-column accumulation: one MXU dot per bit plane.
+        partial = jnp.zeros(acc_ref.shape, dtype=jnp.float32)
+        for b in range(cols):
+            plane = p_ref[b, :, :].astype(jnp.float32)
+            partial += (2.0**b) * jax.lax.dot(x, plane, preferred_element_type=jnp.float32)
+        acc_ref[...] += partial
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "mode", "interpret")
+)
+def cim_matmul_kernel(
+    x: jax.Array,
+    splanes: jax.Array,
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    mode: str = "fused_dequant",
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw kernel entry: shapes must already be padded to block multiples.
+
+    x: f32[M, K]; splanes: int8[cols, K, N] -> f32[M, N] (unscaled).
+    """
+    m, k = x.shape
+    cols, k2, n = splanes.shape
+    assert k == k2, (k, k2)
+    n_k = cdiv(k, bk)
+    grid = (cdiv(m, bm), cdiv(n, bn), n_k)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, cols=cols, n_k=n_k, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((cols, bk, bn), lambda i, j, kk: (0, kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, splanes)

@@ -1,0 +1,44 @@
+"""Public jit'd wrapper for the CIM matmul kernel (pads, dispatches, scales)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._util import default_interpret, pad_axis_to, round_up
+from repro.kernels.cim_matmul.kernel import cim_matmul_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk", "interpret"))
+def cim_matmul(
+    x: jax.Array,
+    splanes: jax.Array,
+    scale: jax.Array | float = 1.0,
+    *,
+    mode: str = "fused_dequant",
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """y = scale * sum_b 2^b * (x @ splanes[b]) — see ref.py for the contract.
+
+    Accepts arbitrary (M, K, N); pads to MXU-aligned block multiples and
+    slices the result back.  ``interpret=None`` auto-selects: compiled on
+    TPU, interpreted elsewhere (this container).
+    """
+    m, k = x.shape
+    cols, k2, n = splanes.shape
+    if k != k2:
+        raise ValueError(f"K mismatch: x has {k}, splanes has {k2}")
+    interp = default_interpret(interpret)
+
+    bm_ = min(bm, round_up(m, 8))
+    bn_ = min(bn, round_up(n, 128))
+    bk_ = min(bk, round_up(k, 128))
+    xp = pad_axis_to(pad_axis_to(x, 0, round_up(m, bm_)), 1, round_up(k, bk_))
+    pp = pad_axis_to(pad_axis_to(splanes, 1, round_up(k, bk_)), 2, round_up(n, bn_))
+
+    y = cim_matmul_kernel(xp, pp, bm=bm_, bn=bn_, bk=bk_, mode=mode, interpret=interp)
+    return y[:m, :n] * jnp.asarray(scale, dtype=jnp.float32)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the bit-sliced CIM matmul.
+
+Contract (shared with kernel.py / ops.py):
+  x:       f32/bf16 [M, K] activations
+  splanes: int8 [cols, K, N] signed bit planes, plane 0 = LSB; values in
+           {-1, 0, +1} (sign folded into the plane for sign_magnitude, all
+           non-negative for offset_binary)
+  scale:   f32 scalar dequantization scale
+
+  y[m, n] = scale * sum_b 2**b * sum_k x[m, k] * splanes[b, k, n]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cim_matmul(x: jax.Array, splanes: jax.Array, scale: jax.Array) -> jax.Array:
+    cols = splanes.shape[0]
+    pow2 = (2.0 ** jnp.arange(cols, dtype=jnp.float32))
+    y = jnp.einsum(
+        "mk,bkn,b->mn",
+        x.astype(jnp.float32),
+        splanes.astype(jnp.float32),
+        pow2,
+        precision=jax.lax.Precision.HIGHEST,
+    )
+    return y * scale

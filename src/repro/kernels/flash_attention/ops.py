@@ -1,0 +1,42 @@
+"""Public jit'd wrapper for the flash-attention kernel (pads, dispatches)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels._util import default_interpret, pad_axis_to, round_up
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(
+    jax.jit, static_argnames=("kind", "window", "q_offset", "bq", "bk", "interpret")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kind: str = "causal",
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """See ref.py for the contract.  Arbitrary Sq/Sk; pads + slices back."""
+    b, hq, sq, d = q.shape
+    sk = k.shape[2]
+    interp = default_interpret(interpret)
+    bq_ = min(bq, round_up(sq, 8))
+    bk_ = min(bk, round_up(sk, 8))
+    qp = pad_axis_to(q, 2, round_up(sq, bq_))
+    kp = pad_axis_to(k, 2, round_up(sk, bk_))
+    vp = pad_axis_to(v, 2, round_up(sk, bk_))
+    out = flash_attention_kernel(
+        qp, kp, vp,
+        kind=kind, window=window, q_offset=q_offset,
+        bq=bq_, bk=bk_, sk_valid=sk, interpret=interp,
+    )
+    return out[:, :, :sq]

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for flash attention.
+
+Contract (shared with kernel.py / ops.py):
+  q: f32/bf16 [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] with Hq % Hkv == 0
+  kind: "causal" | "bidir" | "swa" (causal sliding window of `window`)
+  q_offset: absolute position of q[0] (continuation chunks / decode)
+
+  out[b,h,i] = sum_j softmax_j(q_i . k_j / sqrt(D) + mask) v_j
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    kind: str = "causal",
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    scores = jnp.einsum(
+        "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (d**-0.5)
+    qp = q_offset + jnp.arange(sq)[:, None]
+    kp = jnp.arange(sk)[None, :]
+    if kind == "bidir":
+        mask = jnp.ones((sq, sk), jnp.bool_)
+    else:
+        mask = kp <= qp
+        if kind == "swa":
+            assert window is not None
+            mask = jnp.logical_and(mask, kp > qp - window)
+    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)

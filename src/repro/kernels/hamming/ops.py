@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the Hamming kernel (pads, dispatches)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._util import default_interpret, pad_axis_to, round_up
+from repro.kernels.hamming.kernel import hamming_pairs_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def hamming_pairs(
+    a: jax.Array, b: jax.Array, *, bt: int = 256, interpret: bool | None = None
+) -> jax.Array:
+    """Per-pair transition counts: popcount(a[t] ^ b[t]) -> int32[T].
+
+    Zero-padding pairs is free (popcount(0^0) = 0) so arbitrary T is fine.
+    """
+    if a.shape != b.shape:
+        raise ValueError(f"shape mismatch: {a.shape} vs {b.shape}")
+    t = a.shape[0]
+    interp = default_interpret(interpret)
+    bt_ = min(bt, round_up(max(t, 1), 8))
+    tp = round_up(max(t, 1), bt_)
+    ap = pad_axis_to(a, 0, tp)
+    bp = pad_axis_to(b, 0, tp)
+    out = hamming_pairs_kernel(ap, bp, bt=bt_, interpret=interp)
+    return out[:t]
+
+
+def chain_costs(packed_states: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Consecutive reprogram costs along a chain of packed states -> int32[S-1]."""
+    return hamming_pairs(packed_states[:-1], packed_states[1:], interpret=interpret)

@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512 " + os.environ.get("XLA_FLAGS", "")
+# ^ the two lines above MUST precede any jax import/init: jax locks the host
+#   device count on first initialization.  Set here (and ONLY here) so smoke
+#   tests and benchmarks keep seeing 1 device.
+#
+# Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+#
+# For each cell this driver builds ShapeDtypeStruct stand-ins for every input
+# (params via eval_shape — zero allocation), assigns shardings from the
+# logical rules, lowers the step function under the production mesh, compiles
+# it, and records memory_analysis / cost_analysis / the collective schedule
+# parsed from the partitioned HLO.  Results land in experiments/dryrun/*.json
+# and feed EXPERIMENTS.md §Dry-run and §Roofline.
+#
+# Usage:
+#   python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+#   python -m repro.launch.dryrun --all [--mesh both] [--out experiments/dryrun]
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_arch, list_archs
+from repro.configs.base import ArchConfig, ShapeSpec, shape_applicable
+from repro.launch import hlo_analysis, hlo_cost
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import make_prefill_step, make_serve_step, make_train_step
+from repro.models import api
+from repro.optim import AdamWConfig, adamw_init
+from repro.parallel import sharding as shard_lib
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no device allocation)
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ArchConfig):
+    key_spec = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: api.init(k, cfg), key_spec)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec):
+    b, s = shape.global_batch, shape.seq_len
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.encdec:
+        out["src_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.float32)
+    elif cfg.stub_prefix_len:
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.stub_prefix_len, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len, src_len=shape.seq_len)
+    )
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec):
+    """All lowering inputs for the cell's step function, as SDS pytrees."""
+    params = param_specs(cfg)
+    if shape.kind == "train":
+        opt = jax.eval_shape(adamw_init, params)
+        return {"params": params, "opt_state": opt, "batch": batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params, "batch": batch_specs(cfg, shape)}
+    # decode
+    return {
+        "params": params,
+        "cache": cache_specs(cfg, shape),
+        "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sharding assignment
+# ---------------------------------------------------------------------------
+
+def shardings_for(cfg: ArchConfig, shape: ShapeSpec, mesh, specs, *, fsdp: bool = False):
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    ns = lambda spec: NamedSharding(mesh, spec)
+    p_sh = shard_lib.param_shardings(specs["params"], mesh, fsdp=fsdp)
+
+    def batch_sh(bspecs):
+        return jax.tree.map(
+            lambda l: ns(shard_lib.data_spec(mesh, l.shape[0], l.ndim)), bspecs
+        )
+
+    if shape.kind == "train":
+        opt_sh = {
+            "m": p_sh, "v": p_sh,
+            "count": ns(P()),
+        }
+        return {"params": p_sh, "opt_state": opt_sh, "batch": batch_sh(specs["batch"])}
+    if shape.kind == "prefill":
+        return {"params": p_sh, "batch": batch_sh(specs["batch"])}
+    cache_sh = jax.tree.map(
+        lambda l: ns(shard_lib.cache_pspec(mesh, tuple(l.shape), axis_sizes)), specs["cache"]
+    )
+    return {
+        "params": p_sh,
+        "cache": cache_sh,
+        "token": ns(shard_lib.data_spec(mesh, shape.global_batch, 2)),
+        "pos": ns(P()),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (roofline denominator)
+# ---------------------------------------------------------------------------
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec, n_active: int, chips: int) -> float:
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    per_token = 6 * n_active if shape.kind == "train" else 2 * n_active
+    return per_token * tokens / chips  # per-chip share
+
+
+def active_params(cfg: ArchConfig) -> int:
+    specs = param_specs(cfg)
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(specs))
+    if cfg.moe is None:
+        return total
+    flat, _ = jax.tree_util.tree_flatten_with_path(specs)
+    routed = 0
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", "")) for k in path]
+        if any(n in ("wi_gate", "wi_up") for n in names) and leaf.ndim == 4:
+            routed += int(np.prod(leaf.shape))
+        if "wo" in names and leaf.ndim == 4:
+            routed += int(np.prod(leaf.shape))
+    # padded expert rows are dead weights: active = top_k real experts
+    return total - routed + int(routed * cfg.moe.top_k / cfg.moe.n_alloc)
+
+
+# ---------------------------------------------------------------------------
+# Per-cell dry run
+# ---------------------------------------------------------------------------
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    mesh_kind: str,
+    *,
+    remat: str = "full",
+    fsdp: bool = False,
+    swa_banded: bool = False,
+    moe_sharded: bool = False,
+    out_dir: Path | None = None,
+    variant: str = "",
+) -> dict:
+    from repro.models.attention import set_attention_impl
+    from repro.models.moe import set_moe_distribution
+
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    result: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "remat": remat, "fsdp": fsdp, "variant": variant,
+        "swa_banded": swa_banded, "moe_sharded": moe_sharded,
+    }
+    if not ok:
+        result.update(status="skipped", reason=why)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = int(np.prod(mesh.devices.shape))
+    specs = input_specs(cfg, shape)
+    shardings = shardings_for(cfg, shape, mesh, specs, fsdp=fsdp)
+
+    set_attention_impl(swa_banded=swa_banded)
+    set_moe_distribution(mesh if moe_sharded else None)
+
+    t0 = time.time()
+    try:
+        with mesh:
+            if shape.kind == "train":
+                step = make_train_step(cfg, AdamWConfig(), remat=remat)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(shardings["params"], shardings["opt_state"], shardings["batch"]),
+                    out_shardings=(
+                        shardings["params"],
+                        shardings["opt_state"],
+                        None,
+                    ),
+                )
+                lowered = jitted.lower(specs["params"], specs["opt_state"], specs["batch"])
+            elif shape.kind == "prefill":
+                step = make_prefill_step(cfg)
+                jitted = jax.jit(
+                    step, in_shardings=(shardings["params"], shardings["batch"])
+                )
+                lowered = jitted.lower(specs["params"], specs["batch"])
+            else:
+                step = make_serve_step(cfg)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(
+                        shardings["params"], shardings["cache"],
+                        shardings["token"], shardings["pos"],
+                    ),
+                    out_shardings=(None, shardings["cache"]),
+                )
+                lowered = jitted.lower(
+                    specs["params"], specs["cache"], specs["token"], specs["pos"]
+                )
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+    except Exception as e:  # a failing cell is a bug to fix, but keep sweeping
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      trace=traceback.format_exc()[-4000:])
+        return result
+    finally:
+        set_attention_impl(swa_banded=False)
+        set_moe_distribution(None)
+
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_d = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+        }
+    except Exception:
+        mem_d = {}
+
+    hlo = compiled.as_text()
+    coll = hlo_analysis.collective_bytes(hlo)
+    # trip-count-aware re-analysis: HloCostAnalysis counts each while body
+    # once, undercounting scan-over-layers models by ~n_layers.  hlo_cost
+    # re-derives per-device FLOPs/bytes/wire with call-graph multiplicities
+    # (validated against analytic 6ND in tests/test_hlo_cost.py).
+    hc = hlo_cost.analyze(hlo)
+
+    n_active = active_params(cfg)
+    mf = model_flops(cfg, shape, n_active, chips)
+    roof = hlo_analysis.Roofline(
+        flops=hc.flops,
+        hbm_bytes=hc.bytes_accessed,
+        wire_bytes=hc.wire_bytes,
+        model_flops=mf,
+    )
+
+    result.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        n_active_params=n_active,
+        memory_analysis=mem_d,
+        collectives={
+            "count": hc.collective_counts,  # trip-count-weighted
+            "wire_bytes": hc.collective_wire,
+            "static_count": coll.by_kind_count,  # one-pass HLO text counts
+        },
+        hlo_structure={"n_while": hc.n_while, "max_trip": hc.max_trip},
+        cost_analysis_raw={k: cost[k] for k in sorted(cost) if isinstance(cost[k], (int, float))},
+        roofline=roof.to_dict(),
+    )
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        tag = f"{arch}_{shape_name}_{mesh_kind}" + (f"_{variant}" if variant else "")
+        (out_dir / f"{tag}.json").write_text(json.dumps(result, indent=1))
+    return result
+
+
+def iter_cells(mesh_kinds: list[str]):
+    for arch in list_archs():
+        cfg = get_arch(arch)
+        for shape_name in SHAPES:
+            for mk in mesh_kinds:
+                yield arch, shape_name, mk
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--remat", default="full", choices=["none", "full", "dots"])
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--swa-banded", action="store_true")
+    ap.add_argument("--moe-sharded", action="store_true")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out)
+    mesh_kinds = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        cells = list(iter_cells(mesh_kinds))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all required"
+        cells = [(args.arch, args.shape, mk) for mk in mesh_kinds]
+
+    n_ok = n_skip = n_err = 0
+    for arch, shape_name, mk in cells:
+        r = run_cell(
+            arch, shape_name, mk,
+            remat=args.remat, fsdp=args.fsdp,
+            swa_banded=args.swa_banded, moe_sharded=args.moe_sharded,
+            out_dir=out_dir, variant=args.variant,
+        )
+        if r["status"] == "ok":
+            n_ok += 1
+            roof = r["roofline"]
+            print(
+                f"OK    {arch:24s} {shape_name:12s} {mk:6s} "
+                f"compile={r['compile_s']:.0f}s flops={roof['flops']:.3g} "
+                f"bytes={roof['hbm_bytes']:.3g} wire={roof['wire_bytes']:.3g} "
+                f"bottleneck={roof['bottleneck']}",
+                flush=True,
+            )
+        elif r["status"] == "skipped":
+            n_skip += 1
+            print(f"SKIP  {arch:24s} {shape_name:12s} {mk:6s} {r['reason']}", flush=True)
+        else:
+            n_err += 1
+            print(f"ERROR {arch:24s} {shape_name:12s} {mk:6s} {r['error']}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

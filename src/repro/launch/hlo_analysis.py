@@ -1,0 +1,180 @@
+"""Post-GSPMD HLO analysis: collective bytes + roofline terms.
+
+``collective_bytes(hlo_text)`` parses the compiled (partitioned) HLO and
+prices every collective op.  Result shapes in the partitioned module are
+*per-device*; wire bytes use the standard ring-algorithm factors with the
+replica-group size g parsed per op:
+
+    all-reduce          2 * R * (g-1)/g      (reduce-scatter + all-gather)
+    all-gather          R * (g-1)/g          (R = gathered output)
+    reduce-scatter      R * (g-1)            (R = scattered output; input R*g)
+    all-to-all          R * (g-1)/g
+    collective-permute  R
+
+Roofline terms (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s/link ICI.  ``cost_analysis()`` of a partitioned module reports
+per-device FLOPs/bytes, so terms are per-chip directly; this equals the
+brief's global formulation (global = per-chip x chips, divided by chips).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+PEAK_FLOPS = 197e12  # bf16 FLOP/s per chip
+HBM_BW = 819e9  # bytes/s per chip
+LINK_BW = 50e9  # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,\s]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        # iota format [n_groups, group_size]
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m and m.group(1).strip():
+        return len(m.group(1).split(","))
+    return 2  # conservative default
+
+
+@dataclasses.dataclass
+class CollectiveReport:
+    by_kind_bytes: dict[str, int]
+    by_kind_wire: dict[str, float]
+    by_kind_count: dict[str, int]
+
+    @property
+    def total_wire(self) -> float:
+        return sum(self.by_kind_wire.values())
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.by_kind_bytes.values())
+
+
+def collective_bytes(hlo_text: str) -> CollectiveReport:
+    by_bytes: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    by_wire: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    by_count: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, rhs = s.split("=", 1)
+        rhs = rhs.strip()
+        m = re.match(r"((?:\([^)]*\))|(?:[\w\[\],]+))\s+([\w-]+)", rhs)
+        if not m:
+            continue
+        result_type, opname = m.group(1), m.group(2)
+        base = opname.removesuffix("-start")
+        if base not in _COLLECTIVES or opname.endswith("-done"):
+            continue
+        r = _shape_bytes(result_type)
+        g = _group_size(s)
+        if g <= 1:
+            continue
+        if base == "all-reduce":
+            wire = 2.0 * r * (g - 1) / g
+        elif base == "all-gather":
+            wire = r * (g - 1) / g
+        elif base == "reduce-scatter":
+            wire = float(r) * (g - 1)
+        elif base == "all-to-all":
+            wire = r * (g - 1) / g
+        else:  # collective-permute
+            wire = float(r)
+        by_bytes[base] += r
+        by_wire[base] += wire
+        by_count[base] += 1
+    return CollectiveReport(by_bytes, by_wire, by_count)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float  # per-device HLO flops
+    hbm_bytes: float  # per-device bytes accessed
+    wire_bytes: float  # per-device collective wire bytes
+    model_flops: Optional[float] = None  # 6ND / 2ND analytic
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.wire_bytes / LINK_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if self.model_flops is None or self.flops == 0:
+            return None
+        return self.model_flops / self.flops
+
+    @property
+    def roofline_fraction(self) -> Optional[float]:
+        """Fraction of chip peak achieved at the roofline step time, counting
+        only useful (analytic model) FLOPs — the §Perf score."""
+        if self.model_flops is None or self.step_time_s == 0:
+            return None
+        return (self.model_flops / self.step_time_s) / PEAK_FLOPS
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "wire_bytes": self.wire_bytes,
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "step_time_s": self.step_time_s,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }

@@ -1,0 +1,378 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` (HloCostAnalysis) counts each ``while`` body
+ONCE, so any scan-over-layers model under-reports FLOPs/bytes by ~n_layers.
+This analyzer re-derives per-device cost from the partitioned HLO text with
+call-graph multiplicities:
+
+  * while bodies/conditions weighted by ``known_trip_count`` from
+    backend_config (present for all lax.scan loops);
+  * fusion computations: FLOPs counted inside, bytes charged at the fusion
+    call site (operands + result — XLA's own bytes-accessed model);
+  * dot FLOPs = 2 * prod(result dims) * prod(lhs contracting dims);
+  * bytes = operands + result for every non-free top-level op
+    (parameter/constant/gte/tuple/bitcast are free);
+  * collectives priced with ring factors and replica-group size, weighted by
+    multiplicity (a collective inside the layer loop fires every layer).
+
+Validated against analytic 6ND/8ND expectations in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "token", "partition-id", "replica-id", "iota",
+}
+
+_CONTROL_OPS = {"while", "conditional", "call", "fusion", "async-start", "async-done"}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*((?:\([^)]*\))|(?:[\w\[\],{}\s]*?\S))\s+([\w\-]+)\(")
+_PARAM_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\([^)]*\))|(?:[\w\[\],{}/\* ]+?))(?:,|\)\s*->)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,\s]*?)\}")
+_REF_RES = {
+    "body": re.compile(r"body=%?([\w\.\-]+)"),
+    "condition": re.compile(r"condition=%?([\w\.\-]+)"),
+    "calls": re.compile(r"calls=%?([\w\.\-]+)"),
+    "to_apply": re.compile(r"to_apply=%?([\w\.\-]+)"),
+}
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    elems = 0
+    byts = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dtype]
+    return elems, byts
+
+
+def _dims_of(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    instrs: list
+    symtab: dict  # name -> type_str
+    is_entry: bool = False
+
+
+def _parse_computations(hlo: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    for raw in hlo.splitlines():
+        if raw and not raw[0].isspace() and "{" in raw and "(" in raw and "->" in raw:
+            m = _COMP_HDR.match(raw)
+            if m:
+                cur = _Comp(m.group(2), [], {}, is_entry=bool(m.group(1)))
+                comps[cur.name] = cur
+                hdr = raw[raw.index("(") :]
+                for pname, ptype in _PARAM_RE.findall(hdr):
+                    cur.symtab[pname] = ptype
+                continue
+        if cur is None:
+            continue
+        if raw.startswith("}"):
+            cur = None
+            continue
+        m = _INSTR_RE.match(raw)
+        if m:
+            name, type_str, op = m.group(1), m.group(2), m.group(3)
+            cur.symtab[name] = type_str
+            cur.instrs.append(_Instr(name, type_str, op, raw))
+    return comps
+
+
+def _multiplicities(comps: dict[str, _Comp]) -> tuple[dict[str, float], set[str]]:
+    """Comp name -> times executed; plus the set of fusion-internal comps."""
+    entry = next((c.name for c in comps.values() if c.is_entry), None)
+    mult: dict[str, float] = defaultdict(float)
+    fusion_internal: set[str] = set()
+    if entry is None:
+        return mult, fusion_internal
+    stack = [(entry, 1.0)]
+    seen_guard = 0
+    while stack:
+        seen_guard += 1
+        if seen_guard > 200_000:
+            break
+        cname, m = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        mult[cname] += m
+        for ins in comp.instrs:
+            if ins.op == "while":
+                trip_m = _TRIP_RE.search(ins.line)
+                trip = int(trip_m.group(1)) if trip_m else 1
+                b = _REF_RES["body"].search(ins.line)
+                c = _REF_RES["condition"].search(ins.line)
+                if b:
+                    stack.append((b.group(1), m * trip))
+                if c:
+                    stack.append((c.group(1), m * (trip + 1)))
+            elif ins.op == "fusion":
+                r = _REF_RES["calls"].search(ins.line)
+                if r:
+                    fusion_internal.add(r.group(1))
+                    stack.append((r.group(1), m))
+            elif ins.op in ("call", "custom-call", "async-start"):
+                r = _REF_RES["calls"].search(ins.line) or _REF_RES["to_apply"].search(ins.line)
+                if r:
+                    stack.append((r.group(1), m))
+            elif ins.op == "conditional":
+                br = _BRANCHES_RE.search(ins.line)
+                if br:
+                    for b in _OPERANDS_RE.findall(br.group(1)):
+                        stack.append((b, m))
+            else:
+                r = _REF_RES["to_apply"].search(ins.line)
+                if r:
+                    # reducer computations: scalar ops, negligible; still walk
+                    stack.append((r.group(1), m))
+    return mult, fusion_internal
+
+
+def _dot_flops(ins: _Instr, symtab: dict) -> float:
+    dims = _dims_of(ins.type_str)
+    out = 1
+    for d in dims:
+        out *= d
+    cm = _CONTRACT_RE.search(ins.line)
+    contract = 1
+    if cm:
+        # first operand name
+        ops = _OPERANDS_RE.findall(ins.line.split("(", 1)[1])
+        if ops:
+            lhs_type = symtab.get(ops[0], "")
+            lhs_dims = _dims_of(lhs_type)
+            idxs = [int(i) for i in cm.group(1).split(",")] if cm.group(1) else []
+            for i in idxs:
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2.0 * out * contract
+
+
+def _operand_types(ins: _Instr, symtab: dict) -> list[str]:
+    paren = ins.line.split("(", 1)
+    if len(paren) < 2:
+        return []
+    arglist = paren[1].split(")", 1)[0]
+    return [symtab[o] for o in _OPERANDS_RE.findall(arglist) if o in symtab]
+
+
+def _operand_names(ins: _Instr) -> list[str]:
+    paren = ins.line.split("(", 1)
+    if len(paren) < 2:
+        return []
+    arglist = paren[1].split(")", 1)[0]
+    return _OPERANDS_RE.findall(arglist)
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _instr_bytes(ins: _Instr, symtab: dict, comps: dict | None = None) -> float:
+    """Approximate HBM traffic of one op (XLA bytes-accessed flavoured).
+
+    In-place updates are special-cased: XLA aliases the big operand of
+    dynamic-update-slice (and of fusions whose root is one), so only the
+    updated region moves — without this, a scan carrying a large stacked
+    buffer looks like it rewrites the whole buffer every iteration.
+    """
+    _, rbytes = _shape_elems_bytes(ins.type_str)
+    opnds = _operand_types(ins, symtab)
+
+    if ins.op == "dynamic-update-slice":
+        upd = _shape_elems_bytes(opnds[1])[1] if len(opnds) > 1 else rbytes
+        return 2.0 * upd
+    if ins.op in ("dynamic-slice", "slice"):
+        return 2.0 * rbytes
+    if ins.op == "fusion" and comps is not None:
+        r = _REF_RES["calls"].search(ins.line)
+        called = comps.get(r.group(1)) if r else None
+        if called and called.instrs:
+            return _fusion_bytes(called, opnds, rbytes)
+    total = float(rbytes)
+    for t in opnds:
+        total += _shape_elems_bytes(t)[1]
+    return total
+
+
+def _fusion_bytes(called: _Comp, opnd_types: list[str], rbytes: int) -> float:
+    """Bytes a fusion moves: DUS-aware outputs + slice-aware operands.
+
+    Scan-body fusions typically ROOT in a tuple of dynamic-update-slices
+    into loop-carried stacked buffers (remat saves, KV caches).  XLA aliases
+    those buffers in place, so only the updated region moves — charging the
+    full buffer every iteration inflates the memory term by the trip count.
+    """
+    insts = {i.name: i for i in called.instrs}
+    root = called.instrs[-1]
+    elems = _operand_names(root) if root.op == "tuple" else [root.name]
+
+    out_bytes = 0.0
+    aliased: set[str] = set()
+    for name in elems:
+        rt = insts.get(name)
+        if rt is not None and rt.op == "dynamic-update-slice":
+            types = _operand_types(rt, called.symtab)
+            out_bytes += 2.0 * (_shape_elems_bytes(types[1])[1] if len(types) > 1 else 0)
+            onames = _operand_names(rt)
+            if onames:
+                aliased.add(onames[0])  # the in-place big buffer
+        elif rt is not None:
+            out_bytes += _shape_elems_bytes(rt.type_str)[1]
+        else:
+            out_bytes += 0.0
+    if root.op != "tuple" and root.op != "dynamic-update-slice":
+        out_bytes = float(rbytes)
+
+    # parameter index -> instr name (for operand attribution)
+    param_name: dict[int, str] = {}
+    for i in called.instrs:
+        if i.op == "parameter":
+            m = _PARAM_IDX_RE.search(i.line)
+            if m:
+                param_name[int(m.group(1))] = i.name
+
+    in_bytes = 0.0
+    for i, t in enumerate(opnd_types):
+        full = _shape_elems_bytes(t)[1]
+        pname = param_name.get(i)
+        if pname is None:
+            in_bytes += full
+            continue
+        if pname in aliased:
+            continue  # in-place updated buffer: write side already charged
+        consumers = [
+            c for c in called.instrs
+            if c.op != "parameter" and pname in _operand_names(c)
+        ]
+        if consumers and all(
+            c.op in ("dynamic-slice", "gather", "slice") for c in consumers
+        ):
+            in_bytes += sum(_shape_elems_bytes(c.type_str)[1] for c in consumers)
+        else:
+            in_bytes += full
+    return out_bytes + in_bytes
+
+
+def _collective_wire(ins: _Instr) -> float:
+    base = ins.op.removesuffix("-start")
+    _, r = _shape_elems_bytes(ins.type_str)
+    m = _IOTA_GROUPS_RE.search(ins.line)
+    if m:
+        g = int(m.group(2))
+    else:
+        m2 = _LIST_GROUPS_RE.search(ins.line)
+        g = len(m2.group(1).split(",")) if (m2 and m2.group(1).strip()) else 2
+    if g <= 1:
+        return 0.0
+    if base == "all-reduce":
+        return 2.0 * r * (g - 1) / g
+    if base == "all-gather":
+        return r * (g - 1) / g
+    if base == "reduce-scatter":
+        return float(r) * (g - 1)
+    if base == "all-to-all":
+        return r * (g - 1) / g
+    return float(r)  # collective-permute
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_accessed: float
+    wire_bytes: float
+    collective_counts: dict[str, float]
+    collective_wire: dict[str, float]
+    n_while: int
+    max_trip: int
+
+
+def analyze(hlo: str) -> HloCost:
+    comps = _parse_computations(hlo)
+    mult, fusion_internal = _multiplicities(comps)
+
+    flops = 0.0
+    byts = 0.0
+    wire = 0.0
+    coll_counts: dict[str, float] = defaultdict(float)
+    coll_wire: dict[str, float] = defaultdict(float)
+    n_while = 0
+    max_trip = 1
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_internal
+        for ins in comp.instrs:
+            if ins.op == "dot":
+                flops += m * _dot_flops(ins, comp.symtab)
+            if ins.op == "while":
+                n_while += 1
+                t = _TRIP_RE.search(ins.line)
+                if t:
+                    max_trip = max(max_trip, int(t.group(1)))
+            base = ins.op.removesuffix("-start")
+            if base in _COLLECTIVES and not ins.op.endswith("-done"):
+                w = _collective_wire(ins)
+                wire += m * w
+                coll_counts[base] += m
+                coll_wire[base] += m * w
+            if in_fusion:
+                continue  # bytes charged at the fusion call site
+            if ins.op in _FREE_OPS or ins.op in ("while", "conditional", "call"):
+                continue
+            byts += m * _instr_bytes(ins, comp.symtab, comps)
+    return HloCost(
+        flops=flops,
+        bytes_accessed=byts,
+        wire_bytes=wire,
+        collective_counts=dict(coll_counts),
+        collective_wire=dict(coll_wire),
+        n_while=n_while,
+        max_trip=max_trip,
+    )

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — required because the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* first jax
+initialization, while smoke tests and benchmarks must see 1 device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16x16 single-pod (256 chips) or 2x16x16 two-pod (512 chips) mesh.
+
+    Axes: ("data", "model") single-pod; ("pod", "data", "model") multi-pod.
+    The "pod" axis carries pure data parallelism across the inter-pod DCN
+    link; "model" is the intra-pod ICI tensor/expert-parallel axis.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> jax.sharding.Mesh:
+    """Trivial 1x1 mesh over the real local device (tests / examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])

@@ -1,0 +1,66 @@
+"""Step functions: train_step / prefill_step / serve_step per architecture.
+
+These are the functions the dry-run lowers and the runtime executes.  All
+are pure (params, state, batch) -> (new state, metrics) functions suitable
+for ``jax.jit`` with explicit in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import api
+from repro.optim import AdamWConfig, adamw_update
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict, remat: str = "none") -> tuple[jax.Array, dict]:
+    logits, aux = api.forward(params, cfg, batch, remat=remat)
+    tokens = batch["tokens"]
+    targets = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    if cfg.stub_prefix_len:
+        # modality-stub positions carry no next-token target
+        pos = jnp.arange(nll.shape[1])
+        mask = (pos >= cfg.stub_prefix_len).astype(jnp.float32)[None]
+        nll = nll * mask
+        loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask) * nll.shape[0], 1.0)
+    else:
+        loss = jnp.mean(nll)
+    return loss + aux, {"nll": loss, "aux": aux}
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *, remat: str = "full"):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    if remat not in ("none", "full", "dots"):
+        raise ValueError(f"unknown remat policy {remat!r}")
+
+    def train_step(params, opt_state, batch):
+        f = functools.partial(loss_fn, cfg=cfg, batch=batch, remat=remat)
+        (loss, parts), grads = jax.value_and_grad(f, has_aux=True)(params)
+        new_params, new_state, opt_metrics = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        return api.prefill(params, cfg, batch)
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One-token decode: (params, cache, token, pos) -> (logits, cache)."""
+
+    def serve_step(params, cache, token, pos):
+        return api.decode_step(params, cfg, cache, token, pos)
+
+    return serve_step

@@ -1,0 +1,18 @@
+"""LM substrate: pure-JAX model definitions for the assigned architectures.
+
+All models expose the same interface (see ``transformer.LM`` /
+``encdec.EncDecLM``):
+
+  init(key, cfg)                          -> params pytree
+  forward(params, cfg, batch)             -> logits           (training)
+  prefill(params, cfg, tokens)            -> (logits, cache)  (serving)
+  decode_step(params, cfg, cache, token)  -> (logits, cache)  (serving)
+  init_cache(cfg, batch, seq_len)         -> cache pytree
+
+Layer stacks are built from a ``block_pattern`` of homogeneous segments,
+each executed with ``jax.lax.scan`` over stacked parameters so 80-layer
+models compile to compact HLO.
+"""
+from repro.models import transformer, encdec
+
+__all__ = ["transformer", "encdec"]

@@ -1,0 +1,92 @@
+"""Uniform model API over decoder-only and encoder-decoder families."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, transformer
+
+
+def init(key, cfg: ArchConfig):
+    return encdec.init(key, cfg) if cfg.encdec else transformer.init(key, cfg)
+
+
+def forward(params, cfg: ArchConfig, batch: dict, *, remat: str = "none"):
+    if cfg.encdec:
+        return encdec.forward(params, cfg, batch, remat=remat)
+    return transformer.forward(params, cfg, batch, remat=remat)
+
+
+def prefill(params, cfg: ArchConfig, batch: dict):
+    return encdec.prefill(params, cfg, batch) if cfg.encdec else transformer.prefill(params, cfg, batch)
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, pos):
+    if cfg.encdec:
+        return encdec.decode_step(params, cfg, cache, token, pos)
+    return transformer.decode_step(params, cfg, cache, token, pos)
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=None, *, src_len: int | None = None):
+    if cfg.encdec:
+        return encdec.init_cache(cfg, batch, seq_len, src_len or seq_len, dtype)
+    # meta tokens occupy cache slots before real positions
+    return transformer.init_cache(cfg, batch, seq_len + cfg.n_meta_tokens, dtype)
+
+
+def merge_prefill_cache(cfg: ArchConfig, full_cache, pf_cache):
+    """Write prefill caches (prompt length) into a zero full-length cache.
+
+    Both are pytrees with layer-stacked leaves; KV-style leaves differ only
+    in the sequence axis (prefill writes positions [0, prompt)), state-style
+    leaves (SSM/ring-buffer) match exactly and are replaced wholesale.
+    """
+
+    def merge_leaf(dst, src):
+        if dst.shape == src.shape:
+            return src.astype(dst.dtype)
+        axes = [i for i, (a, b) in enumerate(zip(dst.shape, src.shape)) if a != b]
+        assert len(axes) == 1, (dst.shape, src.shape)
+        return jax.lax.dynamic_update_slice(
+            dst, src.astype(dst.dtype), (0,) * dst.ndim
+        )
+
+    return jax.tree.map(merge_leaf, full_cache, pf_cache)
+
+
+def make_batch(cfg: ArchConfig, key, batch: int, seq_len: int) -> dict[str, Any]:
+    """Random concrete batch (smoke tests / examples)."""
+    kt, kp = jax.random.split(key)
+    out: dict[str, Any] = {
+        "tokens": jax.random.randint(kt, (batch, seq_len), 0, cfg.vocab_size, jnp.int32)
+    }
+    if cfg.encdec:
+        out["src_embeds"] = jax.random.normal(kp, (batch, seq_len, cfg.d_model), jnp.float32)
+    elif cfg.stub_prefix_len:
+        out["prefix_embeds"] = jax.random.normal(
+            kp, (batch, cfg.stub_prefix_len, cfg.d_model), jnp.float32
+        )
+    return out
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def active_param_count(params, cfg: ArchConfig) -> int:
+    """Active params per token (MoE: shared + top_k routed experts only)."""
+    total = param_count(params)
+    if cfg.moe is None:
+        return total
+    # subtract the non-active share of routed expert weights
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    routed = 0
+    for path, leaf in flat:
+        names = [str(getattr(k, "key", "")) for k in path]
+        if any(n in ("wi_gate", "wi_up", "wo") for n in names) and leaf.ndim == 3:
+            routed += int(leaf.size)
+    active_frac = cfg.moe.top_k / cfg.moe.n_alloc
+    return total - routed + int(routed * active_frac)

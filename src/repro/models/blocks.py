@@ -1,0 +1,141 @@
+"""Dense transformer blocks (pre-norm attention + gated MLP).
+
+Every block kind in this framework exposes the same pair of functions:
+
+  init_<kind>(key, cfg)                       -> layer params (unstacked)
+  <kind>_fwd(p, cfg, x, *, q_offset, return_cache, layer_flag)
+                                              -> (x, cache | None)
+  <kind>_step(p, cfg, x, cache, pos, *, layer_flag)
+                                              -> (x, cache)
+
+``layer_flag`` is a traced per-layer scalar threaded through ``lax.scan``
+(used e.g. by Hymba to switch SWA <-> global attention without breaking the
+homogeneous-stack scan).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.attention import attention, decode_attention
+from repro.models.layers import Params
+
+
+# ---------------------------------------------------------------------------
+# GQA/MQA attention sub-layer
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    hd = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": layers._dense_init(k1, cfg.d_model, cfg.n_heads * hd),
+        "wk": layers._dense_init(k2, cfg.d_model, cfg.n_kv_heads * hd),
+        "wv": layers._dense_init(k3, cfg.d_model, cfg.n_kv_heads * hd),
+        "wo": layers._dense_init(k4, cfg.n_heads * hd, cfg.d_model),
+    }
+
+
+def _qkv(p: Params, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dtype = x.dtype
+    q = (x @ p["wq"].astype(dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ p["wk"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ p["wv"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    q = layers.apply_rope(q.transpose(0, 2, 1, 3), positions[None, None, :], cfg.rope_theta)
+    k = layers.apply_rope(k.transpose(0, 2, 1, 3), positions[None, None, :], cfg.rope_theta)
+    v = v.transpose(0, 2, 1, 3)
+    return q, k, v  # (B, H, S, hd)
+
+
+def attention_fwd(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    q_offset: int = 0,
+    kind: str = "causal",
+    window: Optional[int] = None,
+    return_cache: bool = False,
+):
+    b, s, _ = x.shape
+    positions = q_offset + jnp.arange(s)
+    q, k, v = _qkv(p, cfg, x, positions)
+    out = attention(q, k, v, kind=kind, window=window, q_offset=q_offset)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    y = out @ p["wo"].astype(x.dtype)
+    cache = {"k": k, "v": v} if return_cache else None
+    return y, cache
+
+
+def attention_step(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    cache: dict[str, jax.Array],
+    pos: jax.Array,
+    *,
+    window: Optional[jax.Array] = None,
+):
+    """x: (B, 1, d); cache k/v: (B, Hkv, S, hd); pos: scalar index to write."""
+    b = x.shape[0]
+    positions = jnp.reshape(pos, (1,))
+    q, k, v = _qkv(p, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=2)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=2)
+    out = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
+    y = out @ p["wo"].astype(x.dtype)
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype) -> dict[str, Any]:
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.n_kv_heads, seq_len, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Dense block: pre-norm attn + pre-norm gated MLP
+# ---------------------------------------------------------------------------
+
+def init_attn_block(key, cfg: ArchConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_norm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "ln2": layers.init_norm(cfg.d_model),
+        "mlp": layers.init_glu_mlp(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def attn_block_fwd(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    q_offset: int = 0,
+    kind: str = "causal",
+    window=None,
+    return_cache: bool = False,
+    layer_flag=None,
+):
+    a, cache = attention_fwd(
+        p["attn"], cfg, layers.rmsnorm(p["ln1"], x),
+        q_offset=q_offset, kind=kind, window=window, return_cache=return_cache,
+    )
+    x = x + a
+    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    return x, cache
+
+
+def attn_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, window=None, layer_flag=None, **_):
+    a, cache = attention_step(p["attn"], cfg, layers.rmsnorm(p["ln1"], x), cache, pos, window=window)
+    x = x + a
+    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    return x, cache

@@ -1,0 +1,187 @@
+"""Encoder-decoder LM (SeamlessM4T-style backbone, audio frontend stubbed).
+
+The encoder consumes precomputed frame embeddings (B, S_src, d_model) — the
+modality frontend stub mandated by the brief — through bidirectional
+attention blocks.  The decoder is a causal LM with per-layer cross-attention
+into the encoder output.  Decode caches hold both the self-attention KV and
+the *precomputed* cross-attention KV (encoder K/V projected once at prefill,
+then reused every step — the standard production serving layout).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.attention import blockwise_attention, decode_attention
+from repro.models.blocks import _qkv, attention_step, init_attention, init_attn_block, attn_block_fwd
+from repro.models.layers import Params
+
+
+# ---------------------------------------------------------------------------
+# Decoder block: causal self-attn + cross-attn + MLP
+# ---------------------------------------------------------------------------
+
+def init_dec_block(key, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_norm(cfg.d_model),
+        "self": init_attention(k1, cfg),
+        "ln_x": layers.init_norm(cfg.d_model),
+        "cross": init_attention(k2, cfg),
+        "ln2": layers.init_norm(cfg.d_model),
+        "mlp": layers.init_glu_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _cross_kv(p: Params, cfg: ArchConfig, enc_out: jax.Array):
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    dtype = enc_out.dtype
+    k = (enc_out @ p["wk"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = (enc_out @ p["wv"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def _cross_attend(p: Params, cfg: ArchConfig, x: jax.Array, k, v):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    dtype = x.dtype
+    q = (x @ p["wq"].astype(dtype)).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    out = blockwise_attention(q, k, v, kind="bidir")
+    return out.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"].astype(dtype)
+
+
+def dec_block_fwd(
+    p: Params, cfg: ArchConfig, x, enc_out, *, q_offset=0, return_cache=False
+):
+    a, cache = _self_attn_fwd(p, cfg, x, q_offset=q_offset, return_cache=return_cache)
+    x = x + a
+    ck, cv = _cross_kv(p["cross"], cfg, enc_out)
+    x = x + _cross_attend(p["cross"], cfg, layers.rmsnorm(p["ln_x"], x), ck, cv)
+    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    if return_cache:
+        cache = {"self": cache, "cross_k": ck, "cross_v": cv}
+    return x, cache
+
+
+def _self_attn_fwd(p: Params, cfg: ArchConfig, x, *, q_offset, return_cache):
+    from repro.models.blocks import attention_fwd
+
+    return attention_fwd(
+        p["self"], cfg, layers.rmsnorm(p["ln1"], x),
+        q_offset=q_offset, kind="causal", return_cache=return_cache,
+    )
+
+
+def dec_block_step(p: Params, cfg: ArchConfig, x, cache, pos):
+    a, self_cache = attention_step(
+        p["self"], cfg, layers.rmsnorm(p["ln1"], x), cache["self"], pos
+    )
+    x = x + a
+    xq = layers.rmsnorm(p["ln_x"], x)
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q = (xq @ p["cross"]["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    out = decode_attention(q, cache["cross_k"], cache["cross_v"], cache["cross_k"].shape[2])
+    x = x + out.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ p["cross"]["wo"].astype(x.dtype)
+    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    return x, {"self": self_cache, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+
+
+# ---------------------------------------------------------------------------
+# Model assembly
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.n_enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    return {
+        "src_proj": layers.init_dense(ks[2], cfg.d_model, cfg.d_model),
+        "embed": layers.init_embedding(ks[3], cfg.vocab_size, cfg.d_model),
+        "encoder": jax.vmap(lambda k: init_attn_block(k, cfg))(enc_keys),
+        "enc_norm": layers.init_norm(cfg.d_model),
+        "decoder": jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys),
+        "final_norm": layers.init_norm(cfg.d_model),
+        "head": layers.init_lm_head(ks[4], cfg.d_model, cfg.vocab_size),
+    }
+
+
+def encode(params: Params, cfg: ArchConfig, src_embeds: jax.Array) -> jax.Array:
+    dtype = jnp.dtype(cfg.dtype)
+    x = layers.dense(params["src_proj"], src_embeds.astype(dtype), dtype)
+
+    def body(xc, p_layer):
+        xc, _ = attn_block_fwd(p_layer, cfg, xc, kind="bidir", return_cache=False)
+        return xc, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return layers.rmsnorm(params["enc_norm"], x)
+
+
+def forward(
+    params: Params, cfg: ArchConfig, batch: dict, *, remat: str = "none"
+) -> tuple[jax.Array, jax.Array]:
+    """batch: {"src_embeds": (B, Ss, d), "tokens": (B, St)} -> (logits, aux)."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    x = layers.embed(params["embed"], batch["tokens"], dtype)
+
+    def layer(p_layer, xc):
+        xc, _ = dec_block_fwd(p_layer, cfg, xc, enc_out, return_cache=False)
+        return xc
+
+    if remat != "none":
+        from repro.models.transformer import _REMAT_POLICIES
+
+        layer = jax.checkpoint(layer, policy=_REMAT_POLICIES[remat]())
+
+    def body(xc, p_layer):
+        return layer(p_layer, xc), None
+
+    x, _ = jax.lax.scan(body, x, params["decoder"])
+    x = layers.rmsnorm(params["final_norm"], x)
+    return layers.lm_head(params["head"], x), jnp.zeros((), jnp.float32)
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: dict):
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = encode(params, cfg, batch["src_embeds"])
+    x = layers.embed(params["embed"], batch["tokens"], dtype)
+
+    def body(xc, p_layer):
+        xc, cache = dec_block_fwd(p_layer, cfg, xc, enc_out, return_cache=True)
+        return xc, cache
+
+    x, caches = jax.lax.scan(body, x, params["decoder"])
+    x = layers.rmsnorm(params["final_norm"], x[:, -1:])
+    return layers.lm_head(params["head"], x), caches
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, src_len: int, dtype=None):
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    hd = cfg.resolved_head_dim
+    l = cfg.n_layers
+    kv = (l, batch, cfg.n_kv_heads, seq_len, hd)
+    xkv = (l, batch, cfg.n_kv_heads, src_len, hd)
+    return {
+        "self": {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)},
+        "cross_k": jnp.zeros(xkv, dtype),
+        "cross_v": jnp.zeros(xkv, dtype),
+    }
+
+
+def decode_step(params: Params, cfg: ArchConfig, caches, token, pos):
+    dtype = jnp.dtype(cfg.dtype)
+    x = layers.embed(params["embed"], token, dtype)
+
+    def body(xc, pc):
+        p_layer, c_layer = pc
+        xc, c_new = dec_block_step(p_layer, cfg, xc, c_layer, pos)
+        return xc, c_new
+
+    x, caches = jax.lax.scan(body, x, (params["decoder"], caches))
+    x = layers.rmsnorm(params["final_norm"], x)
+    return layers.lm_head(params["head"], x), caches

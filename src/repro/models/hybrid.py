@@ -1,0 +1,116 @@
+"""Hymba-style hybrid block: parallel attention + Mamba heads in one layer.
+
+Both branches read the same pre-normed input; their outputs are per-branch
+RMS-normalized and averaged (the Hymba fusion rule), then a gated MLP
+follows.  Two block kinds share parameters' structure:
+
+  * ``hymba_swa``    — sliding-window attention branch (ring-buffer cache of
+    ``cfg.attn_window`` entries at decode time, so the 500k-decode cell's
+    cache is window-bounded for 29 of 32 layers);
+  * ``hymba_global`` — full-attention branch (the 3 global layers).
+
+Meta tokens (128 learnable prefix tokens) are handled by the LM assembly,
+not per-block.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers, ssm
+from repro.models.attention import attention, decode_attention
+from repro.models.blocks import init_attention, _qkv
+from repro.models.layers import Params
+
+
+def init_hymba_block(key, cfg: ArchConfig) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": layers.init_norm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "mamba": ssm.init_mamba(k2, cfg),
+        "norm_attn": layers.init_norm(cfg.d_model),
+        "norm_ssm": layers.init_norm(cfg.d_model),
+        "ln2": layers.init_norm(cfg.d_model),
+        "mlp": layers.init_glu_mlp(k3, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _fuse(p: Params, attn_out, ssm_out):
+    return 0.5 * (layers.rmsnorm(p["norm_attn"], attn_out) + layers.rmsnorm(p["norm_ssm"], ssm_out))
+
+
+def hymba_block_fwd(
+    p: Params, cfg: ArchConfig, x, *, q_offset=0, kind="swa", window=None,
+    return_cache=False, layer_flag=None,
+):
+    b, s, _ = x.shape
+    xn = layers.rmsnorm(p["ln1"], x)
+    positions = q_offset + jnp.arange(s)
+    q, k, v = _qkv(p["attn"], cfg, xn, positions)
+    attn = attention(
+        q, k, v, kind=kind, window=window if kind == "swa" else None, q_offset=q_offset
+    )
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["attn"]["wo"].astype(x.dtype)
+    ssm_out, ssm_cache = ssm.mamba_fwd(p["mamba"], cfg, xn, return_cache=return_cache)
+    x = x + _fuse(p, attn, ssm_out)
+    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    cache = None
+    if return_cache:
+        if kind == "swa":
+            w = int(window)
+            # keep only the trailing window as a ring buffer, aligned so that
+            # slot (pos % w) holds position pos (prefill is assumed to start
+            # at q_offset; element at trailing index 0 is position
+            # q_offset+s-w and must land on slot (q_offset+s) % w).
+            if s >= w:
+                kk, vv = k[:, :, -w:], v[:, :, -w:]
+                roll = (q_offset + s) % w
+                kk = jnp.roll(kk, roll, axis=2)
+                vv = jnp.roll(vv, roll, axis=2)
+            else:
+                pad = ((0, 0), (0, 0), (0, w - s), (0, 0))
+                kk, vv = jnp.pad(k, pad), jnp.pad(v, pad)
+            cache = {"k": kk, "v": vv, "ssm": ssm_cache}
+        else:
+            cache = {"k": k, "v": v, "ssm": ssm_cache}
+    return x, cache
+
+
+def hymba_block_step(
+    p: Params, cfg: ArchConfig, x, cache, pos, *, kind="swa", window=None, layer_flag=None,
+):
+    b = x.shape[0]
+    xn = layers.rmsnorm(p["ln1"], x)
+    positions = jnp.reshape(pos, (1,))
+    q, k, v = _qkv(p["attn"], cfg, xn, positions)
+    if kind == "swa":
+        w = cache["k"].shape[2]
+        slot = jnp.mod(pos, w)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+        valid = jnp.minimum(pos + 1, w)
+        attn = decode_attention(q, k_cache, v_cache, valid)
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=2)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=2)
+        attn = decode_attention(q, k_cache, v_cache, pos + 1)
+    attn = attn.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ p["attn"]["wo"].astype(x.dtype)
+    ssm_out, ssm_cache = ssm.mamba_step(p["mamba"], cfg, xn, cache["ssm"])
+    x = x + _fuse(p, attn, ssm_out)
+    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    return x, {"k": k_cache, "v": v_cache, "ssm": ssm_cache}
+
+
+def init_hymba_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype, *, kind: str):
+    hd = cfg.resolved_head_dim
+    # SWA caches are always window-length ring buffers (prefill emits exactly
+    # this shape, so prefill->decode cache merging is shape-stable).
+    length = cfg.attn_window if kind == "hymba_swa" else seq_len
+    shape = (batch, cfg.n_kv_heads, length, hd)
+    return {
+        "k": jnp.zeros(shape, dtype),
+        "v": jnp.zeros(shape, dtype),
+        "ssm": ssm.init_mamba_cache(cfg, batch, dtype),
+    }

@@ -1,0 +1,113 @@
+"""Shared neural-net layers (pure JAX, explicit param pytrees).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init functions mirror apply
+    functions: ``init_x(key, ...) -> params`` / ``x(params, inputs, ...)``.
+  * activations/compute dtype comes from the caller (cfg.dtype); params are
+    stored in f32 (master weights) and cast at use ("mixed precision").
+  * weight init: truncated-normal fan-in scaling (matches llama-family).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+
+def _dense_init(key, in_dim: int, out_dim: int, scale: float = 1.0) -> jax.Array:
+    std = scale / (in_dim**0.5)
+    return jax.random.truncated_normal(key, -3, 3, (in_dim, out_dim), jnp.float32) * std
+
+
+def init_dense(key, in_dim: int, out_dim: int, scale: float = 1.0) -> Params:
+    return {"w": _dense_init(key, in_dim, out_dim, scale)}
+
+
+def dense(p: Params, x: jax.Array, dtype) -> jax.Array:
+    return x @ p["w"].astype(dtype)
+
+
+def init_norm(dim: int) -> Params:
+    return {"g": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["g"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = rope_frequencies(d, theta)  # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLPs
+# ---------------------------------------------------------------------------
+
+def init_glu_mlp(key, d_model: int, d_ff: int) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": _dense_init(k1, d_model, d_ff),
+        "wi_up": _dense_init(k2, d_model, d_ff),
+        "wo": _dense_init(k3, d_ff, d_model),
+    }
+
+
+def glu_mlp(p: Params, x: jax.Array, act: str, dtype) -> jax.Array:
+    gate = x @ p["wi_gate"].astype(dtype)
+    up = x @ p["wi_up"].astype(dtype)
+    if act == "swiglu":
+        h = jax.nn.silu(gate) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(gate, approximate=True) * up
+    else:
+        raise ValueError(f"unknown act {act!r}")
+    return h @ p["wo"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d_model: int) -> Params:
+    return {"table": jax.random.normal(key, (vocab, d_model), jnp.float32) * 0.02}
+
+
+def embed(p: Params, tokens: jax.Array, dtype) -> jax.Array:
+    return p["table"].astype(dtype)[tokens]
+
+
+def unembed(p: Params, x: jax.Array) -> jax.Array:
+    # logits in f32 for a stable softmax/xent regardless of compute dtype
+    return (x.astype(jnp.float32)) @ p["table"].astype(jnp.float32).T
+
+
+def init_lm_head(key, d_model: int, vocab: int) -> Params:
+    return {"w": _dense_init(key, d_model, vocab)}
+
+
+def lm_head(p: Params, x: jax.Array) -> jax.Array:
+    return x.astype(jnp.float32) @ p["w"].astype(jnp.float32)

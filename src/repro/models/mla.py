@@ -1,0 +1,171 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with absorbed-matmul decode.
+
+Training/prefill use the expanded form (per-head K/V up-projections).  The
+decode path uses the *absorbed* form: the per-head up-projections W_UK/W_UV
+are folded into the query / output sides, so the KV cache holds only the
+compressed latent ``c_kv`` (kv_lora_rank) plus the shared RoPE key
+(qk_rope_head_dim) — 576 f-elements per token for the 236B config instead of
+128 heads x 256. This is the production DeepSeek inference dataflow and the
+reason deepseek-v2's decode_32k cell is memory- rather than
+collective-bound (EXPERIMENTS.md §Roofline).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.attention import blockwise_attention
+from repro.models.layers import Params
+
+
+def init_mla(key, cfg: ArchConfig) -> Params:
+    m = cfg.mla
+    assert m is not None
+    ks = jax.random.split(key, 6)
+    h = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": layers._dense_init(ks[0], cfg.d_model, m.q_lora_rank),
+        "q_norm": layers.init_norm(m.q_lora_rank),
+        "wq_b": layers._dense_init(ks[1], m.q_lora_rank, h * qk_dim),
+        "wkv_a": layers._dense_init(ks[2], cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim),
+        "kv_norm": layers.init_norm(m.kv_lora_rank),
+        "wk_b": layers._dense_init(ks[3], m.kv_lora_rank, h * m.qk_nope_head_dim),
+        "wv_b": layers._dense_init(ks[4], m.kv_lora_rank, h * m.v_head_dim),
+        "wo": layers._dense_init(ks[5], h * m.v_head_dim, cfg.d_model),
+    }
+
+
+def _project_q(p: Params, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    """-> q_nope (B,H,S,dn), q_rope (B,H,S,dr)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dtype = x.dtype
+    ql = layers.rmsnorm(p["q_norm"], x @ p["wq_a"].astype(dtype))
+    q = (ql @ p["wq_b"].astype(dtype)).reshape(b, s, h, -1).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    q_rope = layers.apply_rope(q_rope, positions[None, None, :], cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _project_kv_latent(p: Params, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    """-> c_kv (B,S,r), k_rope (B,S,dr) — exactly what the decode cache holds."""
+    m = cfg.mla
+    dtype = x.dtype
+    kv = x @ p["wkv_a"].astype(dtype)
+    c_kv, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank :]
+    c_kv = layers.rmsnorm(p["kv_norm"], c_kv)
+    k_rope = layers.apply_rope(k_rope[:, None], positions[None, None, :], cfg.rope_theta)[:, 0]
+    return c_kv, k_rope
+
+
+def mla_attention_fwd(
+    p: Params, cfg: ArchConfig, x: jax.Array, *, q_offset: int = 0, return_cache: bool = False
+):
+    """Expanded-form MLA for train/prefill; cache stores the latent."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dtype = x.dtype
+    positions = q_offset + jnp.arange(s)
+
+    q_nope, q_rope = _project_q(p, cfg, x, positions)
+    c_kv, k_rope = _project_kv_latent(p, cfg, x, positions)
+
+    k_nope = (c_kv @ p["wk_b"].astype(dtype)).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (c_kv @ p["wv_b"].astype(dtype)).reshape(b, s, h, m.v_head_dim)
+    k_nope = k_nope.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+    k_rope_h = jnp.broadcast_to(k_rope[:, None], (b, h, s, m.qk_rope_head_dim))
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    out = blockwise_attention(q, k, v, kind="causal", q_offset=q_offset)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
+    y = out @ p["wo"].astype(dtype)
+    cache = {"c_kv": c_kv, "k_rope": k_rope} if return_cache else None
+    return y, cache
+
+
+def mla_attention_step(p: Params, cfg: ArchConfig, x: jax.Array, cache, pos):
+    """Absorbed-form single-token decode against the latent cache."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.n_heads
+    dtype = x.dtype
+    positions = jnp.reshape(pos, (1,))
+
+    q_nope, q_rope = _project_q(p, cfg, x, positions)  # (B,H,1,dn) / (B,H,1,dr)
+    c_new, kr_new = _project_kv_latent(p, cfg, x, positions)  # (B,1,r) / (B,1,dr)
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_new, pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], kr_new, pos, axis=1)
+
+    # absorb W_UK into q: q_eff (B,H,1,r)
+    wk_b = p["wk_b"].astype(dtype).reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_eff = jnp.einsum("bhqd,rhd->bhqr", q_nope, wk_b)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    scores = (
+        jnp.einsum("bhqr,bsr->bhqs", q_eff.astype(jnp.float32), c_kv.astype(jnp.float32))
+        + jnp.einsum("bhqd,bsd->bhqs", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
+    ) * scale
+    s_len = c_kv.shape[1]
+    valid = jnp.arange(s_len) <= pos
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+
+    ctx = jnp.einsum("bhqs,bsr->bhqr", probs, c_kv.astype(jnp.float32))  # (B,H,1,r)
+    wv_b = p["wv_b"].astype(dtype).reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhqr,rhd->bhqd", ctx.astype(dtype), wv_b)
+    out = out.transpose(0, 2, 1, 3).reshape(b, 1, h * m.v_head_dim)
+    y = out @ p["wo"].astype(dtype)
+    return y, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, seq_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, seq_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MLA + MoE block (the DeepSeek-V2 layer)
+# ---------------------------------------------------------------------------
+
+def init_mla_moe_block(key, cfg: ArchConfig) -> Params:
+    from repro.models.moe import init_moe_mlp
+
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_norm(cfg.d_model),
+        "mla": init_mla(k1, cfg),
+        "ln2": layers.init_norm(cfg.d_model),
+        "moe": init_moe_mlp(k2, cfg),
+    }
+
+
+def mla_moe_block_fwd(
+    p: Params, cfg: ArchConfig, x, *, q_offset=0, kind="causal", window=None,
+    return_cache=False, layer_flag=None,
+):
+    from repro.models.moe import moe_mlp
+
+    a, cache = mla_attention_fwd(
+        p["mla"], cfg, layers.rmsnorm(p["ln1"], x), q_offset=q_offset, return_cache=return_cache
+    )
+    x = x + a
+    y, aux = moe_mlp(p["moe"], cfg, layers.rmsnorm(p["ln2"], x))
+    return x + y, cache, aux
+
+
+def mla_moe_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, window=None, layer_flag=None, **_):
+    from repro.models.moe import moe_mlp
+
+    a, cache = mla_attention_step(p["mla"], cfg, layers.rmsnorm(p["ln1"], x), cache, pos)
+    x = x + a
+    y, _ = moe_mlp(p["moe"], cfg, layers.rmsnorm(p["ln2"], x))
+    return x + y, cache

@@ -1,0 +1,241 @@
+"""Mixture-of-Experts blocks (Qwen2-MoE / DeepSeek-V2 style).
+
+Shared experts (always active) are fused into a single dense GLU of width
+``n_shared * d_expert``.  Routed experts use drop-on-overflow capacity
+dispatch via a *sorted scatter* rather than a (tokens, experts, capacity)
+one-hot — the dispatch buffer is (E, C, d) with C = ceil(cf * T * k / E),
+which is what makes 160-expert models tractable and shards naturally:
+EP when E divides the model axis, TP on d_expert otherwise (DESIGN.md §5).
+
+Aux outputs: the standard switch-style load-balance loss, accumulated by the
+layer-stack scan carry.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.blocks import attention_fwd, attention_step
+from repro.models.layers import Params
+
+# Distributed-dispatch switch (perf variant; EXPERIMENTS.md §Perf).  When a
+# mesh is registered, moe_mlp routes through a shard_map in which dispatch is
+# shard-LOCAL: tokens stay on their (pod, data) shard, every model shard
+# dispatches only to the experts (EP) or expert-ffn slices (TP) it owns, and
+# one psum over the model axis combines — so the only collective is an
+# all-reduce of (T_local, d) activations instead of the GSPMD-inferred
+# gather/scatter traffic around the data-dependent dispatch scatter.
+_DIST: dict = {"mesh": None, "data_axes": (), "model_axis": "model"}
+
+
+def set_moe_distribution(mesh=None, *, model_axis: str = "model") -> None:
+    """Register (or clear, with mesh=None) the mesh for sharded dispatch."""
+    if mesh is None:
+        _DIST.update(mesh=None, data_axes=())
+        return
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    _DIST.update(mesh=mesh, data_axes=data_axes, model_axis=model_axis)
+
+
+def init_moe_mlp(key, cfg: ArchConfig) -> Params:
+    m = cfg.moe
+    assert m is not None
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    e, d, de = m.n_routed, cfg.d_model, m.d_expert
+    ea = m.n_alloc  # >= e; rows [e, ea) are never routed to (see MoEConfig)
+    std = 1.0 / (d**0.5)
+    p: Params = {
+        "router": layers._dense_init(k1, d, e),
+        "wi_gate": jax.random.truncated_normal(k2, -3, 3, (ea, d, de), jnp.float32) * std,
+        "wi_up": jax.random.truncated_normal(k3, -3, 3, (ea, d, de), jnp.float32) * std,
+        "wo": jax.random.truncated_normal(k4, -3, 3, (ea, de, d), jnp.float32) * (1.0 / de**0.5),
+    }
+    if m.n_shared > 0:
+        p["shared"] = layers.init_glu_mlp(k5, d, m.n_shared * de)
+    return p
+
+
+def _route(p: Params, m, xf: jax.Array, e: int):
+    """Router: -> (topw (T,k) f32, topi (T,k) i32, aux scalar)."""
+    logits = (xf.astype(jnp.float32)) @ p["router"].astype(jnp.float32)  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, m.top_k)  # (T, k)
+    topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
+    # load-balance aux (Switch-style)
+    me = jnp.mean(probs, axis=0)  # (E,)
+    one_hot = jax.nn.one_hot(topi[:, 0], e, dtype=jnp.float32)
+    ce = jnp.mean(one_hot, axis=0)
+    aux = e * jnp.sum(me * ce) * m.router_aux_weight
+    return topw, topi, aux
+
+
+def _assignment_ranks(flat_e: jax.Array, e: int) -> jax.Array:
+    """Rank of each assignment within its expert (stable arrival order)."""
+    n = flat_e.shape[0]
+    sort_idx = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[sort_idx]
+    first = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=sorted_e.dtype), side="left")
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - first[sorted_e].astype(jnp.int32)
+    return jnp.zeros((n,), jnp.int32).at[sort_idx].set(pos_sorted)
+
+
+def _ffn_combine(
+    p: Params, cfg: ArchConfig, xf, topw, slot, keep, *, n_buf: int, cap: int
+):
+    """Scatter -> grouped expert GLUs -> gather-combine.  slot in [0, n_buf*cap]."""
+    m = cfg.moe
+    dtype = xf.dtype
+    t, d = xf.shape
+    k = m.top_k
+    # gather-based dispatch: invert slot -> source assignment, then gather
+    # token rows.  Equivalent to scattering token replicas, but (a) never
+    # materializes the (T*k, d) replica tensor and (b) its transpose
+    # scatter-adds straight into d_xf (T, d) — under the sharded dispatch the
+    # model-axis psum then carries a k-fold smaller cotangent (§Perf iter 3).
+    n_assign = t * k
+    src = jnp.full((n_buf * cap + 1,), n_assign, jnp.int32).at[slot].min(
+        jnp.arange(n_assign, dtype=jnp.int32), mode="drop"
+    )[: n_buf * cap]
+    valid = src < n_assign
+    tok = jnp.minimum(src // k, t - 1)
+    buf = (xf[tok] * valid[:, None].astype(dtype)).reshape(n_buf, cap, d)
+
+    gate = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"].astype(dtype))
+    up = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(dtype))
+    h = jax.nn.silu(gate) * up
+    out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dtype))
+
+    flat_o = jnp.concatenate([out.reshape(n_buf * cap, d), jnp.zeros((1, d), dtype)])
+    y_tk = flat_o[slot] * (keep.astype(dtype) * topw.reshape(-1).astype(dtype))[:, None]
+    return jnp.sum(y_tk.reshape(t, k, d), axis=1)
+
+
+def moe_mlp(p: Params, cfg: ArchConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    if _DIST["mesh"] is not None:
+        return _moe_mlp_sharded(p, cfg, x)
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e = m.n_routed
+    xf = x.reshape(t, d)
+
+    topw, topi, aux = _route(p, m, xf, e)
+
+    cap = max(8, int(m.capacity_factor * t * m.top_k / e + 0.999))
+    flat_e = topi.reshape(-1)  # (T*k,)
+    pos = _assignment_ranks(flat_e, e)
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, m.n_alloc * cap)  # overflow -> trash
+
+    y = _ffn_combine(p, cfg, xf, topw, slot, keep, n_buf=m.n_alloc, cap=cap)
+    if "shared" in p:
+        y = y + layers.glu_mlp(p["shared"], xf, cfg.act, x.dtype)
+    return y.reshape(b, s, d), aux
+
+
+def _moe_mlp_sharded(p: Params, cfg: ArchConfig, x: jax.Array):
+    """shard_map dispatch: local routing, owned-expert FFNs, one model psum.
+
+    Tokens are sharded over (pod, data) and replicated over model; expert
+    weights are sharded over model (expert-parallel when E divides the axis,
+    expert-ffn TP otherwise).  Every model shard computes the contribution of
+    the experts/slices it owns for all of its local tokens; a single psum
+    over the model axis completes both layouts (EP contributions are
+    disjoint, TP contributions are partial sums).  Capacity is per data
+    shard (GShard-style per-group capacity).
+    """
+    mesh = _DIST["mesh"]
+    dax = _DIST["data_axes"]
+    mx = _DIST["model_axis"]
+    m = cfg.moe
+    e = m.n_routed
+    ea = m.n_alloc
+    n_model = dict(zip(mesh.axis_names, mesh.devices.shape))[mx]
+    ep = ea % n_model == 0
+    b, s, d = x.shape
+
+    if ep:
+        w_spec = {"wi_gate": P(mx, None, None), "wi_up": P(mx, None, None),
+                  "wo": P(mx, None, None)}
+    else:
+        w_spec = {"wi_gate": P(None, None, mx), "wi_up": P(None, None, mx),
+                  "wo": P(None, mx, None)}
+    p_specs: dict = {"router": P(None, None), **w_spec}
+    if "shared" in p:
+        p_specs["shared"] = {"wi_gate": P(None, mx), "wi_up": P(None, mx),
+                             "wo": P(mx, None)}
+    x_spec = P(dax, None, None) if dax else P(None, None, None)
+    out_specs = (x_spec, P())
+
+    def local_fn(p_l, x_l):
+        bl, sl, _ = x_l.shape
+        t = bl * sl
+        xf = x_l.reshape(t, d)
+        topw, topi, aux = _route(p_l, m, xf, e)
+        if dax:
+            aux = jax.lax.pmean(aux, dax)
+
+        cap = max(8, int(m.capacity_factor * t * m.top_k / e + 0.999))
+        flat_e = topi.reshape(-1)
+        pos = _assignment_ranks(flat_e, e)
+        keep = pos < cap
+        if ep:
+            e_local = ea // n_model
+            lo = jax.lax.axis_index(mx).astype(jnp.int32) * e_local
+            keep = keep & (flat_e >= lo) & (flat_e < lo + e_local)
+            slot = jnp.where(keep, (flat_e - lo) * cap + pos, e_local * cap)
+            n_buf = e_local
+        else:
+            slot = jnp.where(keep, flat_e * cap + pos, ea * cap)
+            n_buf = ea
+
+        y = _ffn_combine(p_l, cfg, xf, topw, slot, keep, n_buf=n_buf, cap=cap)
+        if "shared" in p_l:
+            y = y + layers.glu_mlp(p_l["shared"], xf, cfg.act, x_l.dtype)
+        y = jax.lax.psum(y, mx)
+        return y.reshape(bl, sl, d), aux
+
+    sharded = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(p_specs, x_spec), out_specs=out_specs
+    )
+    return sharded({k_: p[k_] for k_ in p_specs}, x)
+
+
+# ---------------------------------------------------------------------------
+# MoE block: attention + MoE MLP
+# ---------------------------------------------------------------------------
+
+def init_moe_block(key, cfg: ArchConfig) -> Params:
+    from repro.models.blocks import init_attention
+
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": layers.init_norm(cfg.d_model),
+        "attn": init_attention(k1, cfg),
+        "ln2": layers.init_norm(cfg.d_model),
+        "moe": init_moe_mlp(k2, cfg),
+    }
+
+
+def moe_block_fwd(
+    p: Params, cfg: ArchConfig, x, *, q_offset=0, kind="causal", window=None,
+    return_cache=False, layer_flag=None,
+):
+    a, cache = attention_fwd(
+        p["attn"], cfg, layers.rmsnorm(p["ln1"], x),
+        q_offset=q_offset, kind=kind, window=window, return_cache=return_cache,
+    )
+    x = x + a
+    y, aux = moe_mlp(p["moe"], cfg, layers.rmsnorm(p["ln2"], x))
+    return x + y, cache, aux
+
+
+def moe_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, window=None, layer_flag=None, **_):
+    a, cache = attention_step(p["attn"], cfg, layers.rmsnorm(p["ln1"], x), cache, pos, window=window)
+    x = x + a
+    y, _ = moe_mlp(p["moe"], cfg, layers.rmsnorm(p["ln2"], x))
+    return x + y, cache

@@ -1,0 +1,427 @@
+"""Recurrent sequence blocks: xLSTM (mLSTM + sLSTM) and Mamba-style SSM.
+
+These are the sub-quadratic architectures that make the ``long_500k`` decode
+shape runnable: their serving state is O(1) in sequence length.
+
+Training forms:
+  * mLSTM — chunkwise-parallel linear attention with per-head scalar gates:
+    a scan over chunks carries the (dk, dv) matrix state; within a chunk the
+    contribution is a dense (P, P) decay-masked attention.  All decay factors
+    are products of sigmoids so everything is <= 1 and stable in log space.
+    (Simplification vs the paper's exp input gate + stabilizer m_t: we use a
+    sigmoid input gate, which keeps the same functional family with
+    unconditional stability; noted in DESIGN.md.)
+  * sLSTM — genuinely sequential recurrence (block-diagonal recurrent
+    weights R per head), implemented as lax.scan over time with the
+    exp-input-gate + stabilizer formulation of the xLSTM paper.
+  * Mamba — selective SSM; chunked associative scan over time so the
+    materialized (B, chunk, d_inner, N) decay tensor stays VMEM-friendly.
+
+Decode steps are single recurrent updates (state pytrees, no KV cache).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers
+from repro.models.layers import Params
+
+
+# ---------------------------------------------------------------------------
+# Depthwise causal conv (shared by mLSTM and Mamba)
+# ---------------------------------------------------------------------------
+
+def init_conv(key, channels: int, width: int) -> Params:
+    return {"w": jax.random.normal(key, (width, channels), jnp.float32) * (width**-0.5)}
+
+
+def causal_conv(p: Params, x: jax.Array) -> jax.Array:
+    """x: (B, S, C) -> (B, S, C), depthwise causal conv of width W."""
+    w = p["w"].astype(x.dtype)  # (W, C)
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    )
+    return out
+
+
+def causal_conv_step(p: Params, state: jax.Array, x1: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """state: (B, W-1, C) trailing inputs; x1: (B, 1, C) -> (new_state, y1)."""
+    w = p["w"].astype(x1.dtype)
+    window = jnp.concatenate([state, x1], axis=1)  # (B, W, C)
+    y = jnp.einsum("bwc,wc->bc", window, w)[:, None, :]
+    return window[:, 1:], y
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM), chunkwise-parallel
+# ---------------------------------------------------------------------------
+
+def init_mlstm_block(key, cfg: ArchConfig) -> Params:
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": layers.init_norm(cfg.d_model),
+        "w_up": layers._dense_init(ks[0], cfg.d_model, 2 * di),
+        "conv": init_conv(ks[1], di, s.conv_width),
+        "wq": layers._dense_init(ks[2], di, di),
+        "wk": layers._dense_init(ks[3], di, di),
+        "wv": layers._dense_init(ks[4], di, di),
+        "w_if": layers._dense_init(ks[5], cfg.d_model, 2 * cfg.n_heads),
+        "w_down": layers._dense_init(ks[6], di, cfg.d_model),
+    }
+
+
+def _mlstm_chunk(q, k, v, li, lf, state, norm):
+    """One chunk of the mLSTM recurrence.
+
+    q,k,v: (B, P, H, dh); li/lf: (B, P, H) log input/forget gates (<= 0).
+    state: (B, H, dh, dh) matrix memory; norm: (B, H, dh) normalizer.
+    Returns (y (B,P,H,dh), new_state, new_norm).
+    """
+    p = q.shape[1]
+    cum = jnp.cumsum(lf, axis=1)  # (B, P, H) inclusive log decay products
+    # intra-chunk: decay-masked attention
+    # D[t, j] = exp(cum_t - cum_j + li_j) for j <= t
+    logd = cum[:, :, None, :] - cum[:, None, :, :] + li[:, None, :, :]  # (B,P,P,H)
+    tri = jnp.tril(jnp.ones((p, p), jnp.bool_))
+    d = jnp.where(tri[None, :, :, None], jnp.exp(logd), 0.0)
+    scores = jnp.einsum("bthd,bjhd->btjh", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * d
+    y_intra = jnp.einsum("btjh,bjhd->bthd", scores, v.astype(jnp.float32))
+    # normalizer: the n state accumulates i_j k_j, so the intra-chunk term of
+    # q_t . n_t is sum_j D_tj (q_t . k_j) — exactly the row sums of `scores`.
+    n_intra = jnp.sum(scores, axis=2)  # (B, P, H)
+    # inter-chunk: decayed readout of carried state
+    decay_t = jnp.exp(cum)  # (B, P, H)
+    y_inter = jnp.einsum(
+        "bthd,bhde->bthe", q.astype(jnp.float32) * decay_t[..., None], state
+    )
+    n_inter = jnp.einsum("bthd,bhd->bth", q.astype(jnp.float32) * decay_t[..., None], norm)
+    denom = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)
+    y = (y_intra + y_inter) / denom[..., None]
+    # state update
+    total = cum[:, -1][:, None]  # (B, 1, H) full-chunk log decay
+    w = jnp.exp(total - cum + li)  # (B, P, H): decay from step j to chunk end
+    kv = jnp.einsum("bjhd,bjhe->bhde", k.astype(jnp.float32) * w[..., None], v.astype(jnp.float32))
+    new_state = jnp.exp(total[:, 0])[..., None, None] * state + kv
+    new_norm = jnp.exp(total[:, 0])[..., None] * norm + jnp.sum(
+        k.astype(jnp.float32) * w[..., None], axis=1
+    )
+    return y, new_state, new_norm
+
+
+def mlstm_cell(q, k, v, i_logit, f_logit, state, norm, chunk: int):
+    """Full-sequence chunkwise mLSTM.  q,k,v: (B,S,H,dh); gates: (B,S,H)."""
+    b, s, h, dh = q.shape
+    q = q * (dh**-0.5)
+    li = jax.nn.log_sigmoid(i_logit.astype(jnp.float32))
+    lf = jax.nn.log_sigmoid(f_logit.astype(jnp.float32))
+    # pad the tail to a chunk multiple with identity steps: input gate 0
+    # (li = -inf: contributes nothing) and forget gate 1 (lf = 0: no decay),
+    # then slice the outputs back — exact for state and outputs.
+    pad = (-s) % chunk
+    if pad:
+        padq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, padq) for t in (q, k, v))
+        li = jnp.pad(li, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        lf = jnp.pad(lf, ((0, 0), (0, pad), (0, 0)))
+    s_orig, s = s, s + pad
+    nchunk = s // chunk
+
+    def step(carry, xs):
+        st, nm = carry
+        qc, kc, vc, lic, lfc = xs
+        y, st, nm = _mlstm_chunk(qc, kc, vc, lic, lfc, st, nm)
+        return (st, nm), y
+
+    def split(t):
+        return t.reshape(b, nchunk, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    (state, norm), ys = jax.lax.scan(
+        step, (state, norm), (split(q), split(k), split(v), split(li), split(lf))
+    )
+    y = ys.swapaxes(0, 1).reshape(b, s, h, dh)[:, :s_orig]
+    return y, state, norm
+
+
+def mlstm_block_fwd(
+    p: Params, cfg: ArchConfig, x, *, q_offset=0, return_cache=False, layer_flag=None, **_,
+):
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    h = cfg.n_heads
+    di = s_cfg.expand * d
+    dh = di // h
+    dtype = x.dtype
+
+    xn = layers.rmsnorm(p["ln"], x)
+    u = xn @ p["w_up"].astype(dtype)
+    u_c, u_g = u[..., :di], u[..., di:]
+    c = jax.nn.silu(causal_conv(p["conv"], u_c))
+    q = (c @ p["wq"].astype(dtype)).reshape(b, s, h, dh)
+    k = (c @ p["wk"].astype(dtype)).reshape(b, s, h, dh)
+    v = (u_c @ p["wv"].astype(dtype)).reshape(b, s, h, dh)
+    gates = xn @ p["w_if"].astype(dtype)
+    i_logit, f_logit = gates[..., :h], gates[..., h:]
+
+    state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    norm0 = jnp.zeros((b, h, dh), jnp.float32)
+    y, state, norm = mlstm_cell(q, k, v, i_logit, f_logit, state0, norm0, s_cfg.chunk_size)
+    out = (y.reshape(b, s, di).astype(dtype) * jax.nn.silu(u_g)) @ p["w_down"].astype(dtype)
+    cache = None
+    if return_cache:
+        cache = {"state": state, "norm": norm, "conv": u_c[:, -(s_cfg.conv_width - 1) :, :]}
+    return x + out, cache
+
+
+def mlstm_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, layer_flag=None, **_):
+    s_cfg = cfg.ssm
+    b, _, d = x.shape
+    h = cfg.n_heads
+    di = s_cfg.expand * d
+    dh = di // h
+    dtype = x.dtype
+
+    xn = layers.rmsnorm(p["ln"], x)
+    u = xn @ p["w_up"].astype(dtype)
+    u_c, u_g = u[..., :di], u[..., di:]
+    conv_state, c = causal_conv_step(p["conv"], cache["conv"], u_c)
+    c = jax.nn.silu(c)
+    q = (c @ p["wq"].astype(dtype)).reshape(b, h, dh) * (dh**-0.5)
+    k = (c @ p["wk"].astype(dtype)).reshape(b, h, dh)
+    v = (u_c @ p["wv"].astype(dtype)).reshape(b, h, dh)
+    gates = xn @ p["w_if"].astype(dtype)
+    i_g = jax.nn.sigmoid(gates[..., :h].astype(jnp.float32)).reshape(b, h)
+    f_g = jax.nn.sigmoid(gates[..., h:].astype(jnp.float32)).reshape(b, h)
+
+    state = f_g[..., None, None] * cache["state"] + i_g[..., None, None] * jnp.einsum(
+        "bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    norm = f_g[..., None] * cache["norm"] + i_g[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), state)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), norm)), 1.0)
+    y = (num / den[..., None]).reshape(b, 1, di).astype(dtype)
+    out = (y * jax.nn.silu(u_g)) @ p["w_down"].astype(dtype)
+    return x + out, {"state": state, "norm": norm, "conv": conv_state}
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int, dtype):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    dh = di // cfg.n_heads
+    return {
+        "state": jnp.zeros((batch, cfg.n_heads, dh, dh), jnp.float32),
+        "norm": jnp.zeros((batch, cfg.n_heads, dh), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (scalar-memory LSTM with exp gating + stabilizer), sequential
+# ---------------------------------------------------------------------------
+
+def init_slstm_block(key, cfg: ArchConfig) -> Params:
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": layers.init_norm(cfg.d_model),
+        "w": layers._dense_init(ks[0], cfg.d_model, 4 * cfg.d_model),  # i,f,z,o
+        "r": jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32) * (dh**-0.5),
+        "w_out": layers._dense_init(ks[2], cfg.d_model, cfg.d_model),
+    }
+
+
+def _slstm_step(p: Params, cfg: ArchConfig, wx_t, hs):
+    """wx_t: (B, H, 4*dh) input contribution; hs: state dict."""
+    h_prev, c_prev, n_prev, m_prev = hs["h"], hs["c"], hs["n"], hs["m"]
+    rh = jnp.einsum("bhd,hde->bhe", h_prev, p["r"])  # (B, H, 4*dh)
+    g = (wx_t + rh).astype(jnp.float32)
+    dh = g.shape[-1] // 4
+    ig, fg, zg, og = g[..., :dh], g[..., dh : 2 * dh], g[..., 2 * dh : 3 * dh], g[..., 3 * dh :]
+    lf = jax.nn.log_sigmoid(fg)
+    m_t = jnp.maximum(lf + m_prev, ig)
+    i_p = jnp.exp(ig - m_t)
+    f_p = jnp.exp(lf + m_prev - m_t)
+    c_t = f_p * c_prev + i_p * jnp.tanh(zg)
+    n_t = f_p * n_prev + i_p
+    h_t = jax.nn.sigmoid(og) * c_t / jnp.maximum(n_t, 1e-6)
+    return {"h": h_t, "c": c_t, "n": n_t, "m": m_t}
+
+
+def slstm_block_fwd(
+    p: Params, cfg: ArchConfig, x, *, q_offset=0, return_cache=False, layer_flag=None, **_,
+):
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    dtype = x.dtype
+    xn = layers.rmsnorm(p["ln"], x)
+    wx = (xn @ p["w"].astype(dtype)).reshape(b, s, h, 4 * dh)
+
+    hs0 = {
+        "h": jnp.zeros((b, h, dh), jnp.float32),
+        "c": jnp.zeros((b, h, dh), jnp.float32),
+        "n": jnp.zeros((b, h, dh), jnp.float32),
+        "m": jnp.full((b, h, dh), -1e30, jnp.float32),
+    }
+
+    def step(hs, wx_t):
+        hs = _slstm_step(p, cfg, wx_t, hs)
+        return hs, hs["h"]
+
+    hs, ys = jax.lax.scan(step, hs0, wx.swapaxes(0, 1))
+    y = ys.swapaxes(0, 1).reshape(b, s, d).astype(dtype)
+    out = y @ p["w_out"].astype(dtype)
+    cache = hs if return_cache else None
+    return x + out, cache
+
+
+def slstm_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, layer_flag=None, **_):
+    b, _, d = x.shape
+    h = cfg.n_heads
+    dh = d // h
+    dtype = x.dtype
+    xn = layers.rmsnorm(p["ln"], x)
+    wx = (xn @ p["w"].astype(dtype)).reshape(b, h, 4 * dh)
+    hs = _slstm_step(p, cfg, wx, cache)
+    y = hs["h"].reshape(b, 1, d).astype(dtype)
+    out = y @ p["w_out"].astype(dtype)
+    return x + out, hs
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int, dtype):
+    h = cfg.n_heads
+    dh = cfg.d_model // h
+    z = lambda: jnp.zeros((batch, h, dh), jnp.float32)
+    return {"h": z(), "c": z(), "n": z(), "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (Hymba's SSM heads)
+# ---------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ArchConfig) -> Params:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    n = s.state_size
+    dt_rank = max(1, d // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": layers._dense_init(ks[0], d, 2 * di),
+        "conv": init_conv(ks[1], di, s.conv_width),
+        "x_proj": layers._dense_init(ks[2], di, dt_rank + 2 * n),
+        "dt_proj": layers._dense_init(ks[3], dt_rank, di),
+        "dt_bias": jnp.log(jnp.exp(jnp.linspace(1e-3, 1e-1, di)) - 1.0).astype(jnp.float32),
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32), (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "out_proj": layers._dense_init(ks[4], di, d),
+    }
+
+
+def _mamba_scan_chunked(a_bar, bx, state, chunk: int):
+    """h_t = a_bar_t * h_{t-1} + bx_t via chunked associative scan.
+
+    a_bar, bx: (B, S, di, N) — materialized per *chunk* only.
+    state: (B, di, N).  Returns (hs (B,S,di,N), final state).
+    """
+    b, s, di, n = a_bar.shape
+    # pad the tail with identity steps (a=1, b=0): state passes through
+    pad = (-s) % chunk
+    if pad:
+        a_bar = jnp.pad(a_bar, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s_orig, s = s, s + pad
+    nchunk = s // chunk
+
+    def step(h0, xs):
+        ac, bc = xs  # (B, P, di, N)
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+        a_acc, b_acc = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        hs = a_acc * h0[:, None] + b_acc
+        return hs[:, -1], hs
+
+    split = lambda t: t.reshape(b, nchunk, chunk, di, n).swapaxes(0, 1)
+    state, ys = jax.lax.scan(step, state, (split(a_bar), split(bx)))
+    return ys.swapaxes(0, 1).reshape(b, s, di, n)[:, :s_orig], state
+
+
+def mamba_fwd(p: Params, cfg: ArchConfig, xn, *, return_cache=False):
+    """xn: (B, S, d) pre-normed input -> (y, cache|None)."""
+    s_cfg = cfg.ssm
+    b, s, d = xn.shape
+    di = s_cfg.expand * d
+    n = s_cfg.state_size
+    dtype = xn.dtype
+
+    u = xn @ p["in_proj"].astype(dtype)
+    xc, z = u[..., :di], u[..., di:]
+    conv_tail = xc[:, -(s_cfg.conv_width - 1) :, :]
+    xc = jax.nn.silu(causal_conv(p["conv"], xc))
+
+    proj = xc @ p["x_proj"].astype(dtype)
+    dt_rank = proj.shape[-1] - 2 * n
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj"].astype(dtype) + p["dt_bias"].astype(dtype)
+    ).astype(jnp.float32)  # (B,S,di)
+    b_in = proj[..., dt_rank : dt_rank + n].astype(jnp.float32)  # (B,S,N)
+    c_out = proj[..., dt_rank + n :].astype(jnp.float32)  # (B,S,N)
+
+    a = -jnp.exp(p["a_log"])  # (di, N)
+    a_bar = jnp.exp(dt[..., None] * a[None, None])  # (B,S,di,N)
+    bx = (dt * xc.astype(jnp.float32))[..., None] * b_in[:, :, None, :]  # (B,S,di,N)
+
+    state0 = jnp.zeros((b, di, n), jnp.float32)
+    hs, state = _mamba_scan_chunked(a_bar, bx, state0, s_cfg.chunk_size)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, c_out) + p["d_skip"][None, None] * xc.astype(jnp.float32)
+    y = (y.astype(dtype) * jax.nn.silu(z)) @ p["out_proj"].astype(dtype)
+    cache = {"state": state, "conv": conv_tail} if return_cache else None
+    return y, cache
+
+
+def mamba_step(p: Params, cfg: ArchConfig, xn, cache):
+    """xn: (B, 1, d) -> (y, cache)."""
+    s_cfg = cfg.ssm
+    b, _, d = xn.shape
+    di = s_cfg.expand * d
+    n = s_cfg.state_size
+    dtype = xn.dtype
+
+    u = xn @ p["in_proj"].astype(dtype)
+    xc, z = u[..., :di], u[..., di:]
+    conv_state, xc1 = causal_conv_step(p["conv"], cache["conv"], xc)
+    xc1 = jax.nn.silu(xc1)  # (B,1,di)
+
+    proj = xc1 @ p["x_proj"].astype(dtype)
+    dt_rank = proj.shape[-1] - 2 * n
+    dt = jax.nn.softplus(
+        proj[..., :dt_rank] @ p["dt_proj"].astype(dtype) + p["dt_bias"].astype(dtype)
+    ).astype(jnp.float32)[:, 0]  # (B,di)
+    b_in = proj[:, 0, dt_rank : dt_rank + n].astype(jnp.float32)  # (B,N)
+    c_out = proj[:, 0, dt_rank + n :].astype(jnp.float32)  # (B,N)
+
+    a = -jnp.exp(p["a_log"])
+    a_bar = jnp.exp(dt[..., None] * a[None])  # (B,di,N)
+    bx = (dt * xc1[:, 0].astype(jnp.float32))[..., None] * b_in[:, None, :]
+    state = a_bar * cache["state"] + bx
+    y = jnp.einsum("bdn,bn->bd", state, c_out) + p["d_skip"][None] * xc1[:, 0].astype(jnp.float32)
+    y = (y[:, None].astype(dtype) * jax.nn.silu(z)) @ p["out_proj"].astype(dtype)
+    return y, {"state": state, "conv": conv_state}
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "state": jnp.zeros((batch, di, s.state_size), jnp.float32),
+        "conv": jnp.zeros((batch, s.conv_width - 1, di), dtype),
+    }

@@ -1,0 +1,247 @@
+"""Decoder-only LM assembly over heterogeneous block patterns.
+
+``cfg.layer_kinds()`` expands the arch's block pattern to one kind per
+layer; consecutive identical kinds form *segments*, and each segment is
+executed with ``jax.lax.scan`` over stacked parameters (compact HLO for
+80-layer models).  Segment boundaries are exactly where block kind — and
+therefore cache structure — changes (e.g. Hymba's 3 global-attention layers
+split the 29 SWA layers into separate scans so SWA caches stay
+window-bounded).
+
+Interface (used by launch/, runtime/, examples/):
+  init(key, cfg)                                  -> params
+  forward(params, cfg, batch)                     -> (logits, aux_loss)
+  prefill(params, cfg, batch)                     -> (logits, cache)
+  decode_step(params, cfg, cache, token, pos)     -> (logits, cache)
+  init_cache(cfg, batch, seq_len, dtype)          -> cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import blocks, hybrid, layers, mla, moe, ssm
+from repro.models.layers import Params
+
+
+# ---------------------------------------------------------------------------
+# Block registry: kind -> behaviour
+# ---------------------------------------------------------------------------
+
+class _Kind:
+    def __init__(self, init, fwd, step, init_cache, has_aux=False, attn_kind="causal"):
+        self.init = init
+        self.fwd = fwd
+        self.step = step
+        self.init_cache = init_cache
+        self.has_aux = has_aux
+        self.attn_kind = attn_kind  # "causal" | "swa" | None
+
+
+def _attn_cache(cfg, batch, seq_len, dtype, *, kind):
+    return blocks.init_attn_cache(cfg, batch, seq_len, dtype)
+
+
+KINDS: dict[str, _Kind] = {
+    "attn": _Kind(blocks.init_attn_block, blocks.attn_block_fwd, blocks.attn_block_step,
+                  _attn_cache),
+    "swa": _Kind(blocks.init_attn_block, blocks.attn_block_fwd, blocks.attn_block_step,
+                 _attn_cache, attn_kind="swa"),
+    "moe": _Kind(moe.init_moe_block, moe.moe_block_fwd, moe.moe_block_step,
+                 _attn_cache, has_aux=True),
+    "mla_moe": _Kind(mla.init_mla_moe_block, mla.mla_moe_block_fwd, mla.mla_moe_block_step,
+                     lambda cfg, b, s, dt, *, kind: mla.init_mla_cache(cfg, b, s, dt),
+                     has_aux=True),
+    "mlstm": _Kind(ssm.init_mlstm_block, ssm.mlstm_block_fwd, ssm.mlstm_block_step,
+                   lambda cfg, b, s, dt, *, kind: ssm.init_mlstm_cache(cfg, b, dt)),
+    "slstm": _Kind(ssm.init_slstm_block, ssm.slstm_block_fwd, ssm.slstm_block_step,
+                   lambda cfg, b, s, dt, *, kind: ssm.init_slstm_cache(cfg, b, dt)),
+    "hymba_swa": _Kind(hybrid.init_hymba_block, hybrid.hymba_block_fwd, hybrid.hymba_block_step,
+                       lambda cfg, b, s, dt, *, kind: hybrid.init_hymba_cache(cfg, b, s, dt, kind=kind),
+                       attn_kind="swa"),
+    "hymba_global": _Kind(hybrid.init_hymba_block, hybrid.hymba_block_fwd, hybrid.hymba_block_step,
+                          lambda cfg, b, s, dt, *, kind: hybrid.init_hymba_cache(cfg, b, s, dt, kind=kind),
+                          attn_kind="causal"),
+}
+
+
+def segments_of(cfg: ArchConfig) -> list[tuple[str, int]]:
+    """Group layer kinds into maximal homogeneous runs."""
+    runs: list[tuple[str, int]] = []
+    for kind in cfg.layer_kinds():
+        if runs and runs[-1][0] == kind:
+            runs[-1] = (kind, runs[-1][1] + 1)
+        else:
+            runs.append((kind, 1))
+    return runs
+
+
+def _fwd_kwargs(cfg: ArchConfig, kind: str) -> dict:
+    k = KINDS[kind]
+    kw: dict[str, Any] = {"kind": k.attn_kind}
+    if k.attn_kind == "swa":
+        kw["window"] = cfg.attn_window
+    return kw
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: ArchConfig) -> Params:
+    segs = segments_of(cfg)
+    keys = jax.random.split(key, len(segs) + 3)
+    params: Params = {"embed": layers.init_embedding(keys[0], cfg.vocab_size, cfg.d_model)}
+    seg_params = []
+    for i, (kind, count) in enumerate(segs):
+        layer_keys = jax.random.split(keys[i + 1], count)
+        seg_params.append(jax.vmap(lambda k: KINDS[kind].init(k, cfg))(layer_keys))
+    params["segments"] = seg_params
+    params["final_norm"] = layers.init_norm(cfg.d_model)
+    if not cfg.tie_embeddings:
+        params["head"] = layers.init_lm_head(keys[-1], cfg.d_model, cfg.vocab_size)
+    if cfg.n_meta_tokens:
+        params["meta"] = jax.random.normal(
+            keys[-2], (cfg.n_meta_tokens, cfg.d_model), jnp.float32
+        ) * 0.02
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _embed_inputs(params: Params, cfg: ArchConfig, batch: dict, dtype) -> jax.Array:
+    x = layers.embed(params["embed"], batch["tokens"], dtype)
+    if cfg.stub_prefix_len:
+        # modality frontend stub: precomputed patch/frame embeddings occupy
+        # the first `stub_prefix_len` positions (DESIGN.md §4).
+        p = cfg.stub_prefix_len
+        prefix = batch["prefix_embeds"].astype(dtype)
+        x = jnp.concatenate([prefix, x[:, p:]], axis=1)
+    if cfg.d_model and getattr(cfg, "embed_scale", False):
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    if cfg.n_meta_tokens:
+        b = x.shape[0]
+        meta = jnp.broadcast_to(
+            params["meta"].astype(dtype)[None], (b, cfg.n_meta_tokens, cfg.d_model)
+        )
+        x = jnp.concatenate([meta, x], axis=1)
+    return x
+
+
+_REMAT_POLICIES = {
+    "full": lambda: jax.checkpoint_policies.nothing_saveable,
+    "dots": lambda: jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def _run_segments(
+    params: Params, cfg: ArchConfig, x: jax.Array, *, q_offset=0, return_cache: bool,
+    remat: str = "none",
+):
+    aux = jnp.zeros((), jnp.float32)
+    caches = []
+    for (kind, _), p_stack in zip(segments_of(cfg), params["segments"]):
+        spec = KINDS[kind]
+        kw = _fwd_kwargs(cfg, kind)
+
+        def layer(p_layer, xc, _spec=spec, _kw=kw):
+            return _spec.fwd(p_layer, cfg, xc, q_offset=q_offset, return_cache=return_cache, **_kw)
+
+        if remat != "none":
+            # per-layer remat inside the scan body: activation memory becomes
+            # O(n_layers * saved) instead of O(n_layers * all intermediates)
+            layer = jax.checkpoint(layer, policy=_REMAT_POLICIES[remat]())
+
+        def body(carry, p_layer, _spec=spec, _layer=layer):
+            xc, auxc = carry
+            out = _layer(p_layer, xc)
+            if _spec.has_aux:
+                xc, cache, aux_l = out
+                auxc = auxc + aux_l
+            else:
+                xc, cache = out
+            return (xc, auxc), cache
+
+        (x, aux), seg_cache = jax.lax.scan(body, (x, aux), p_stack)
+        caches.append(seg_cache)
+    return x, aux, caches if return_cache else None
+
+
+def _logits(params: Params, cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    x = layers.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        return layers.unembed(params["embed"], x)
+    return layers.lm_head(params["head"], x)
+
+
+def forward(
+    params: Params, cfg: ArchConfig, batch: dict, *, remat: str = "none"
+) -> tuple[jax.Array, jax.Array]:
+    """batch: {"tokens": (B, S) int32, ["prefix_embeds": (B, P, d)]}.
+
+    Returns (logits (B, S, V) f32, aux_loss scalar).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(params, cfg, batch, dtype)
+    x, aux, _ = _run_segments(params, cfg, x, return_cache=False, remat=remat)
+    if cfg.n_meta_tokens:
+        x = x[:, cfg.n_meta_tokens :]
+    return _logits(params, cfg, x), aux
+
+
+def prefill(params: Params, cfg: ArchConfig, batch: dict) -> tuple[jax.Array, list]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = _embed_inputs(params, cfg, batch, dtype)
+    x, _, caches = _run_segments(params, cfg, x, return_cache=True)
+    if cfg.n_meta_tokens:
+        x = x[:, cfg.n_meta_tokens :]
+    return _logits(params, cfg, x[:, -1:]), caches
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=None) -> list:
+    """Zero cache for decode; seq_len includes meta tokens if any."""
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    caches = []
+    for kind, count in segments_of(cfg):
+        one = KINDS[kind].init_cache(cfg, batch, seq_len, dtype, kind=kind)
+        caches.append(jax.tree.map(lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one))
+    return caches
+
+
+def decode_step(
+    params: Params, cfg: ArchConfig, caches: list, token: jax.Array, pos: jax.Array
+) -> tuple[jax.Array, list]:
+    """token: (B, 1) int32; pos: scalar int32 absolute position (excl. meta).
+
+    Returns (logits (B, 1, V), new caches).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = layers.embed(params["embed"], token, dtype)
+    if getattr(cfg, "embed_scale", False):
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    pos_eff = pos + cfg.n_meta_tokens
+
+    new_caches = []
+    for (kind, _), p_stack, c_stack in zip(segments_of(cfg), params["segments"], caches):
+        spec = KINDS[kind]
+        kw = _fwd_kwargs(cfg, kind)
+        kw.pop("window", None)  # decode windows are baked into cache length
+
+        def body(x_c, pc, _spec=spec, _kw=kw):
+            p_layer, c_layer = pc
+            x_new, c_new = _spec.step(p_layer, cfg, x_c, c_layer, pos_eff, **_kw)
+            return x_new, c_new
+
+        x, seg_cache = jax.lax.scan(body, x, (p_stack, c_stack))
+        new_caches.append(seg_cache)
+    return _logits(params, cfg, x), new_caches

@@ -1,0 +1,212 @@
+"""Name-rule param sharding with divisibility fallback (MaxText-style).
+
+``param_sharding(params, mesh)`` walks a params pytree and assigns each leaf
+a PartitionSpec from an ordered rule table keyed on the parameter's path.
+Rules encode the Megatron-canonical tensor-parallel layout (column-parallel
+up-projections, row-parallel down-projections, expert-parallel MoE); every
+rule is checked for divisibility against the mesh axis size and degrades
+through a fallback chain (alternate axis -> replicate), which is how e.g.
+gemma-2b's 8 query heads survive a 16-way model axis (the head_dim=256 axis
+shards instead via the fused (heads*head_dim) projection column).
+
+Stacked layer parameters (under segments/encoder/decoder) get a leading
+``None`` for the scan axis automatically.
+
+``fsdp=True`` additionally shards the largest still-unsharded axis of big
+params over the "data" axis (ZeRO-3 style) — a §Perf memory-term lever, off
+in the paper-faithful baseline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Ordered (regex, spec) rule table.  Spec entries name the *intended* mesh
+# axis per tensor dim (ignoring the stacked-layer dim, handled separately);
+# `None` means replicated.  Divisibility is enforced at resolution time.
+_RULES: list[tuple[str, tuple[Optional[str], ...]]] = [
+    # embeddings / unembeddings: shard the vocab axis
+    (r"embed/table$", ("model", None)),
+    (r"head/w$", (None, "model")),
+    (r"meta$", (None, None)),
+    # attention: column-parallel QKV, row-parallel output
+    (r"(attn|self|cross)/wq$", (None, "model")),
+    (r"(attn|self|cross)/wk$", (None, "model")),
+    (r"(attn|self|cross)/wv$", (None, "model")),
+    (r"(attn|self|cross)/wo$", ("model", None)),
+    # MLA: the low-rank down-projections are row-parallel (input dim sharded;
+    # the partial-sum all-reduce output is only rank-sized and cheap) so the
+    # 60-layer latent projections don't replicate ~GBs per device.
+    (r"mla/wq_a$", ("model", None)),
+    (r"mla/wq_b$", (None, "model")),
+    (r"mla/wkv_a$", ("model", None)),
+    (r"mla/wk_b$", (None, "model")),
+    (r"mla/wv_b$", (None, "model")),
+    (r"mla/wo$", ("model", None)),
+    # dense MLP / shared experts
+    (r"(mlp|shared)/wi_gate$", (None, "model")),
+    (r"(mlp|shared)/wi_up$", (None, "model")),
+    (r"(mlp|shared)/wo$", ("model", None)),
+    # routed experts: expert-parallel, fallback chain handles E % axis != 0
+    (r"moe/wi_gate$", ("model", None, None)),
+    (r"moe/wi_up$", ("model", None, None)),
+    (r"moe/wo$", ("model", None, None)),
+    (r"moe/router$", ("model", None)),  # row-parallel; (T, E) partial-sum AR is tiny
+    # xLSTM / Mamba projections
+    (r"w_up$", (None, "model")),
+    (r"w_down$", ("model", None)),
+    (r"(wq|wk|wv)$", (None, "model")),
+    (r"in_proj$", (None, "model")),
+    (r"out_proj$", ("model", None)),
+    (r"x_proj$", ("model", None)),
+    (r"dt_proj$", (None, "model")),
+    (r"a_log$", ("model", None)),
+    (r"d_skip$", ("model",)),
+    (r"conv/w$", (None, "model")),
+    (r"w_if$", (None, None)),
+    (r"src_proj/w$", (None, "model")),
+    (r"/w$", (None, "model")),  # generic dense (sLSTM fused gates, ...)
+    (r"/r$", (None, None, "model")),
+    (r"w_out$", ("model", None)),
+    (r"dt_bias$", ("model",)),
+]
+
+_STACKED = re.compile(r"(^|/)(segments/\d+|encoder|decoder)(/|$)")
+
+# MoE expert-parallel fallback: if E doesn't divide the model axis, shard the
+# expert-ffn dim instead (TP within each expert) — DESIGN.md §5 (qwen 60e).
+_MOE_FALLBACKS = {
+    "moe/wi_gate": (None, None, "model"),
+    "moe/wi_up": (None, None, "model"),
+    "moe/wo": (None, "model", None),
+}
+
+
+def _path_name(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _fits(shape: tuple[int, ...], spec: tuple[Optional[str], ...], axis_sizes) -> bool:
+    for dim, ax in zip(shape, spec):
+        if ax is not None and dim % axis_sizes[ax] != 0:
+            return False
+    return True
+
+
+def _resolve(
+    name: str, shape: tuple[int, ...], axis_sizes: dict[str, int], *, fsdp: bool, fsdp_min: int
+) -> P:
+    stacked = bool(_STACKED.search(name))
+    core_shape = shape[1:] if stacked else shape
+    spec: tuple[Optional[str], ...] = tuple(None for _ in core_shape)
+    for pat, rule in _RULES:
+        if re.search(pat, name) and len(rule) == len(core_shape):
+            candidates = [rule]
+            for key, fb in _MOE_FALLBACKS.items():
+                if name.endswith(key.split("/")[-1]) and key.split("/")[0] in name:
+                    candidates.append(fb)
+            # axis-swap fallback: if the intended dim is indivisible (e.g. a
+            # 32001-row embedding on a 16-way axis), move the mesh axis to
+            # another dim before giving up and replicating.
+            used = [a for a in rule if a is not None]
+            if len(used) == 1:
+                ax = used[0]
+                j = rule.index(ax)
+                for i in range(len(core_shape)):
+                    if i != j and rule[i] is None:
+                        cand = list(rule)
+                        cand[i], cand[j] = ax, None
+                        candidates.append(tuple(cand))
+            # generic fallback: drop the sharded axis entirely
+            candidates.append(tuple(None for _ in core_shape))
+            for cand in candidates:
+                if _fits(core_shape, cand, axis_sizes):
+                    spec = cand
+                    break
+            break
+    spec = list(spec)
+    if fsdp and "data" in axis_sizes and int(np.prod(core_shape)) >= fsdp_min:
+        # ZeRO-3: shard the largest unsharded dim over "data"
+        order = sorted(range(len(core_shape)), key=lambda i: -core_shape[i])
+        for i in order:
+            if spec[i] is None and core_shape[i] % axis_sizes["data"] == 0:
+                spec[i] = "data"
+                break
+    if stacked:
+        spec = [None, *spec]
+    return P(*spec)
+
+
+def param_pspecs(params: Any, mesh: Mesh, *, fsdp: bool = False, fsdp_min: int = 2**16):
+    """PartitionSpec pytree matching ``params``."""
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def spec_for(path, leaf):
+        return _resolve(_path_name(path), tuple(leaf.shape), axis_sizes, fsdp=fsdp, fsdp_min=fsdp_min)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    return jax.tree_util.tree_unflatten(treedef, [spec_for(p, l) for p, l in flat])
+
+
+def param_shardings(params: Any, mesh: Mesh, *, fsdp: bool = False):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), param_pspecs(params, mesh, fsdp=fsdp)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation / batch shardings
+# ---------------------------------------------------------------------------
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes used for data parallelism (pod folds into data)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def data_spec(mesh: Mesh, batch: int, ndim: int) -> P:
+    """Spec for a (B, ...) input: batch over pod+data when divisible."""
+    axes = batch_axes(mesh)
+    size = int(np.prod([dict(zip(mesh.axis_names, mesh.devices.shape))[a] for a in axes]))
+    if batch % size == 0:
+        return P(axes, *(None,) * (ndim - 1))
+    return P(*(None,) * ndim)
+
+
+def cache_pspec(mesh: Mesh, shape: tuple[int, ...], axis_sizes: dict[str, int]) -> P:
+    """Heuristic KV/state-cache sharding.
+
+    Preference order: batch dim over pod+data; a heads-like dim over model;
+    for unsharded-batch long-context caches, the sequence dim over data.
+    shape layouts seen here: (L, B, H, S, D), (L, B, S, r), (B, H, D, D)...
+    """
+    axes = batch_axes(mesh)
+    dp = int(np.prod([axis_sizes[a] for a in axes]))
+    spec: list = [None] * len(shape)
+    # find batch dim: first dim (or second when stacked-layer leading dim).
+    # stacked caches always have ndim >= 3 with dim0 = n_layers.
+    bdim = 1 if len(shape) >= 3 else 0
+    sharded_batch = False
+    if shape[bdim] % dp == 0:
+        spec[bdim] = axes if len(axes) > 1 else axes[0]
+        sharded_batch = True
+    # model axis: largest remaining dim divisible by model size
+    m = axis_sizes.get("model", 1)
+    order = sorted(range(bdim + 1, len(shape)), key=lambda i: -shape[i])
+    for i in order:
+        if spec[i] is None and shape[i] % m == 0:
+            spec[i] = "model"
+            break
+    if not sharded_batch:
+        # long-context single-request: shard the longest remaining dim on data
+        d = axis_sizes.get("data", 1)
+        order = sorted(range(bdim + 1, len(shape)), key=lambda i: -shape[i])
+        for i in order:
+            if spec[i] is None and shape[i] % d == 0:
+                spec[i] = "data"
+                break
+    return P(*spec)

@@ -1,0 +1,10 @@
+from repro.runtime.loop import TrainLoop, TrainLoopConfig
+from repro.runtime.fault import FaultPolicy, StragglerPolicy, run_with_retries
+
+__all__ = [
+    "TrainLoop",
+    "TrainLoopConfig",
+    "FaultPolicy",
+    "StragglerPolicy",
+    "run_with_retries",
+]

@@ -1,0 +1,88 @@
+"""Fault tolerance and straggler mitigation policies.
+
+At 1000+-node scale the framework must survive (a) hard node failures —
+checkpoint/restart, (b) transient step failures — bounded retry, and (c)
+stragglers — the synchronous-with-spares policy below.  On real TPU pods
+(a) is signalled by the runtime (jax.distributed heartbeats / NCCL-style
+timeouts); this container has one process, so tests inject failures via the
+``failure_hook`` and assert the recovery behaviour (tests/test_runtime.py).
+
+``StragglerPolicy`` implements the standard large-scale recipe:
+
+* per-step wall-time EWMA; a step slower than ``ewma * tolerance`` marks
+  the step (and in a multi-host run, the slow host) as straggling;
+* after ``demote_after`` consecutive marks, the policy asks the cluster
+  layer to swap the slow host for a hot spare (callback; here recorded in
+  ``events``) and the data pipeline's (step, host) keying makes the swap
+  bit-exact — the replacement replays the same shard.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    max_retries: int = 3
+    backoff_s: float = 0.0  # exponential base; 0 for tests
+    restore_on_failure: bool = True  # reload last checkpoint before retrying
+
+
+def run_with_retries(
+    fn: Callable[[], Any],
+    policy: FaultPolicy,
+    *,
+    on_failure: Optional[Callable[[int, BaseException], None]] = None,
+) -> Any:
+    """Run ``fn`` with bounded retries; ``on_failure(attempt, err)`` between tries."""
+    last: Optional[BaseException] = None
+    for attempt in range(policy.max_retries + 1):
+        try:
+            return fn()
+        except Exception as e:  # noqa: BLE001 — deliberate catch-all boundary
+            last = e
+            if attempt == policy.max_retries:
+                break
+            if on_failure is not None:
+                on_failure(attempt, e)
+            if policy.backoff_s:
+                time.sleep(policy.backoff_s * (2**attempt))
+    raise RuntimeError(f"step failed after {policy.max_retries + 1} attempts") from last
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    tolerance: float = 2.0  # step slower than ewma * tolerance => straggling
+    ewma_alpha: float = 0.1
+    demote_after: int = 3  # consecutive marks before requesting a swap
+    warmup_steps: int = 5  # ignore compile/first-touch steps
+
+    def __post_init__(self):
+        self._ewma: Optional[float] = None
+        self._marks = 0
+        self._seen = 0
+        self.events: list[dict] = []
+
+    def observe(self, step: int, wall_s: float, *, swap_fn: Optional[Callable[[], None]] = None) -> bool:
+        """Record a step time; returns True if this step was marked straggling."""
+        self._seen += 1
+        if self._seen <= self.warmup_steps:
+            return False
+        if self._ewma is None:
+            self._ewma = wall_s
+            return False
+        straggling = wall_s > self._ewma * self.tolerance
+        if straggling:
+            self._marks += 1
+            self.events.append({"step": step, "wall_s": wall_s, "ewma": self._ewma})
+            if self._marks >= self.demote_after:
+                self.events.append({"step": step, "action": "request_spare_swap"})
+                if swap_fn is not None:
+                    swap_fn()
+                self._marks = 0
+        else:
+            self._marks = 0
+            self._ewma = (1 - self.ewma_alpha) * self._ewma + self.ewma_alpha * wall_s
+        return straggling

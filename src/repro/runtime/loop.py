@@ -1,0 +1,170 @@
+"""Training loop with checkpoint/restart, retries, stragglers, redeploy.
+
+``TrainLoop`` is the single-process embodiment of the multi-pod runtime:
+the same step function the dry-run lowers for 512 chips runs here on the
+local mesh, with the full production control plane around it:
+
+* resume from the latest checkpoint on construction (crash -> restart is a
+  no-op in user code);
+* bounded per-step retries with checkpoint restore between attempts
+  (FaultPolicy);
+* straggler watchdog (StragglerPolicy) with a spare-swap callback;
+* periodic crossbar *redeployment pricing* (the paper integrated into the
+  training loop): every ``redeploy_every`` steps the loop prices
+  reprogramming the deployed crossbars from the previous snapshot to the
+  current weights via ``core.redeploy.delta_cost`` — with/without SWS —
+  so EXPERIMENTS.md can report the training-time reprogramming savings.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.base import ArchConfig
+from repro.core.planner import CrossbarSpec, PlannerConfig
+from repro.core.redeploy import delta_cost
+from repro.data import SyntheticLMDataset
+from repro.runtime.fault import FaultPolicy, StragglerPolicy, run_with_retries
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainLoopConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: str = "checkpoints"
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    redeploy_every: int = 0  # 0 = off; else price crossbar redeploy every k steps
+    redeploy_tensors: int = 2  # how many (largest) tensors to price
+
+
+class TrainLoop:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        loop_cfg: TrainLoopConfig,
+        *,
+        train_step: Callable,  # (params, opt_state, batch) -> (params, opt_state, metrics)
+        init_state: Callable[[], tuple[Any, Any]],  # () -> (params, opt_state)
+        dataset: SyntheticLMDataset,
+        fault: FaultPolicy = FaultPolicy(),
+        straggler: Optional[StragglerPolicy] = None,
+        crossbar_spec: CrossbarSpec = CrossbarSpec(),
+        planner_cfg: PlannerConfig = PlannerConfig(),
+        host: int = 0,
+        n_hosts: int = 1,
+    ):
+        self.cfg = cfg
+        self.loop_cfg = loop_cfg
+        self.train_step = train_step
+        self.dataset = dataset
+        self.fault = fault
+        self.straggler = straggler or StragglerPolicy()
+        self.crossbar_spec = crossbar_spec
+        self.planner_cfg = planner_cfg
+        self.host, self.n_hosts = host, n_hosts
+        self.ckpt = CheckpointManager(
+            loop_cfg.checkpoint_dir, keep=loop_cfg.keep_checkpoints, async_write=True
+        )
+        self.metrics_log: list[dict] = []
+        self.redeploy_log: list[dict] = []
+        self._deployed_snapshot: Optional[dict[str, jax.Array]] = None
+
+        # resume-or-init
+        params, opt_state = init_state()
+        latest = self.ckpt.latest()
+        if latest is not None:
+            params, opt_state = self.ckpt.restore(latest, (params, opt_state))
+            self.start_step = latest
+        else:
+            self.start_step = 0
+        self.params, self.opt_state = params, opt_state
+
+    # -- redeploy pricing ------------------------------------------------------
+
+    def _largest_weights(self) -> dict[str, jax.Array]:
+        flat, _ = jax.tree_util.tree_flatten_with_path(self.params)
+        mats = [
+            ("/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p), l)
+            for p, l in flat
+            if hasattr(l, "ndim") and l.ndim >= 2 and "embed" not in str(p).lower()
+        ]
+        mats.sort(key=lambda kv: -int(np.prod(kv[1].shape)))
+        return dict(mats[: self.loop_cfg.redeploy_tensors])
+
+    def _price_redeploy(self, step: int) -> None:
+        current = self._largest_weights()
+        if self._deployed_snapshot is not None:
+            for name, w_new in current.items():
+                w_old = self._deployed_snapshot.get(name)
+                if w_old is None or w_old.shape != w_new.shape:
+                    continue
+                rep = delta_cost(
+                    w_old, w_new, self.crossbar_spec, self.planner_cfg, name=name
+                )
+                self.redeploy_log.append(
+                    {
+                        "step": step,
+                        "tensor": name,
+                        "transitions_natural": rep.transitions_natural,
+                        "transitions_sws": rep.transitions_sws,
+                        "chain_stale_sws": rep.chain_stale_sws,
+                        "chain_fresh_sws": rep.chain_fresh_sws,
+                        "stale_sort_speedup": rep.stale_sort_speedup,
+                        "sws_delta_speedup": rep.sws_delta_speedup,
+                        "n_bits": rep.n_bits,
+                    }
+                )
+        self._deployed_snapshot = {k: jax.device_get(v) for k, v in current.items()}
+
+    # -- main loop ---------------------------------------------------------------
+
+    def run(self) -> dict:
+        lc = self.loop_cfg
+        for step in range(self.start_step, lc.total_steps):
+            batch = self.dataset.batch_at(step, self.host, self.n_hosts)
+
+            def attempt():
+                return self.train_step(self.params, self.opt_state, batch)
+
+            def on_failure(att: int, err: BaseException) -> None:
+                if self.fault.restore_on_failure:
+                    latest = self.ckpt.latest()
+                    if latest is not None:
+                        self.params, self.opt_state = self.ckpt.restore(
+                            latest, (self.params, self.opt_state)
+                        )
+
+            t0 = time.time()
+            self.params, self.opt_state, metrics = run_with_retries(
+                attempt, self.fault, on_failure=on_failure
+            )
+            jax.block_until_ready(metrics["loss"])
+            wall = time.time() - t0
+            self.straggler.observe(step, wall)
+
+            if (step + 1) % lc.log_every == 0 or step == lc.total_steps - 1:
+                rec = {
+                    "step": step + 1,
+                    "wall_s": round(wall, 4),
+                    **{k: float(v) for k, v in metrics.items()},
+                }
+                self.metrics_log.append(rec)
+            if lc.checkpoint_every and (step + 1) % lc.checkpoint_every == 0:
+                self.ckpt.save(step + 1, (self.params, self.opt_state))
+            if lc.redeploy_every and (step + 1) % lc.redeploy_every == 0:
+                self._price_redeploy(step + 1)
+
+        self.ckpt.save(lc.total_steps, (self.params, self.opt_state))
+        self.ckpt.wait()
+        return {
+            "final_metrics": self.metrics_log[-1] if self.metrics_log else {},
+            "metrics_log": self.metrics_log,
+            "redeploy_log": self.redeploy_log,
+            "straggler_events": self.straggler.events,
+        }

@@ -1,0 +1,21 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 CPU device
+(the 512-device override belongs exclusively to repro.launch.dryrun)."""
+from __future__ import annotations
+
+import jax
+import pytest
+from hypothesis import settings
+
+# keep hypothesis fast on the single-core container
+settings.register_profile("ci", max_examples=25, deadline=None, derandomize=True)
+settings.load_profile("ci")
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def bell_weights(key, n: int, std: float = 0.02):
+    """Gaussian (bell-shaped) weights — the distribution SWS exploits."""
+    return jax.random.normal(key, (n,)) * std

@@ -1,0 +1,71 @@
+"""Unit + property tests for core.bitslice (quantization / planes / packing)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import bitslice
+
+
+@pytest.mark.parametrize("encoding", ["sign_magnitude", "offset_binary"])
+@pytest.mark.parametrize("cols", [4, 8, 10, 16])
+def test_quantize_roundtrip_error_bound(key, encoding, cols):
+    w = jax.random.normal(key, (512,)) * 0.05
+    qt = bitslice.quantize(w, cols, encoding)
+    w_hat = bitslice.dequantize(qt)
+    # max error is half a quantization step
+    assert float(jnp.max(jnp.abs(w - w_hat))) <= float(qt.scale) * 0.5 + 1e-7
+
+
+def test_quantize_zero_tensor(key):
+    qt = bitslice.quantize(jnp.zeros((64,)), 8)
+    assert int(jnp.sum(qt.q)) == 0
+    np.testing.assert_allclose(bitslice.dequantize(qt), 0.0)
+
+
+@given(
+    q=st.lists(st.integers(0, 2**10 - 1), min_size=1, max_size=64),
+    cols=st.sampled_from([10]),
+)
+def test_bitplanes_reconstruct(q, cols):
+    qa = jnp.asarray(q, jnp.int32)
+    planes = bitslice.bitplanes(qa, cols)
+    weights = 2 ** jnp.arange(cols, dtype=jnp.int32)
+    recon = jnp.sum(planes.astype(jnp.int32) * weights, axis=-1)
+    np.testing.assert_array_equal(recon, qa)
+
+
+def test_dequantize_from_planes_matches_dequantize(key):
+    w = jax.random.normal(key, (300,)) * 0.1
+    qt = bitslice.quantize(w, 10)
+    planes = bitslice.bitplanes(qt.q, 10)
+    w_hat = bitslice.dequantize_from_planes(planes, qt.sign, qt.scale, qt.offset)
+    np.testing.assert_allclose(w_hat, bitslice.dequantize(qt), rtol=1e-6)
+
+
+@given(rows=st.integers(1, 40), s=st.integers(1, 5), cols=st.integers(1, 12))
+def test_pack_unpack_roundtrip(rows, s, cols):
+    rng = np.random.default_rng(rows * 100 + s * 10 + cols)
+    planes = jnp.asarray(rng.integers(0, 2, (s, rows, cols)), jnp.bool_)
+    packed = bitslice.pack_rows(planes)
+    assert packed.shape == (s, -(-rows // 8), cols)
+    np.testing.assert_array_equal(bitslice.unpack_rows(packed, rows), planes)
+
+
+@given(n=st.integers(1, 1000), rows=st.sampled_from([8, 32, 128]))
+def test_section_unsection_roundtrip(n, rows):
+    flat = jnp.arange(n, dtype=jnp.float32)
+    sections, n_out = bitslice.section(flat, rows)
+    assert n_out == n
+    assert sections.shape[1] == rows
+    assert sections.shape[0] == -(-n // rows)
+    np.testing.assert_array_equal(bitslice.unsection(sections, n), flat)
+
+
+def test_section_padding_is_zero(key):
+    flat = jnp.ones((100,))
+    sections, _ = bitslice.section(flat, 64)
+    assert float(jnp.sum(sections)) == 100.0  # pad contributes nothing

@@ -1,0 +1,74 @@
+"""Unit + property tests for the reprogramming cost model (Eq. 1)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import bitslice, cost
+
+
+def _planes(seed: int, s: int, rows: int, cols: int):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2, (s, rows, cols)), jnp.bool_)
+
+
+def test_pair_transitions_identity_and_symmetry():
+    a, b = _planes(0, 4, 16, 8), _planes(1, 4, 16, 8)
+    assert int(jnp.sum(cost.pair_transitions(a, a))) == 0
+    np.testing.assert_array_equal(cost.pair_transitions(a, b), cost.pair_transitions(b, a))
+
+
+@given(seed=st.integers(0, 100))
+def test_hamming_triangle_inequality(seed):
+    a, b, c = (_planes(seed + i, 3, 8, 6) for i in range(3))
+    ab = cost.pair_transitions(a, b)
+    bc = cost.pair_transitions(b, c)
+    ac = cost.pair_transitions(a, c)
+    assert bool(jnp.all(ac <= ab + bc))
+
+
+def test_packed_matches_bool_path():
+    a, b = _planes(2, 6, 40, 10), _planes(3, 6, 40, 10)
+    pa, pb = bitslice.pack_rows(a), bitslice.pack_rows(b)
+    np.testing.assert_array_equal(
+        cost.pair_transitions_packed(pa, pb), cost.pair_transitions(a, b)
+    )
+
+
+def test_chain_equals_sum_of_consecutive():
+    planes = _planes(4, 10, 16, 8)
+    order = jnp.asarray(np.random.default_rng(0).permutation(10), jnp.int32)
+    total = int(cost.chain_transitions(planes, order))
+    steps = cost.consecutive_costs(planes, order)
+    assert total == int(jnp.sum(steps))
+    # without initial program
+    total_ni = int(cost.chain_transitions(planes, order, include_initial=False))
+    assert total_ni == int(jnp.sum(steps[1:]))
+
+
+def test_chain_per_column_sums_to_total():
+    planes = _planes(5, 8, 16, 8)
+    per_col = cost.chain_transitions(planes, per_column=True)
+    total = cost.chain_transitions(planes)
+    assert int(jnp.sum(per_col)) == int(total)
+
+
+def test_low_order_columns_carry_transition_mass(key):
+    """§IV observation: for bell-shaped weights the transition mass under a
+    sorted order concentrates in low-order columns (adjacent sorted sections
+    differ by small q deltas, so flips ride the low bits + short carries),
+    and the LSB's active fraction is ~Bernoulli(0.5)."""
+    w = jax.random.normal(key, (128 * 64,)) * 0.02
+    qt = bitslice.quantize(w, 10)
+    order = jnp.argsort(jnp.abs(w))
+    planes = bitslice.bitplanes(qt.q[order].reshape(64, 128), 10)
+    frac = cost.transition_fraction_per_column(planes)
+    # the low half of the columns carries the overwhelming share
+    assert float(jnp.sum(frac[:5])) > 0.75
+    # monotone decay in the high-order half
+    assert bool(jnp.all(frac[5:-1] >= frac[6:]))
+    # active fraction in the LSB is ~0.5 (the uniformity §IV leverages)
+    active = cost.active_fraction_per_column(planes)
+    assert 0.4 <= float(active[0]) <= 0.6

@@ -1,0 +1,130 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracle."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitslice
+from repro.kernels.bitslice import ops as bs_ops, ref as bs_ref
+from repro.kernels.cim_matmul import ops as cm_ops, ref as cm_ref
+from repro.kernels.flash_attention import ops as fa_ops, ref as fa_ref
+from repro.kernels.hamming import ops as hm_ops, ref as hm_ref
+
+
+# ---------------------------------------------------------------------------
+# hamming
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,w,c", [(1, 1, 1), (7, 16, 10), (256, 16, 16), (300, 5, 3)])
+def test_hamming_shapes(t, w, c):
+    rng = np.random.default_rng(t * 1000 + w * 10 + c)
+    a = jnp.asarray(rng.integers(0, 256, (t, w, c)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 256, (t, w, c)), jnp.uint8)
+    np.testing.assert_array_equal(hm_ops.hamming_pairs(a, b), hm_ref.hamming_pairs(a, b))
+
+
+def test_hamming_chain_costs(key):
+    planes = jax.random.bernoulli(key, 0.5, (10, 32, 8))
+    packed = bitslice.pack_rows(planes)
+    got = hm_ops.chain_costs(packed)
+    from repro.core import cost
+
+    want = cost.consecutive_costs(planes, include_initial=False)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# bitslice
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k,n,cols", [(8, 128, 4), (100, 60, 10), (256, 256, 8), (1, 1, 2)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bitslice_shapes_dtypes(k, n, cols, dtype):
+    rng = np.random.default_rng(k + n + cols)
+    w = jnp.asarray(rng.normal(size=(k, n)) * 0.1, dtype)
+    inv_scale = (2**cols - 1) / max(float(jnp.max(jnp.abs(w.astype(jnp.float32)))), 1e-9)
+    got = bs_ops.bitslice_planes(w, inv_scale, cols)
+    want = bs_ref.bitslice_planes(w, jnp.float32(inv_scale), cols)
+    np.testing.assert_array_equal(got, want)
+
+
+# ---------------------------------------------------------------------------
+# cim_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n,cols", [(4, 32, 16, 4), (17, 100, 60, 8), (128, 128, 128, 10)])
+@pytest.mark.parametrize("mode", ["fused_dequant", "planes"])
+def test_cim_matmul_shapes_modes(m, k, n, cols, mode):
+    kx, kw = jax.random.split(jax.random.PRNGKey(m * 7 + n))
+    x = jax.random.normal(kx, (m, k))
+    w = jax.random.normal(kw, (k, n)) * 0.1
+    inv_scale = (2**cols - 1) / float(jnp.max(jnp.abs(w)))
+    sp = bs_ref.bitslice_planes(w, jnp.float32(inv_scale), cols)
+    scale = 1.0 / inv_scale
+    got = cm_ops.cim_matmul(x, sp, scale, mode=mode)
+    want = cm_ref.cim_matmul(x, sp, jnp.float32(scale))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_cim_matmul_equals_dense_quantized(key):
+    """The end-to-end contract: CIM output == x @ w_quantized."""
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (8, 64))
+    w = jax.random.normal(kw, (64, 32)) * 0.1
+    qt = bitslice.quantize(w, 10)
+    sp = bs_ref.bitslice_planes(w, 1.0 / qt.scale, 10)
+    y = cm_ops.cim_matmul(x, sp, qt.scale)
+    w_hat = bitslice.dequantize(qt).reshape(w.shape)
+    np.testing.assert_allclose(y, x @ w_hat, rtol=1e-4, atol=1e-5)
+
+
+def test_cim_matmul_bf16_activations(key):
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (16, 32)).astype(jnp.bfloat16)
+    w = jax.random.normal(kw, (32, 16)) * 0.1
+    sp = bs_ref.bitslice_planes(w, 100.0, 8)
+    got = cm_ops.cim_matmul(x, sp, 0.01)
+    want = cm_ref.cim_matmul(x, sp, jnp.float32(0.01))
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize(
+    "b,hq,hkv,sq,sk,d,kind,window,q_offset",
+    [
+        (2, 4, 2, 64, 64, 32, "causal", None, 0),
+        (1, 4, 1, 48, 80, 16, "causal", None, 32),  # decode-continuation chunk
+        (2, 2, 2, 64, 64, 32, "bidir", None, 0),
+        (1, 4, 2, 96, 96, 32, "swa", 24, 0),
+        (1, 1, 1, 8, 8, 8, "causal", None, 0),  # tiny
+    ],
+)
+def test_flash_attention_vs_ref(b, hq, hkv, sq, sk, d, kind, window, q_offset):
+    ks = jax.random.split(jax.random.PRNGKey(b * 100 + sq), 3)
+    q = jax.random.normal(ks[0], (b, hq, sq, d))
+    k = jax.random.normal(ks[1], (b, hkv, sk, d))
+    v = jax.random.normal(ks[2], (b, hkv, sk, d))
+    got = fa_ops.flash_attention(
+        q, k, v, kind=kind, window=window, q_offset=q_offset, bq=32, bk=32
+    )
+    want = fa_ref.flash_attention(q, k, v, kind=kind, window=window, q_offset=q_offset)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_blockwise_module(key):
+    """The pure-JAX blockwise attention (model default) and the Pallas kernel
+    implement the same contract."""
+    from repro.models.attention import blockwise_attention
+
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, 4, 64, 32))
+    k = jax.random.normal(ks[1], (2, 2, 64, 32))
+    v = jax.random.normal(ks[2], (2, 2, 64, 32))
+    a = blockwise_attention(q, k, v, kind="causal", block_k=32)
+    b = fa_ops.flash_attention(q, k, v, kind="causal", bq=32, bk=32)
+    np.testing.assert_allclose(a, b, rtol=2e-5, atol=2e-5)

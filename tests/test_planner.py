@@ -1,0 +1,114 @@
+"""Tests for the deployment planner (params -> crossbar plan)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import redeploy
+from repro.core.planner import (
+    CrossbarSpec,
+    PlannerConfig,
+    analyze_tensor,
+    build_deployment,
+    deploy_params,
+    iter_weights,
+)
+
+
+def test_analyze_tensor_invariants(key):
+    w = jax.random.normal(key, (256, 384)) * 0.02
+    spec = CrossbarSpec(rows=128, cols=10)
+    rep, w_hat = analyze_tensor(w, spec, PlannerConfig(p_stuck=0.5), key)
+    assert rep.n_weights == w.size
+    assert rep.n_sections == -(-w.size // spec.rows)
+    assert rep.transitions_sws < rep.transitions_baseline  # SWS helps
+    assert rep.transitions_final <= rep.transitions_sws  # stucking helps more
+    assert rep.sws_speedup > 1.0
+    assert rep.total_speedup >= rep.sws_speedup
+    # lockstep: greedy (on SWS costs) beats unsorted arrival order
+    assert rep.lockstep_time_greedy <= rep.lockstep_time_unsorted
+    assert rep.lockstep_time_greedy >= rep.lockstep_time_ideal - 1e-6
+    # deployed weights stay close to originals (quant + LSB error only)
+    assert rep.quant_mse < (2.0 * float(jnp.max(jnp.abs(w))) / 2**10) ** 2
+    assert w_hat.shape == w.shape and w_hat.dtype == w.dtype
+
+
+def test_p1_no_weight_error_beyond_quantization(key):
+    w = jax.random.normal(key, (128, 128)) * 0.05
+    spec = CrossbarSpec(rows=128, cols=10)
+    rep, w_hat = analyze_tensor(w, spec, PlannerConfig(p_stuck=1.0), key)
+    # pure quantization error bound: half a step
+    amax = float(jnp.max(jnp.abs(w)))
+    step = amax / (2**10 - 1)
+    assert float(jnp.max(jnp.abs(w - w_hat))) <= 0.5 * step + 1e-7
+
+
+def test_sws_off_baseline_equals_sws_transitions(key):
+    w = jax.random.normal(key, (64, 64)) * 0.02
+    cfg = PlannerConfig(sws=False, p_stuck=1.0)
+    rep, _ = analyze_tensor(w, CrossbarSpec(rows=64, cols=8), cfg, key)
+    assert rep.transitions_sws == rep.transitions_baseline
+
+
+def test_offset_binary_encoding_roundtrip(key):
+    w = jax.random.normal(key, (128, 64)) * 0.02 + 0.01
+    spec = CrossbarSpec(rows=128, cols=10, encoding="offset_binary")
+    rep, w_hat = analyze_tensor(w, spec, PlannerConfig(p_stuck=1.0), key)
+    amax = float(jnp.max(w) - jnp.min(w))
+    step = amax / (2**10 - 1)
+    assert float(jnp.max(jnp.abs(w - w_hat))) <= 0.5 * step + 1e-7
+    assert rep.sws_speedup > 1.0
+
+
+def test_iter_weights_filters(key):
+    params = {
+        "embed": {"table": jnp.zeros((1000, 64))},  # excluded by name
+        "layer": {"w": jnp.zeros((128, 64))},  # kept
+        "bias": jnp.zeros((64,)),  # excluded: ndim < 2
+        "tiny": jnp.zeros((4, 4)),  # excluded: size < min_size
+    }
+    names = [n for n, _ in iter_weights(params, PlannerConfig(min_size=1024))]
+    assert names == ["layer/w"]
+
+
+def test_build_and_deploy_roundtrip(key):
+    params = {
+        "a": {"w": jax.random.normal(key, (128, 64)) * 0.02},
+        "b": {"w": jax.random.normal(jax.random.PRNGKey(1), (64, 128)) * 0.02},
+        "embed": {"table": jnp.ones((512, 16))},
+    }
+    plan = build_deployment(params, CrossbarSpec(rows=64, cols=8),
+                            PlannerConfig(p_stuck=0.5, min_size=1024))
+    assert set(plan.reports) == {"a/w", "b/w"}
+    totals = plan.totals()
+    assert totals["total_speedup"] >= totals["sws_speedup"] > 1.0
+
+    deployed = deploy_params(params, plan)
+    # embed untouched; others replaced but close
+    np.testing.assert_array_equal(deployed["embed"]["table"], params["embed"]["table"])
+    assert not np.array_equal(deployed["a"]["w"], params["a"]["w"])
+    assert float(jnp.max(jnp.abs(deployed["a"]["w"] - params["a"]["w"]))) < 0.01
+
+
+def test_tsp_section_order_not_worse(key):
+    w = jax.random.normal(key, (64, 64)) * 0.02
+    spec = CrossbarSpec(rows=64, cols=8)
+    r_mag, _ = analyze_tensor(w, spec, PlannerConfig(p_stuck=1.0), key)
+    r_tsp, _ = analyze_tensor(
+        w, spec, PlannerConfig(p_stuck=1.0, section_order="tsp"), key
+    )
+    assert r_tsp.transitions_sws <= r_mag.transitions_sws * 1.02
+
+
+def test_redeploy_delta_cost(key):
+    w_old = jax.random.normal(key, (128, 64)) * 0.02
+    # same weights -> zero transitions in both layouts
+    rep0 = redeploy.delta_cost(w_old, w_old)
+    assert rep0.transitions_natural == 0 and rep0.transitions_sws == 0
+    # small drift -> SWS layout concentrates deltas in low-order bits
+    w_new = w_old + jax.random.normal(jax.random.PRNGKey(1), w_old.shape) * 0.0005
+    rep = redeploy.delta_cost(w_old, w_new)
+    assert 0 < rep.transitions_sws <= rep.n_bits
+    assert 0 < rep.transitions_natural <= rep.n_bits

@@ -1,0 +1,146 @@
+"""Runtime: train loop learns, survives crashes, detects stragglers; data
+pipeline is deterministic and shardable."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.data import DataConfig, make_dataset
+from repro.launch.steps import make_train_step
+from repro.models import api
+from repro.optim import AdamWConfig, adamw_init
+from repro.runtime import FaultPolicy, StragglerPolicy, TrainLoop, TrainLoopConfig
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_per_step_host():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=8)
+    ds = make_dataset(cfg)
+    a = ds.batch_at(3, host=1, n_hosts=2)["tokens"]
+    b = ds.batch_at(3, host=1, n_hosts=2)["tokens"]
+    np.testing.assert_array_equal(a, b)
+    c = ds.batch_at(4, host=1, n_hosts=2)["tokens"]
+    assert not np.array_equal(a, c)
+    d = ds.batch_at(3, host=0, n_hosts=2)["tokens"]
+    assert not np.array_equal(a, d)
+
+
+def test_data_host_sharding_sizes():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=8)
+    ds = make_dataset(cfg)
+    assert ds.host_batch(4) == 2
+    with pytest.raises(ValueError):
+        ds.host_batch(3)
+    tok = ds.batch_at(0, 0, 4)["tokens"]
+    assert tok.shape == (2, 16)
+    assert int(tok.min()) >= 0 and int(tok.max()) < 512
+
+
+def test_copy_task_structure():
+    cfg = DataConfig(vocab_size=64, seq_len=16, global_batch=2, task="copy")
+    tok = np.asarray(make_dataset(cfg).batch_at(0)["tokens"])
+    np.testing.assert_array_equal(tok[:, 1:], (5 * tok[:, :-1] + 7) % 64)
+
+
+# ---------------------------------------------------------------------------
+# train loop
+# ---------------------------------------------------------------------------
+
+def _loop(tmp_path, steps=24, arch="internlm2-1.8b", fault=None, task="copy"):
+    cfg = get_arch(arch, reduced=True)
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg, remat="none"))
+    ds = make_dataset(DataConfig(cfg.vocab_size, 32, 4, task=task))
+
+    def init_state():
+        params = api.init(jax.random.PRNGKey(0), cfg)
+        return params, adamw_init(params)
+
+    return TrainLoop(
+        cfg,
+        TrainLoopConfig(
+            total_steps=steps, checkpoint_every=8, checkpoint_dir=str(tmp_path),
+            log_every=4, redeploy_every=0,
+        ),
+        train_step=step_fn,
+        init_state=init_state,
+        dataset=ds,
+        fault=fault or FaultPolicy(max_retries=1),
+    )
+
+
+def test_loop_learns_copy_task(tmp_path):
+    loop = _loop(tmp_path)
+    result = loop.run()
+    log = result["metrics_log"]
+    assert log[-1]["loss"] < log[0]["loss"]  # loss went down
+    assert log[-1]["step"] == 24
+
+
+def test_loop_resumes_from_checkpoint(tmp_path):
+    loop1 = _loop(tmp_path, steps=8)
+    loop1.run()
+    loop2 = _loop(tmp_path, steps=16)
+    assert loop2.start_step == 8  # picked up the step-8 checkpoint
+    result = loop2.run()
+    assert result["metrics_log"][-1]["step"] == 16
+
+
+def test_step_retry_on_transient_failure(tmp_path):
+    loop = _loop(tmp_path, steps=6, fault=FaultPolicy(max_retries=2))
+    orig = loop.train_step
+    fails = {"n": 0}
+
+    def flaky(params, opt_state, batch):
+        if fails["n"] < 2:
+            fails["n"] += 1
+            raise RuntimeError("injected node failure")
+        return orig(params, opt_state, batch)
+
+    loop.train_step = flaky
+    result = loop.run()
+    assert fails["n"] == 2  # failed twice, then recovered
+    assert result["metrics_log"][-1]["step"] == 6
+
+
+def test_retries_exhausted_raises(tmp_path):
+    loop = _loop(tmp_path, steps=4, fault=FaultPolicy(max_retries=1))
+
+    def always_fail(params, opt_state, batch):
+        raise RuntimeError("dead node")
+
+    loop.train_step = always_fail
+    with pytest.raises(RuntimeError, match="failed after 2 attempts"):
+        loop.run()
+
+
+def test_straggler_policy_marks_and_swaps():
+    pol = StragglerPolicy(tolerance=2.0, demote_after=2, warmup_steps=0)
+    swaps = []
+    for step in range(10):
+        pol.observe(step, 1.0)
+    assert not pol.events
+    # two consecutive 5x-slow steps -> mark, mark, swap request
+    pol.observe(10, 5.0, swap_fn=lambda: swaps.append(10))
+    pol.observe(11, 5.0, swap_fn=lambda: swaps.append(11))
+    assert swaps == [11]
+    assert any(e.get("action") == "request_spare_swap" for e in pol.events)
+
+
+def test_redeploy_pricing_in_loop(tmp_path):
+    loop = _loop(tmp_path, steps=8)
+    loop.loop_cfg = TrainLoopConfig(
+        total_steps=8, checkpoint_every=8, checkpoint_dir=str(tmp_path),
+        log_every=4, redeploy_every=4,
+    )
+    result = loop.run()
+    # first pricing at step 4 only snapshots; step 8 prices the delta
+    assert len(result["redeploy_log"]) >= 1
+    rec = result["redeploy_log"][0]
+    assert rec["transitions_sws"] <= rec["n_bits"]

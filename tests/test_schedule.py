@@ -1,0 +1,86 @@
+"""Tests for multi-crossbar schedules + thread balancing (§III.B-C)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import bitslice, cost, schedule, sws
+
+
+@given(s=st.integers(1, 200), l=st.integers(1, 20), kind=st.sampled_from(["stride1", "strideL"]))
+def test_chains_partition_sections(s, l, kind):
+    chains = schedule.make_chains(s, l, kind)
+    all_idx = np.sort(np.concatenate([np.asarray(c) for c in chains]))
+    np.testing.assert_array_equal(all_idx, np.arange(s))
+    assert len(chains) <= l
+
+
+def _sorted_planes(key, s=128, rows=64, cols=8):
+    w = jax.random.normal(key, (rows * s,)) * 0.02
+    qt = bitslice.quantize(w, cols)
+    perm = sws.sws_permutation(w)
+    return bitslice.bitplanes(qt.q[perm].reshape(s, rows), cols)
+
+
+def test_stride1_beats_strideL_on_sorted_planes(key):
+    """Paper Fig. 6: stride-1 scheduling costs less than stride-L for L>1."""
+    planes = _sorted_planes(key)
+    l = 16
+    t1 = int(schedule.schedule_transitions(planes, schedule.stride_1_chains(planes.shape[0], l)))
+    tl = int(schedule.schedule_transitions(planes, schedule.stride_l_chains(planes.shape[0], l)))
+    assert t1 < tl
+
+
+def test_stride_equivalence_at_l1(key):
+    planes = _sorted_planes(key, s=32)
+    c1 = schedule.stride_1_chains(32, 1)
+    cl = schedule.stride_l_chains(32, 1)
+    assert int(schedule.schedule_transitions(planes, c1)) == int(
+        schedule.schedule_transitions(planes, cl)
+    )
+
+
+def test_job_costs_sum_equals_schedule_total(key):
+    planes = _sorted_planes(key, s=64)
+    chains = schedule.stride_1_chains(64, 8)
+    total = int(schedule.schedule_transitions(planes, chains))
+    jobs = schedule.schedule_job_costs(planes, chains)
+    assert total == int(jnp.sum(jobs))
+
+
+@given(seed=st.integers(0, 50), threads=st.sampled_from([4, 16, 64]))
+def test_lockstep_sorted_not_worse(seed, threads):
+    """Paper Fig. 7: greedy similar-cost grouping beats arrival order."""
+    rng = np.random.default_rng(seed)
+    jobs = jnp.asarray(rng.integers(1, 1000, size=500), jnp.int32)
+    t_sorted = int(schedule.lockstep_time(jobs, threads, sort_jobs=True))
+    t_unsorted = int(schedule.lockstep_time(jobs, threads, sort_jobs=False))
+    assert t_sorted <= t_unsorted
+    # and both are lower-bounded by the ideal
+    ideal = float(jnp.sum(jobs)) / threads
+    assert t_sorted >= ideal - 1e-6
+
+
+def test_lockstep_speedup_near_ideal_for_bell_jobs(key):
+    """With many similar-cost jobs the greedy lockstep speedup approaches T."""
+    jobs = (jax.random.normal(key, (4096,)) * 10 + 500).astype(jnp.int32)
+    sp = float(schedule.lockstep_speedup(jobs, 64, sort_jobs=True))
+    assert sp > 0.9 * 64
+
+
+@given(seed=st.integers(0, 50), threads=st.integers(1, 16))
+def test_lpt_bounds(seed, threads):
+    """LPT respects the classic (4/3 - 1/3m) * OPT bound via the trivial
+    lower bounds max(job) and sum/threads."""
+    rng = np.random.default_rng(seed)
+    jobs = jnp.asarray(rng.integers(1, 100, size=64), jnp.int32)
+    tids, loads = schedule.lpt_assignment(jobs, threads)
+    assert int(jnp.sum(loads)) == int(jnp.sum(jobs))
+    makespan = int(schedule.lpt_makespan(jobs, threads))
+    opt_lb = max(float(jnp.max(jobs)), float(jnp.sum(jobs)) / threads)
+    assert makespan <= (4 / 3) * opt_lb + float(jnp.max(jobs))
+    # every job assigned to a valid thread
+    assert int(jnp.min(tids)) >= 0 and int(jnp.max(tids)) < threads

@@ -1,0 +1,102 @@
+"""Tests for bit-stucking-based reprogramming (§IV)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitslice, cost, schedule, stucking, sws
+
+
+def _sorted_planes(key, s=64, rows=64, cols=8):
+    w = jax.random.normal(key, (rows * s,)) * 0.02
+    qt = bitslice.quantize(w, cols)
+    perm = sws.sws_permutation(w)
+    return bitslice.bitplanes(qt.q[perm].reshape(s, rows), cols)
+
+
+def test_p1_matches_full_reprogramming(key):
+    planes = _sorted_planes(key)
+    order = jnp.arange(planes.shape[0], dtype=jnp.int32)
+    total, achieved = stucking.stuck_chain(planes, order, 1.0, key)
+    assert int(total) == int(cost.chain_transitions(planes, order))
+    np.testing.assert_array_equal(achieved, planes)
+
+
+def test_p0_sticks_lsb_forever(key):
+    planes = _sorted_planes(key)
+    order = jnp.arange(planes.shape[0], dtype=jnp.int32)
+    total, achieved = stucking.stuck_chain(planes, order, 0.0, key)
+    # LSB column never changes after the first program: every section's
+    # achieved LSB equals the first section's ideal LSB... except the first
+    # program itself is also subject to stucking from the pristine (all-zero)
+    # state, so the stuck LSB is all-zero.
+    lsb = achieved[..., 0]
+    assert int(jnp.sum(lsb)) == 0
+    # high-order columns are fully programmed
+    np.testing.assert_array_equal(achieved[..., 1:], planes[..., 1:])
+    # cost = full cost minus all LSB transitions
+    per_col = cost.chain_transitions(planes, order, per_column=True)
+    assert int(total) == int(jnp.sum(per_col[1:]))
+
+
+def test_cost_monotone_in_p(key):
+    planes = _sorted_planes(key)
+    order = jnp.arange(planes.shape[0], dtype=jnp.int32)
+    totals = [
+        int(stucking.stuck_chain(planes, order, p, jax.random.PRNGKey(7))[0])
+        for p in (0.0, 0.25, 0.5, 0.75, 1.0)
+    ]
+    assert all(a <= b for a, b in zip(totals, totals[1:]))
+
+
+def test_measured_saving_matches_analytic(key):
+    planes = _sorted_planes(key, s=128)
+    order = jnp.arange(planes.shape[0], dtype=jnp.int32)
+    p = 0.5
+    full = int(cost.chain_transitions(planes, order))
+    got = int(stucking.stuck_chain(planes, order, p, key)[0])
+    predicted = float(stucking.expected_saving_fraction(planes, order, p))
+    measured = (full - got) / full
+    # Bernoulli(p) across thousands of memristors: within a few percent.
+    # NOTE the analytic formula ignores second-order re-transition effects
+    # (a skipped flip can cancel a later flip), so the tolerance is loose.
+    assert abs(measured - predicted) < 0.1
+
+
+def test_stuck_cols_2_saves_more_than_1(key):
+    planes = _sorted_planes(key)
+    order = jnp.arange(planes.shape[0], dtype=jnp.int32)
+    t1 = int(stucking.stuck_chain(planes, order, 0.3, key, stuck_cols=1)[0])
+    t2 = int(stucking.stuck_chain(planes, order, 0.3, key, stuck_cols=2)[0])
+    assert t2 < t1
+
+
+def test_stuck_schedule_combines_chains(key):
+    planes = _sorted_planes(key, s=60)
+    chains = schedule.stride_1_chains(60, 8)
+    total, achieved = stucking.stuck_schedule(planes, chains, 1.0, key)
+    assert int(total) == int(schedule.schedule_transitions(planes, chains))
+    np.testing.assert_array_equal(achieved, planes)
+
+    total_h, achieved_h = stucking.stuck_schedule(planes, chains, 0.5, key)
+    assert int(total_h) <= int(total)
+    # only the LSB column may deviate from ideal
+    np.testing.assert_array_equal(achieved_h[..., 1:], planes[..., 1:])
+
+
+def test_achieved_error_is_lsb_bounded(key):
+    """Deployed weights deviate from ideal by at most the LSB multiplier."""
+    rows, cols, s = 32, 8, 40
+    w = jax.random.normal(key, (rows * s,)) * 0.02
+    qt = bitslice.quantize(w, cols)
+    perm = sws.sws_permutation(w)
+    planes = bitslice.bitplanes(qt.q[perm].reshape(s, rows), cols)
+    order = jnp.arange(s, dtype=jnp.int32)
+    _, achieved = stucking.stuck_chain(planes, order, 0.0, key)
+    sign = jnp.sign(w)[perm].reshape(s, rows).astype(jnp.int8)
+    sign = jnp.where(sign == 0, 1, sign)
+    w_hat = bitslice.dequantize_from_planes(achieved, sign, qt.scale, qt.offset)
+    w_ideal = bitslice.dequantize_from_planes(planes, sign, qt.scale, qt.offset)
+    assert float(jnp.max(jnp.abs(w_hat - w_ideal))) <= float(qt.scale) + 1e-7

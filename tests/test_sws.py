@@ -1,0 +1,93 @@
+"""Tests for Sorted Weight Sectioning — the paper's §III.A claim."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.core import bitslice, cost, sws
+
+
+def test_permutation_sorts_by_magnitude(key):
+    w = jax.random.normal(key, (1000,))
+    perm = sws.sws_permutation(w)
+    sorted_abs = jnp.abs(w)[perm]
+    assert bool(jnp.all(sorted_abs[1:] >= sorted_abs[:-1]))
+
+
+@given(n=st.integers(2, 300))
+def test_inverse_permutation(n):
+    rng = np.random.default_rng(n)
+    perm = jnp.asarray(rng.permutation(n), jnp.int32)
+    inv = sws.inverse_permutation(perm)
+    np.testing.assert_array_equal(perm[inv], jnp.arange(n))
+    np.testing.assert_array_equal(inv[perm], jnp.arange(n))
+
+
+@given(n=st.integers(1, 500), rows=st.sampled_from([16, 128]))
+def test_restore_flat_roundtrip(n, rows):
+    rng = np.random.default_rng(n)
+    flat = jnp.asarray(rng.normal(size=n), jnp.float32)
+    sections, perm, n_out = sws.sorted_sections(flat, rows)
+    np.testing.assert_allclose(sws.restore_flat(sections, perm, n_out), flat, rtol=1e-6)
+
+
+def test_sws_reduces_chain_transitions(key):
+    """The core paper claim: sorted section order needs fewer transitions than
+    the natural (unsorted/ISAAC-style) order, for bell-shaped weights."""
+    rows, cols = 128, 10
+    w = jax.random.normal(key, (rows * 256,)) * 0.02
+    qt = bitslice.quantize(w, cols)
+
+    planes_u = bitslice.bitplanes(qt.q.reshape(-1, rows), cols)
+    perm = sws.sws_permutation(w)
+    planes_s = bitslice.bitplanes(qt.q[perm].reshape(-1, rows), cols)
+
+    t_unsorted = int(cost.chain_transitions(planes_u))
+    t_sorted = int(cost.chain_transitions(planes_s))
+    assert t_sorted < t_unsorted
+    # paper Fig. 5 band: 1.4x - 1.9x for real DNN tensors; gaussian synthetic
+    # falls in the same regime
+    assert t_unsorted / t_sorted > 1.2
+
+
+def test_sws_direction_irrelevant(key):
+    rows, cols = 64, 8
+    w = jax.random.normal(key, (rows * 64,)) * 0.02
+    qt = bitslice.quantize(w, cols)
+    up = sws.sws_permutation(w)
+    down = sws.sws_permutation(w, descending=True)
+    pu = bitslice.bitplanes(qt.q[up].reshape(-1, rows), cols)
+    pd = bitslice.bitplanes(qt.q[down].reshape(-1, rows), cols)
+    # without the initial pristine program, a reversed chain has equal cost
+    a = int(cost.chain_transitions(pu, include_initial=False))
+    b = int(cost.chain_transitions(pd, include_initial=False))
+    # descending reverses element order but also reverses section *contents*
+    # (sections are re-chunked), so costs differ slightly; they must be close.
+    assert abs(a - b) / max(a, 1) < 0.1
+
+
+def test_tsp_greedy_is_valid_order_and_not_worse(key):
+    rows, cols = 32, 8
+    w = jax.random.normal(key, (rows * 40,)) * 0.02
+    qt = bitslice.quantize(w, cols)
+    perm = sws.sws_permutation(w)
+    planes = bitslice.bitplanes(qt.q[perm].reshape(-1, rows), cols)
+    packed = bitslice.pack_rows(planes)
+
+    order = sws.tsp_greedy_order(packed)
+    np.testing.assert_array_equal(np.sort(np.asarray(order)), np.arange(planes.shape[0]))
+
+    t_mag = int(cost.chain_transitions(planes, include_initial=False))
+    t_tsp = int(cost.chain_transitions(planes, order, include_initial=False))
+    # nearest-neighbour on true Hamming distance should beat (or match) the
+    # magnitude-order proxy it greedily optimizes
+    assert t_tsp <= t_mag * 1.02
+
+
+def test_section_norm_order_sorts_sections(key):
+    sections = jax.random.normal(key, (10, 16))
+    order = sws.section_norm_order(sections)
+    means = jnp.mean(jnp.abs(sections), axis=-1)[order]
+    assert bool(jnp.all(means[1:] >= means[:-1]))
