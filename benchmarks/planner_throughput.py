@@ -1,0 +1,117 @@
+"""Planner throughput: packed jitted fast path vs the seed bool path.
+
+Prices a gemma-2b-scale weight pytree end-to-end with ``build_deployment``
+twice — ``PlannerConfig(impl="packed")`` (canonical packed planes, batched
+pair pricing, shape-bucketed jit) and ``PlannerConfig(impl="bool")`` (the
+seed implementation: eager bool planes, per-chain Python loops) — verifies
+the two plans are bit-exact, and reports the wall-clock speedup.
+
+Tensor shapes are gemma-2b's per-layer matmuls (repeated across layers, so
+the fast path's shape-bucketed jit cache is exercised the way a real LM
+deployment exercises it); per-tensor elements are capped at ``max_elems``
+like every other benchmark here (transitions are a per-element statistic, so
+a uniform subsample is unbiased — see ``benchmarks.common``).
+
+  PYTHONPATH=src python -m benchmarks.planner_throughput [--full] [--layers N]
+
+Writes experiments/bench/BENCH_planner.json.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, _lm_layer_shapes, banner, save_json
+from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment
+
+ARCH = "gemma-2b"
+
+
+def gemma_scale_params(
+    *, max_elems: int = 750_000, layers: int | None = None, seed: int = 0
+) -> dict:
+    """Weight pytree with gemma-2b layer shapes (rows truncated to the cap)."""
+    from repro.configs import get_arch
+
+    shapes = _lm_layer_shapes(ARCH)
+    n_layers = layers if layers is not None else get_arch(ARCH).n_layers
+    key = jax.random.PRNGKey(seed)
+    params: dict = {}
+    for i in range(n_layers):
+        layer = {}
+        for j, (d_out, d_in) in enumerate(shapes):
+            rows = d_out if not max_elems else max(1, min(d_out, max_elems // d_in))
+            key, sub = jax.random.split(key)
+            layer[f"w{j}_{d_out}x{d_in}"] = (
+                jax.random.normal(sub, (rows, d_in)) * (2.0 / d_in) ** 0.5
+            )
+        params[f"layer_{i:02d}"] = layer
+    return params
+
+
+def run(max_elems: int = 750_000, layers: int | None = 6, p_stuck: float = 0.5) -> dict:
+    spec = CrossbarSpec(rows=128, cols=10)
+    params = gemma_scale_params(max_elems=max_elems, layers=layers)
+    n_elems = sum(int(w.size) for l in params.values() for w in l.values())
+
+    results = {}
+    for impl in ("packed", "bool"):
+        cfg = PlannerConfig(p_stuck=p_stuck, min_size=1024, impl=impl)
+        with Timer() as t:
+            plan = build_deployment(params, spec, cfg)
+        results[impl] = {"seconds": t.seconds, "plan": plan}
+
+    pp, bp = results["packed"]["plan"], results["bool"]["plan"]
+    bit_exact = set(pp.reports) == set(bp.reports) and all(
+        pp.reports[k].transitions_baseline == bp.reports[k].transitions_baseline
+        and pp.reports[k].transitions_sws == bp.reports[k].transitions_sws
+        and pp.reports[k].transitions_final == bp.reports[k].transitions_final
+        and pp.reports[k].lockstep_time_greedy == bp.reports[k].lockstep_time_greedy
+        and pp.reports[k].lockstep_time_ideal == bp.reports[k].lockstep_time_ideal
+        and bool(jnp.all(pp.deployed[k] == bp.deployed[k]))
+        for k in pp.reports
+    )
+
+    t_packed = results["packed"]["seconds"]
+    t_bool = results["bool"]["seconds"]
+    return {
+        "arch": ARCH,
+        "backend": jax.default_backend(),
+        "layers": len(params),
+        "n_tensors": len(pp.reports),
+        "n_elements": n_elems,
+        "max_elems": max_elems,
+        "p_stuck": p_stuck,
+        "time_packed_s": t_packed,
+        "time_bool_s": t_bool,
+        "speedup": t_bool / max(t_packed, 1e-9),
+        "bit_exact": bit_exact,
+        "totals": pp.totals(),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="all layers, 2M-element cap")
+    ap.add_argument("--layers", type=int, default=None)
+    args = ap.parse_args()
+    layers = args.layers if args.layers is not None else (None if args.full else 6)
+    max_elems = 2_000_000 if args.full else 750_000
+
+    banner("Planner throughput — packed fast path vs seed bool path")
+    r = run(max_elems=max_elems, layers=layers)
+    print(
+        f"  {r['arch']} x{r['layers']} layers ({r['n_tensors']} tensors, "
+        f"{r['n_elements']/1e6:.1f}M weights) on {r['backend']}"
+    )
+    print(
+        f"  packed {r['time_packed_s']:.2f}s  bool {r['time_bool_s']:.2f}s  "
+        f"-> {r['speedup']:.2f}x  bit_exact={r['bit_exact']}"
+    )
+    save_json("BENCH_planner", r)
+
+
+if __name__ == "__main__":
+    main()

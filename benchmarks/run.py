@@ -19,6 +19,7 @@ from benchmarks import (
     fig8_stucking,
     fig9_p_sweep,
     fig10_columns,
+    planner_throughput,
     redeploy_delta,
     roofline,
 )
@@ -90,6 +91,22 @@ def main() -> None:
     summary["accuracy_e2e"] = {
         "drop_pct": racc["accuracy_drop_pct"],
         "total_speedup": racc["total_speedup"],
+    }
+
+    banner("Planner throughput — packed fast path vs seed bool path")
+    rpt = planner_throughput.run(
+        max_elems=2_000_000 if args.full else 750_000,
+        layers=None if args.full else 6,
+    )
+    print(
+        f"  {rpt['arch']} x{rpt['layers']} layers ({rpt['n_elements']/1e6:.1f}M weights): "
+        f"packed {rpt['time_packed_s']:.1f}s vs bool {rpt['time_bool_s']:.1f}s "
+        f"-> {rpt['speedup']:.2f}x  bit_exact={rpt['bit_exact']}"
+    )
+    save_json("BENCH_planner", rpt)
+    summary["planner_throughput"] = {
+        "speedup": rpt["speedup"],
+        "bit_exact": rpt["bit_exact"],
     }
 
     banner("Redeploy delta (training-time integration, beyond-paper)")

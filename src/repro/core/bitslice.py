@@ -63,16 +63,22 @@ def quantize(w: jax.Array, cols: int, encoding: Encoding = "sign_magnitude") -> 
     """Quantize a tensor (any shape; flattened) to ``cols``-bit crossbar form."""
     flat = jnp.ravel(w).astype(jnp.float32)
     levels = jnp.float32(2**cols - 1)
+    # Explicit reciprocal multiply: XLA rewrites division-by-constant to a
+    # reciprocal multiply in some compilation contexts but not others, which
+    # would make eager and jitted quantization differ by 1 ULP in ``scale``.
+    # A literal constant multiply is bit-deterministic everywhere, keeping
+    # the planner's packed (jitted) and bool (eager) paths bit-identical.
+    inv_levels = jnp.float32(1.0 / (2**cols - 1))
     if encoding == "sign_magnitude":
         amax = jnp.maximum(jnp.max(jnp.abs(flat)), jnp.finfo(jnp.float32).tiny)
-        scale = amax / levels
+        scale = amax * inv_levels
         q = jnp.clip(jnp.round(jnp.abs(flat) / scale), 0, levels).astype(jnp.int32)
         sign = jnp.where(flat < 0, -1, 1).astype(jnp.int8)
         offset = jnp.float32(0.0)
     elif encoding == "offset_binary":
         lo, hi = jnp.min(flat), jnp.max(flat)
         rng = jnp.maximum(hi - lo, jnp.finfo(jnp.float32).tiny)
-        scale = rng / levels
+        scale = rng * inv_levels
         q = jnp.clip(jnp.round((flat - lo) / scale), 0, levels).astype(jnp.int32)
         sign = jnp.ones_like(q, dtype=jnp.int8)
         offset = lo
@@ -95,6 +101,14 @@ def dequantize_from_planes(
     """Reassemble weights from (possibly error-injected) bit planes.
 
     planes: bool/int[..., cols] with plane 0 = LSB.  Returns f32[...].
+
+    NOTE: the float result is only bit-reproducible *per compiled context* —
+    XLA may contract the multiply chain with the offset add into an FMA, and
+    whether it does depends on the surrounding fusion, so eager calls and
+    differently-fused jits can disagree in the last ULP.  Callers needing
+    bit-identical floats across call sites must route every call through ONE
+    shared jitted entry (see ``planner._dequant_slots``, used by both
+    planner impls) instead of inlining this into larger jits.
     """
     cols = planes.shape[-1]
     weights_of_two = (2 ** jnp.arange(cols, dtype=jnp.int32)).astype(jnp.int32)
@@ -127,6 +141,29 @@ def unpack_rows(packed: jax.Array, rows: int) -> jax.Array:
     """Inverse of :func:`pack_rows` -> bool[S, rows, cols]."""
     planes = jnp.unpackbits(packed, axis=1, count=rows)
     return planes.astype(jnp.bool_)
+
+
+def pack_axis0(mask: jax.Array) -> jax.Array:
+    """Pack axis 0 of bool[rows, k] into uint8[ceil(rows/8), k] words.
+
+    Same MSB-first byte convention as :func:`pack_rows`; used to apply
+    per-row Bernoulli masks directly to packed planes (bit stucking).
+    """
+    rows = mask.shape[0]
+    pad = (-rows) % 8
+    if pad:
+        mask = jnp.pad(mask, ((0, pad),) + ((0, 0),) * (mask.ndim - 1))
+    return jnp.packbits(mask.astype(jnp.uint8), axis=0)
+
+
+def section_planes_packed(q: jax.Array, rows: int, cols: int) -> jax.Array:
+    """int32[S*rows] magnitudes -> packed uint8[S, ceil(rows/8), cols] planes.
+
+    The canonical planner representation: one packbits per tensor, after
+    which all pricing (cost/schedule/stucking) runs on packed words.
+    ``q`` must already be padded to a multiple of ``rows``.
+    """
+    return pack_rows(bitplanes(q.reshape(-1, rows), cols))
 
 
 def section(flat: jax.Array, rows: int) -> tuple[jax.Array, int]:

@@ -11,15 +11,35 @@ bit-stucking analysis (low-order columns carry a disproportionate share of
 transitions because their bit values are ~Bernoulli(0.5)).
 
 Two equivalent paths are provided:
-  * bool planes  — direct XOR + sum (clear, differentiable-ish, CPU-friendly)
-  * packed uint8 — XOR + ``lax.population_count`` (8x less data; the Pallas
-    ``hamming`` kernel in ``repro.kernels.hamming`` implements the same
-    contract for TPU and is validated against these functions).
+  * bool planes  — direct XOR + sum (clear, differentiable-ish; kept as the
+    readable oracle the packed path is tested against)
+  * packed uint8 — XOR + ``lax.population_count`` (8x less data movement)
+
+**Packed-plane invariant (canonical fast path).**  The planner packs each
+tensor's bit planes exactly once (``bitslice.section_planes_packed``) into
+``uint8[S, W, cols]`` where ``W = ceil(rows/8)``: the *rows* axis is packed
+MSB-first into byte words, the bit-column axis stays unpacked (so per-column
+stucking/pricing still slices ``[..., :k]``), and row padding is zero (a
+pristine memristor), which makes padded words free in every XOR+popcount.
+All downstream pricing — the batched pair pricing in ``core.schedule``
+(the planner's actual hot path) and the stucking walks in ``core.stucking``
+— consumes these packed words directly; bool planes are only materialized
+at the very end for dequantization.  ``chain_transitions_packed`` /
+``consecutive_costs_packed`` here are the packed twins of the chain-level
+oracles, used for parity pinning and ad-hoc packed pricing rather than by
+the planner itself.  Pair pricing dispatches through
+``repro.kernels.hamming.ops.price_pairs``: the compiled Pallas kernel on
+TPU, a plain ``lax.population_count`` XOR on every other backend
+(interpret-mode Pallas would be far slower than the portable fallback).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+
+def _popcount_i32(x: jax.Array) -> jax.Array:
+    return jax.lax.population_count(x).astype(jnp.int32)
 
 
 def pair_transitions(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -31,6 +51,40 @@ def pair_transitions_packed(a: jax.Array, b: jax.Array) -> jax.Array:
     """R_AB for packed uint8 planes [..., words, cols] -> int32[...]."""
     x = jax.lax.population_count(jnp.bitwise_xor(a, b))
     return jnp.sum(x.astype(jnp.int32), axis=(-2, -1))
+
+
+def chain_transitions_packed(
+    packed: jax.Array,
+    order: jax.Array | None = None,
+    *,
+    include_initial: bool = True,
+    per_column: bool = False,
+) -> jax.Array:
+    """:func:`chain_transitions` on packed planes uint8[S, W, cols].
+
+    Bit-exact with the bool path: row padding inside the packed words is zero
+    on both chain states, so it never contributes to the XOR popcount.
+    """
+    seq = packed if order is None else packed[order]
+    diffs = _popcount_i32(jnp.bitwise_xor(seq[1:], seq[:-1]))
+    axes = (0, 1, 2) if not per_column else (0, 1)
+    total = jnp.sum(diffs, axis=axes)
+    if include_initial:
+        first = _popcount_i32(seq[0])
+        total = total + jnp.sum(first, axis=0 if per_column else None)
+    return total
+
+
+def consecutive_costs_packed(
+    packed: jax.Array, order: jax.Array | None = None, *, include_initial: bool = True
+) -> jax.Array:
+    """:func:`consecutive_costs` on packed planes -> int32[T] (or [T-1])."""
+    seq = packed if order is None else packed[order]
+    step = jnp.sum(_popcount_i32(jnp.bitwise_xor(seq[1:], seq[:-1])), axis=(1, 2))
+    if include_initial:
+        first = jnp.sum(_popcount_i32(seq[0]))[None]
+        step = jnp.concatenate([first, step])
+    return step
 
 
 def chain_transitions(

@@ -18,15 +18,32 @@ length ``S * rows`` together with ``perm_full`` — a permutation of
 ``>= n`` are zero padding).  All orderings (magnitude sort, beyond-paper TSP
 section reorder) compose into ``perm_full``, and reconstruction is a single
 scatter, so index matching stays exact no matter how sections are shuffled.
+
+**Fast path (default, ``impl="packed"``).**  The whole per-tensor pipeline is
+one jitted function keyed on ``(tensor shape, spec, config)``: pricing a full
+LM config retraces once per *distinct* weight shape (a handful for a
+transformer), not once per tensor.  Bit planes are packed exactly once into
+the canonical ``uint8[S, W, cols]`` words (``bitslice.section_planes_packed``)
+and every downstream consumer — the batched pair pricing in
+``core.schedule``, the stucking walks in ``core.stucking``, the TSP section
+reorder in ``core.sws`` — operates on packed words; bool planes are only
+unpacked at the very end to reconstruct achieved weights.  Pair pricing
+dispatches through ``repro.kernels.hamming.ops.price_pairs``: the compiled
+Pallas ``hamming`` kernel on TPU, a portable ``lax.population_count`` XOR on
+CPU/GPU.  ``impl="bool"`` preserves the original eager bool-plane pipeline
+(per-chain Python loops) as the parity oracle and benchmark baseline; both
+paths share one PRNG discipline and produce bit-identical plans.
 """
 from __future__ import annotations
 
 import dataclasses
 import re
+from functools import partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitslice, schedule, stucking, sws
 
@@ -54,6 +71,7 @@ class PlannerConfig:
     min_ndim: int = 2
     exclude: tuple[str, ...] = ("embed", "embedding", "lm_head", "pos_emb")
     seed: int = 0
+    impl: str = "packed"  # "packed" (jitted fast path) | "bool" (reference)
 
 
 @dataclasses.dataclass
@@ -111,33 +129,140 @@ def _sort_key(flat_padded: jax.Array, encoding: str) -> jax.Array:
     return jnp.abs(flat_padded) if encoding == "sign_magnitude" else flat_padded
 
 
+def _perm_full_with_inverse(
+    flat_padded: jax.Array, spec: CrossbarSpec, config: PlannerConfig, q_padded: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Slot -> source permutation of length S*rows, plus its inverse.
+
+    The inverse comes for free from the host-side sort on CPU
+    (``sws.stable_argsort``), letting reconstruction be a gather instead of
+    a (much slower) scatter.
+    """
+    total = flat_padded.shape[0]
+    if not config.sws:
+        ar = jnp.arange(total, dtype=jnp.int32)
+        return ar, ar
+    perm, inv = sws.stable_argsort(
+        _sort_key(flat_padded, spec.encoding),
+        with_inverse=True,
+        nonneg=spec.encoding == "sign_magnitude",  # key is |w|
+    )
+    if config.section_order == "tsp":
+        packed = bitslice.section_planes_packed(q_padded[perm], spec.rows, spec.cols)
+        order = sws.tsp_greedy_order(packed)
+        slot = (order[:, None] * spec.rows + jnp.arange(spec.rows, dtype=jnp.int32)).reshape(-1)
+        perm = perm[slot]
+        inv = sws.inverse_permutation(perm)
+    return perm, inv
+
+
 def _perm_full(
     flat_padded: jax.Array, spec: CrossbarSpec, config: PlannerConfig, q_padded: jax.Array
 ) -> jax.Array:
     """Slot -> source-element permutation of length S*rows (see module doc)."""
-    total = flat_padded.shape[0]
-    if not config.sws:
-        return jnp.arange(total, dtype=jnp.int32)
-    perm = jnp.argsort(_sort_key(flat_padded, spec.encoding), stable=True).astype(jnp.int32)
-    if config.section_order == "tsp":
-        planes = bitslice.bitplanes(q_padded[perm].reshape(-1, spec.rows), spec.cols)
-        order = sws.tsp_greedy_order(bitslice.pack_rows(planes))
-        slot = (order[:, None] * spec.rows + jnp.arange(spec.rows, dtype=jnp.int32)).reshape(-1)
-        perm = perm[slot]
-    return perm
+    return _perm_full_with_inverse(flat_padded, spec, config, q_padded)[0]
 
 
-def analyze_tensor(
+@partial(jax.jit, static_argnames=("spec", "config"))
+def _analyze_core(
+    flat: jax.Array, key: jax.Array, spec: CrossbarSpec, config: PlannerConfig
+) -> tuple[dict[str, jax.Array], jax.Array]:
+    """Jitted per-tensor pipeline on canonical packed planes.
+
+    flat: f32[n] logical weights.  Retraces per distinct ``n`` (and static
+    spec/config), so same-shape tensors across a model share one compilation.
+    Returns (metric scalars, reconstruction aux).  Weight reconstruction
+    happens *outside* this jit (see ``analyze_tensor``): XLA contracts the
+    dequant multiply+add into an FMA inside a fused graph, which would break
+    bit-exactness of w_hat against the eager bool reference.
+    """
+    n = flat.shape[0]
+    pad = (-n) % spec.rows
+    flat_padded = jnp.pad(flat, (0, pad))
+    total = n + pad
+    s = total // spec.rows
+    l = max(1, min(config.crossbars, s))
+
+    qt = bitslice.quantize(flat, spec.cols, spec.encoding)
+    q_padded = jnp.pad(qt.q, (0, pad))
+    sign_padded = jnp.pad(qt.sign, (0, pad), constant_values=1)
+
+    chains = schedule.make_chains(s, l, config.schedule)
+
+    # --- baseline: unsorted natural order, full reprogramming --------------
+    packed_u = bitslice.section_planes_packed(q_padded, spec.rows, spec.cols)
+    jobs_u = schedule.schedule_job_costs(packed_u, chains, include_initial=config.include_initial)
+
+    # --- SWS order ---------------------------------------------------------
+    perm, inv_perm = _perm_full_with_inverse(flat_padded, spec, config, q_padded)
+    packed_s = bitslice.section_planes_packed(q_padded[perm], spec.rows, spec.cols)
+    jobs_s = schedule.schedule_job_costs(packed_s, chains, include_initial=config.include_initial)
+
+    # --- bit stucking on the SWS schedule ----------------------------------
+    # Totals, lockstep times, and lockstep_time_ideal are all aggregated on
+    # the host (int64 / float64) in the wrapper: device sums are int32-bound
+    # (jax without x64) and a whole-tensor total can exceed 2^31 at extreme
+    # scale, while per-job and per-chain values stay far below it.
+    if config.p_stuck < 1.0:
+        stuck_chain_totals, achieved_packed = stucking.stuck_schedule_packed(
+            packed_s,
+            chains,
+            config.p_stuck,
+            key,
+            rows=spec.rows,
+            stuck_cols=config.stuck_cols,
+            include_initial=config.include_initial,
+        )
+    else:
+        stuck_chain_totals = None
+        achieved_packed = packed_s
+
+    metrics = {
+        "jobs_u": jobs_u,
+        "jobs_s": jobs_s,
+        "stuck_chain_totals": stuck_chain_totals,
+    }
+    aux = {
+        "achieved_packed": achieved_packed,
+        "sign_slots": sign_padded[perm].reshape(s, spec.rows),
+        "scale": qt.scale,
+        "offset": qt.offset,
+        "inv_perm": inv_perm,
+    }
+    return metrics, aux
+
+
+@partial(jax.jit, static_argnames=("rows",))
+def _dequant_slots(
+    achieved_packed: jax.Array,
+    sign_slots: jax.Array,
+    scale: jax.Array,
+    offset: jax.Array,
+    *,
+    rows: int,
+) -> jax.Array:
+    """Achieved packed planes -> achieved slot weights f32[S, rows].
+
+    Deliberately its own jit entry, called identically by the packed and bool
+    planner impls: float rounding (XLA may contract the dequant multiply+add
+    into an FMA) is then decided by ONE executable, so both impls get
+    bit-identical weights by construction.
+    """
+    achieved = bitslice.unpack_rows(achieved_packed, rows)
+    return bitslice.dequantize_from_planes(achieved, sign_slots, scale, offset)
+
+
+def _analyze_tensor_bool(
     w: jax.Array,
     spec: CrossbarSpec,
     config: PlannerConfig,
     key: jax.Array,
     name: str = "w",
 ) -> tuple[TensorReport, jax.Array]:
-    """Full paper pipeline for one weight tensor.
+    """Seed reference pipeline: eager bool planes + per-chain loops.
 
-    Returns (report, w_hat) where w_hat carries the achieved (quantized +
-    stuck-bit) values in the tensor's logical layout.
+    Bit-identical to the packed path (same PRNG discipline); kept for parity
+    tests and as the ``benchmarks/planner_throughput.py`` baseline.
     """
     flat = jnp.ravel(w).astype(jnp.float32)
     n = flat.shape[0]
@@ -154,23 +279,34 @@ def analyze_tensor(
     # --- baseline: unsorted natural order, full reprogramming --------------
     planes_u = bitslice.bitplanes(q_padded.reshape(s, spec.rows), spec.cols)
     chains = schedule.make_chains(s, l, config.schedule)
-    trans_base = int(
-        schedule.schedule_transitions(planes_u, chains, include_initial=config.include_initial)
+    jobs_u = schedule.schedule_job_costs_looped(
+        planes_u, chains, include_initial=config.include_initial
     )
-    jobs_u = schedule.schedule_job_costs(planes_u, chains, include_initial=config.include_initial)
+    trans_base = int(jnp.sum(jobs_u))
     lk_unsorted = int(schedule.lockstep_time(jobs_u, config.threads, sort_jobs=False))
 
-    # --- SWS order ----------------------------------------------------------
-    perm = _perm_full(flat_padded, spec, config, q_padded)
+    # --- SWS order (seed device argsort; stable, so identical to the fast
+    # host-callback sort the packed path uses) ------------------------------
+    if not config.sws:
+        perm = jnp.arange(total, dtype=jnp.int32)
+    else:
+        perm = jnp.argsort(_sort_key(flat_padded, spec.encoding), stable=True).astype(jnp.int32)
+        if config.section_order == "tsp":
+            packed_t = bitslice.section_planes_packed(q_padded[perm], spec.rows, spec.cols)
+            order = sws.tsp_greedy_order(packed_t)
+            slot = (
+                order[:, None] * spec.rows + jnp.arange(spec.rows, dtype=jnp.int32)
+            ).reshape(-1)
+            perm = perm[slot]
     planes_s = bitslice.bitplanes(q_padded[perm].reshape(s, spec.rows), spec.cols)
-    trans_sws = int(
-        schedule.schedule_transitions(planes_s, chains, include_initial=config.include_initial)
+    jobs_s = schedule.schedule_job_costs_looped(
+        planes_s, chains, include_initial=config.include_initial
     )
-    jobs_s = schedule.schedule_job_costs(planes_s, chains, include_initial=config.include_initial)
+    trans_sws = int(jnp.sum(jobs_s))
     lk_greedy = int(schedule.lockstep_time(jobs_s, config.threads, sort_jobs=True))
     lk_ideal = float(jnp.sum(jobs_s)) / config.threads
 
-    # --- bit stucking on the SWS schedule ------------------------------------
+    # --- bit stucking on the SWS schedule ----------------------------------
     if config.p_stuck < 1.0:
         total_fin, achieved = stucking.stuck_schedule(
             planes_s,
@@ -185,14 +321,14 @@ def analyze_tensor(
         trans_final = trans_sws
         achieved = planes_s
 
-    # --- reconstruct achieved weights (exact index matching) ----------------
+    # --- reconstruct achieved weights (exact index matching) ---------------
     sign_slots = sign_padded[perm].reshape(s, spec.rows)
-    w_hat_slots = bitslice.dequantize_from_planes(achieved, sign_slots, qt.scale, qt.offset)
+    w_hat_slots = _dequant_slots(
+        bitslice.pack_rows(achieved), sign_slots, qt.scale, qt.offset, rows=spec.rows
+    )
     logical = jnp.zeros((total,), dtype=jnp.float32).at[perm].set(w_hat_slots.reshape(-1))
     w_hat_flat = logical[:n]
     w_hat = w_hat_flat.reshape(w.shape).astype(w.dtype)
-
-    quant_mse = float(jnp.mean((flat - w_hat_flat) ** 2))
 
     report = TensorReport(
         name=name,
@@ -205,7 +341,70 @@ def analyze_tensor(
         lockstep_time_unsorted=lk_unsorted,
         lockstep_time_greedy=lk_greedy,
         lockstep_time_ideal=lk_ideal,
-        quant_mse=quant_mse,
+        quant_mse=float(jnp.mean((flat - w_hat_flat) ** 2)),
+    )
+    return report, w_hat
+
+
+def analyze_tensor(
+    w: jax.Array,
+    spec: CrossbarSpec,
+    config: PlannerConfig,
+    key: jax.Array,
+    name: str = "w",
+) -> tuple[TensorReport, jax.Array]:
+    """Full paper pipeline for one weight tensor.
+
+    Returns (report, w_hat) where w_hat carries the achieved (quantized +
+    stuck-bit) values in the tensor's logical layout.
+    """
+    if config.impl == "bool":
+        return _analyze_tensor_bool(w, spec, config, key, name=name)
+    if config.impl != "packed":
+        raise ValueError(f"unknown planner impl: {config.impl!r}")
+
+    flat = jnp.ravel(w).astype(jnp.float32)
+    metrics, aux = _analyze_core(flat, key, spec, config)
+
+    # Reconstruction runs through the SAME _dequant_slots executable as the
+    # bool reference, so float rounding matches it bit-for-bit; the gather by
+    # the host-computed inverse permutation replaces the reference's scatter
+    # (pure data movement either way — values are bit-identical).
+    w_hat_slots = _dequant_slots(
+        aux["achieved_packed"], aux["sign_slots"], aux["scale"], aux["offset"],
+        rows=spec.rows,
+    )
+    n = flat.shape[0]
+    w_hat_flat = w_hat_slots.reshape(-1)[aux["inv_perm"]][:n]
+    w_hat = w_hat_flat.reshape(w.shape).astype(w.dtype)
+
+    # Host int64 aggregation: whole-tensor totals can exceed int32 at
+    # extreme scale (see _analyze_core).  Matches the bool reference's
+    # values exactly wherever the reference itself does not overflow.
+    jobs_u = np.asarray(metrics["jobs_u"])
+    jobs_s = np.asarray(metrics["jobs_s"])
+    trans_sws = int(np.sum(jobs_s, dtype=np.int64))
+    if metrics["stuck_chain_totals"] is not None:
+        trans_final = int(np.sum(np.asarray(metrics["stuck_chain_totals"]), dtype=np.int64))
+    else:
+        trans_final = trans_sws
+
+    report = TensorReport(
+        name=name,
+        shape=tuple(w.shape),
+        n_weights=int(flat.shape[0]),
+        n_sections=-(-int(flat.shape[0]) // spec.rows),
+        transitions_baseline=int(np.sum(jobs_u, dtype=np.int64)),
+        transitions_sws=trans_sws,
+        transitions_final=trans_final,
+        lockstep_time_unsorted=int(
+            schedule.lockstep_time_host(jobs_u, config.threads, sort_jobs=False)
+        ),
+        lockstep_time_greedy=int(
+            schedule.lockstep_time_host(jobs_s, config.threads, sort_jobs=True)
+        ),
+        lockstep_time_ideal=float(trans_sws) / config.threads,
+        quant_mse=float(jnp.mean((flat - w_hat_flat) ** 2)),
     )
     return report, w_hat
 

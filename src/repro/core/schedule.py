@@ -11,6 +11,16 @@ parallel, a *schedule* assigns each crossbar a chain of sections to walk:
   sections; only the L seed programs are 'far'.  This is the paper's winning
   schedule (Fig. 3b, Fig. 6b).
 
+Pricing a schedule is embarrassingly pair-parallel: every job (one crossbar
+reprogram) is an independent ``popcount(prev ^ cur)``.  ``schedule_job_costs``
+therefore flattens *all* chains into one batched pairs array — ``prev[i]`` /
+``cur[i]`` section indices per job, with a synthetic index for the pristine
+all-zero state — and prices the whole schedule in a single
+``price_pairs`` call (Pallas ``hamming`` kernel on TPU, portable
+``lax.population_count`` elsewhere).  Inputs may be bool planes
+``[S, rows, cols]`` (packed on the fly) or canonical packed planes
+``uint8[S, W, cols]`` from ``bitslice.section_planes_packed``.
+
 Thread balancing (§III.C, Fig. 4): programming engines run in lockstep rounds
 (one crossbar program per thread per round); a round lasts as long as its
 most expensive job.  The paper's greedy groups *similar-cost* jobs into the
@@ -21,24 +31,33 @@ asynchronous-threads interpretation as an ablation.
 """
 from __future__ import annotations
 
+import heapq
 import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.core import bitslice
 from repro.core import cost as cost_lib
+from repro.kernels.hamming import ops as hamming_ops
 
 
 # ---------------------------------------------------------------------------
 # Schedules
 # ---------------------------------------------------------------------------
 
-def stride_l_chains(s: int, l: int) -> list[jnp.ndarray]:
-    """Chains for stride-L scheduling: chains[i] = [i, i+L, i+2L, ...]."""
-    return [jnp.arange(i, s, l, dtype=jnp.int32) for i in range(min(l, s))]
+def stride_l_chains(s: int, l: int) -> list[np.ndarray]:
+    """Chains for stride-L scheduling: chains[i] = [i, i+L, i+2L, ...].
+
+    Chains are host numpy arrays: they encode static schedule *structure*
+    (always built from concrete section counts), which keeps them usable as
+    constants inside jitted pricing functions.
+    """
+    return [np.arange(i, s, l, dtype=np.int32) for i in range(min(l, s))]
 
 
-def stride_1_chains(s: int, l: int) -> list[jnp.ndarray]:
+def stride_1_chains(s: int, l: int) -> list[np.ndarray]:
     """Chains for stride-1 scheduling: L contiguous blocks of the sorted list."""
     block = math.ceil(s / l)
     chains = []
@@ -46,16 +65,74 @@ def stride_1_chains(s: int, l: int) -> list[jnp.ndarray]:
         lo, hi = i * block, min((i + 1) * block, s)
         if lo >= hi:
             break
-        chains.append(jnp.arange(lo, hi, dtype=jnp.int32))
+        chains.append(np.arange(lo, hi, dtype=np.int32))
     return chains
 
 
-def make_chains(s: int, l: int, kind: str) -> list[jnp.ndarray]:
+def make_chains(s: int, l: int, kind: str) -> list[np.ndarray]:
     if kind == "stride1":
         return stride_1_chains(s, l)
     if kind == "strideL":
         return stride_l_chains(s, l)
     raise ValueError(f"unknown schedule kind: {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Batched pair pricing
+# ---------------------------------------------------------------------------
+
+def chain_pairs(
+    chains: list[jnp.ndarray], *, include_initial: bool = True
+) -> tuple[np.ndarray, np.ndarray]:
+    """Flatten chains into one batched (prev, cur) job-index array.
+
+    Job ``i`` reprograms a crossbar holding section ``prev[i]`` with section
+    ``cur[i]``; ``prev == -1`` denotes the pristine all-zero crossbar.  Jobs
+    appear chain by chain in walk order, matching the historical
+    per-chain concatenation contract of :func:`schedule_job_costs`.
+
+    Chains must be concrete (they always are: schedules are built from static
+    section counts, never traced values).
+    """
+    prevs, curs = [], []
+    for c in chains:
+        c = np.asarray(c, dtype=np.int32)
+        if include_initial:
+            prevs.append(np.concatenate([np.array([-1], np.int32), c[:-1]]))
+            curs.append(c)
+        else:
+            prevs.append(c[:-1])
+            curs.append(c[1:])
+    return np.concatenate(prevs), np.concatenate(curs)
+
+
+def _as_packed(planes: jax.Array) -> jax.Array:
+    """Accept bool[S, rows, cols] or packed uint8[S, W, cols] planes."""
+    if planes.dtype == jnp.uint8:
+        return planes
+    return bitslice.pack_rows(planes)
+
+
+def schedule_job_costs(
+    planes: jax.Array,
+    chains: list[jnp.ndarray],
+    *,
+    include_initial: bool = True,
+) -> jax.Array:
+    """Flat per-job costs (one job = one crossbar reprogram) -> int32[njobs].
+
+    All chain steps are priced in ONE batched ``price_pairs`` call on packed
+    planes — no per-chain Python loop over XORs.
+    """
+    packed = _as_packed(planes)
+    prev, cur = chain_pairs(chains, include_initial=include_initial)
+    if prev.shape[0] == 0:
+        return jnp.zeros((0,), jnp.int32)
+    # Prepend the pristine all-zero state so prev == -1 gathers zeros.
+    states = jnp.concatenate(
+        [jnp.zeros((1,) + packed.shape[1:], packed.dtype), packed], axis=0
+    )
+    return hamming_ops.price_pairs(states[prev + 1], states[cur + 1])
 
 
 def schedule_transitions(
@@ -65,19 +142,21 @@ def schedule_transitions(
     include_initial: bool = True,
 ) -> jax.Array:
     """Total transitions across all crossbars -> int32[] (sum over chains)."""
-    totals = [
-        cost_lib.chain_transitions(planes, c, include_initial=include_initial) for c in chains
-    ]
-    return jnp.sum(jnp.stack(totals))
+    return jnp.sum(schedule_job_costs(planes, chains, include_initial=include_initial))
 
 
-def schedule_job_costs(
+def schedule_job_costs_looped(
     planes: jax.Array,
     chains: list[jnp.ndarray],
     *,
     include_initial: bool = True,
 ) -> jax.Array:
-    """Flat per-job costs (one job = one crossbar reprogram) -> int32[njobs]."""
+    """Seed reference: per-chain Python loop over bool-plane XOR sums.
+
+    Kept as the oracle the batched packed path is parity-tested against and
+    as the baseline ``benchmarks/planner_throughput.py`` measures speedup
+    over (``PlannerConfig(impl="bool")``).
+    """
     per_chain = [
         cost_lib.consecutive_costs(planes, c, include_initial=include_initial) for c in chains
     ]
@@ -104,6 +183,24 @@ def lockstep_time(job_costs: jax.Array, threads: int, *, sort_jobs: bool) -> jax
     return jnp.sum(jnp.max(rounds, axis=1))
 
 
+def lockstep_time_host(job_costs, threads: int, *, sort_jobs: bool) -> np.int64:
+    """Host int64 twin of :func:`lockstep_time` (same algorithm, same values).
+
+    Used by the planner's packed fast path: whole-tensor totals can exceed
+    int32 at extreme scale (> 2^31 transitions), which the device path —
+    jax without x64 — cannot represent.  Per-job costs themselves are tiny
+    (<= rows * cols bits), so int32 inputs are always safe.
+    """
+    costs = np.asarray(job_costs, dtype=np.int64)
+    if sort_jobs:
+        costs = np.sort(costs)[::-1]
+    pad = (-costs.shape[0]) % threads
+    if pad:
+        costs = np.concatenate([costs, np.zeros(pad, np.int64)])
+    rounds = costs.reshape(-1, threads)
+    return np.sum(rounds.max(axis=1), dtype=np.int64) if rounds.size else np.int64(0)
+
+
 def lockstep_speedup(job_costs: jax.Array, threads: int, *, sort_jobs: bool) -> jax.Array:
     """Parallel speedup vs programming all jobs sequentially on one engine."""
     seq = jnp.sum(job_costs)
@@ -111,24 +208,30 @@ def lockstep_speedup(job_costs: jax.Array, threads: int, *, sort_jobs: bool) -> 
     return seq.astype(jnp.float32) / jnp.maximum(t.astype(jnp.float32), 1.0)
 
 
-def lpt_assignment(job_costs: jax.Array, threads: int) -> tuple[jax.Array, jax.Array]:
+def lpt_assignment(job_costs: jax.Array, threads: int) -> tuple[np.ndarray, np.ndarray]:
     """Longest-processing-time greedy makespan balancing (async ablation).
 
-    Returns (thread_id[njobs], thread_loads[threads]).  Implemented as a scan:
-    jobs sorted descending, each assigned to the least-loaded thread.
+    Returns (thread_id int32[njobs], thread_loads int64[threads]).  Runs on
+    the host: the greedy is inherently sequential, and host numpy gives the
+    int64 accumulators large deployments need (the former int32 ``lax.scan``
+    accumulator wrapped past ~2^31 total transitions per thread; jax without
+    x64 cannot widen it).  Ties break toward the lowest thread id, matching
+    the previous ``argmin`` behavior.
     """
-    order = jnp.argsort(-job_costs, stable=True)
-
-    def step(loads, j):
-        t = jnp.argmin(loads)
-        return loads.at[t].add(job_costs[j].astype(loads.dtype)), t.astype(jnp.int32)
-
-    loads0 = jnp.zeros((threads,), dtype=jnp.int32)
-    loads, tids_sorted = jax.lax.scan(step, loads0, order)
-    tids = jnp.zeros_like(tids_sorted).at[order].set(tids_sorted)
+    costs = np.asarray(job_costs, dtype=np.int64)
+    order = np.argsort(-costs, kind="stable")
+    tids = np.empty(costs.shape[0], np.int32)
+    loads = np.zeros(threads, np.int64)
+    heap = [(0, t) for t in range(threads)]
+    for j in order:
+        load, t = heapq.heappop(heap)
+        tids[j] = t
+        heapq.heappush(heap, (load + int(costs[j]), t))
+    for load, t in heap:
+        loads[t] = load
     return tids, loads
 
 
-def lpt_makespan(job_costs: jax.Array, threads: int) -> jax.Array:
+def lpt_makespan(job_costs: jax.Array, threads: int) -> np.int64:
     _, loads = lpt_assignment(job_costs, threads)
-    return jnp.max(loads)
+    return np.max(loads)

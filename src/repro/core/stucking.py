@@ -15,6 +15,17 @@ compute with, used by ``core.simulator`` to price the accuracy impact.
 
 p=1 reproduces full reprogramming (no error); p=0 sticks the column at its
 initial state forever (the paper's Fig. 9 extreme).
+
+Two implementations share one PRNG discipline (one subkey per programming
+step, Bernoulli mask drawn as bool[rows, stuck_cols]) and are therefore
+bit-exact with each other:
+
+  * ``stuck_chain`` / ``stuck_schedule`` — bool planes; the readable oracle.
+  * ``stuck_chain_packed`` / ``stuck_schedule_packed`` — canonical packed
+    uint8 planes (``bitslice.section_planes_packed``); the mask is packed
+    with the same MSB-first convention and applied word-wise, the state
+    update is a pure XOR (``program ⊆ trans``), and counting is popcount.
+    This is the planner's fast path.
 """
 from __future__ import annotations
 
@@ -22,6 +33,35 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import bitslice
+from repro.core.cost import _popcount_i32
+
+
+def _pad_chains(
+    chains: list[jax.Array], key: jax.Array
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Pad chains to equal length + validity mask + per-chain keys.
+
+    Returns (padded int[L, T], valid bool[L, T], keys [L, 2]).  Padding
+    repeats a chain's last section; ``valid`` is False on padded steps, and
+    the walks skip programming there entirely (``program = 0``), so padding
+    is exactly free: no counted transitions, no state change, no extra
+    stuck-bit retries (under p < 1 an *unmasked* padded step would redraw a
+    Bernoulli mask and keep reprogramming residual stuck bits — a modeling
+    artifact, and a source of duplicate scatter writes with differing
+    values).  Shared by the bool and packed schedule walks so their padding
+    and PRNG key schedule stay identical — the bit-exactness contract
+    between the two implementations depends on this block never diverging.
+    """
+    max_len = max(int(c.shape[0]) for c in chains)
+    padded = jnp.stack(
+        [jnp.concatenate([c, jnp.full((max_len - c.shape[0],), c[-1], dtype=c.dtype)]) for c in chains]
+    )
+    valid = jnp.stack(
+        [jnp.arange(max_len) < int(c.shape[0]) for c in chains]
+    )
+    return padded, valid, jax.random.split(key, len(chains))
 
 
 @partial(jax.jit, static_argnames=("stuck_cols", "include_initial"))
@@ -33,6 +73,7 @@ def stuck_chain(
     *,
     stuck_cols: int = 1,
     include_initial: bool = True,
+    valid: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Walk one crossbar through ``order`` with bit stucking.
 
@@ -44,6 +85,8 @@ def stuck_chain(
       key:    PRNG key (one subkey per programming step).
       stuck_cols: how many lowest-order columns are subject to stucking.
       include_initial: count the first program from the pristine crossbar.
+      valid: optional bool[T]; False marks schedule-padding steps, which are
+             skipped entirely (no programming, no counted transitions).
 
     Returns:
       total:    int32[] programmed transitions over the walk.
@@ -56,22 +99,98 @@ def stuck_chain(
     seq = planes[order]
     keys = jax.random.split(key, t)
     p = jnp.asarray(p, dtype=jnp.float32)
+    valid_t = jnp.ones((t,), jnp.bool_) if valid is None else valid
 
     def step(state, inp):
-        target, k = inp
+        target, k, v = inp
         trans = jnp.logical_xor(state, target)
         program = trans
         if stuck_cols > 0:
             mask = jax.random.bernoulli(k, p, shape=(rows, stuck_cols))
             stuck_part = jnp.logical_and(trans[:, :stuck_cols], mask)
             program = jnp.concatenate([stuck_part, trans[:, stuck_cols:]], axis=1)
+        program = jnp.logical_and(program, v)
         new_state = jnp.where(program, target, state)
         return new_state, (new_state, jnp.sum(program, dtype=jnp.int32))
 
     state0 = jnp.zeros((rows, cols), dtype=jnp.bool_)
-    _, (states, counts) = jax.lax.scan(step, state0, (seq, keys))
+    _, (states, counts) = jax.lax.scan(step, state0, (seq, keys, valid_t))
     total = jnp.sum(counts) if include_initial else jnp.sum(counts[1:])
     achieved = planes.at[order].set(states)
+    return total, achieved
+
+
+def _walk_packed(
+    packed: jax.Array,
+    order: jax.Array,
+    p: jax.Array | float,
+    key: jax.Array,
+    *,
+    rows: int,
+    stuck_cols: int,
+    include_initial: bool,
+    valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One packed chain walk -> (total int32[], states uint8[T, W, cols]).
+
+    ``states[t]`` is the crossbar content while section ``order[t]`` was
+    resident — the walk's raw output, before scattering back to section
+    index (kept separate so vmapped schedules can combine all chains with a
+    single scatter instead of one full-plane copy per chain).  ``valid``
+    marks schedule-padding steps exactly as in :func:`stuck_chain`.
+    """
+    t = order.shape[0]
+    seq = packed[order]
+    keys = jax.random.split(key, t)
+    p = jnp.asarray(p, dtype=jnp.float32)
+    valid_t = jnp.ones((t,), jnp.bool_) if valid is None else valid
+
+    def step(state, inp):
+        target, k, v = inp
+        trans = jnp.bitwise_xor(state, target)
+        program = trans
+        if stuck_cols > 0:
+            mask = jax.random.bernoulli(k, p, shape=(rows, stuck_cols))
+            mask_w = bitslice.pack_axis0(mask)  # uint8[W, stuck_cols]
+            stuck_part = jnp.bitwise_and(trans[:, :stuck_cols], mask_w)
+            program = jnp.concatenate([stuck_part, trans[:, stuck_cols:]], axis=1)
+        program = jnp.where(v, program, jnp.uint8(0))
+        new_state = jnp.bitwise_xor(state, program)  # program ⊆ trans
+        return new_state, (new_state, jnp.sum(_popcount_i32(program)))
+
+    state0 = jnp.zeros(packed.shape[1:], dtype=jnp.uint8)
+    _, (states, counts) = jax.lax.scan(step, state0, (seq, keys, valid_t))
+    total = jnp.sum(counts) if include_initial else jnp.sum(counts[1:])
+    return total, states
+
+
+@partial(jax.jit, static_argnames=("rows", "stuck_cols", "include_initial"))
+def stuck_chain_packed(
+    packed: jax.Array,
+    order: jax.Array,
+    p: jax.Array | float,
+    key: jax.Array,
+    *,
+    rows: int,
+    stuck_cols: int = 1,
+    include_initial: bool = True,
+    valid: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """:func:`stuck_chain` on packed planes uint8[S, W, cols].
+
+    ``rows`` is the *logical* row count (the packed axis holds ceil(rows/8)
+    byte words); the Bernoulli mask is drawn with the exact shape and key
+    schedule of the bool path, so results are bit-exact with it.  Row-padding
+    bits inside the words are zero on every chain state, hence never
+    transitional and never programmed.
+
+    Returns (total int32[], achieved uint8[S, W, cols]).
+    """
+    total, states = _walk_packed(
+        packed, order, p, key,
+        rows=rows, stuck_cols=stuck_cols, include_initial=include_initial, valid=valid,
+    )
+    achieved = packed.at[order].set(states)
     return total, achieved
 
 
@@ -86,24 +205,18 @@ def stuck_schedule(
 ) -> tuple[jax.Array, jax.Array]:
     """Run ``stuck_chain`` over every crossbar chain of a schedule (vmapped).
 
-    Chains are padded to equal length by repeating their last section —
-    reprogramming a crossbar with its current contents costs exactly zero
-    transitions and leaves the achieved state unchanged, so the padding is
-    free and exact.
+    Chain padding + key schedule come from :func:`_pad_chains` (shared with
+    the packed variant).
 
     Returns (total int32[], achieved bool[S, rows, cols]).
     """
-    max_len = max(int(c.shape[0]) for c in chains)
-    padded = jnp.stack(
-        [jnp.concatenate([c, jnp.full((max_len - c.shape[0],), c[-1], dtype=c.dtype)]) for c in chains]
-    )
-    keys = jax.random.split(key, len(chains))
+    padded, valid, keys = _pad_chains(chains, key)
 
     totals, achieved_all = jax.vmap(
-        lambda o, k: stuck_chain(
-            planes, o, p, k, stuck_cols=stuck_cols, include_initial=include_initial
+        lambda o, v, k: stuck_chain(
+            planes, o, p, k, stuck_cols=stuck_cols, include_initial=include_initial, valid=v
         )
-    )(padded, keys)
+    )(padded, valid, keys)
 
     # Each section belongs to exactly one chain in both stride schedules, so
     # combining per-chain achieved planes is a select on 'was visited here'.
@@ -111,6 +224,44 @@ def stuck_schedule(
     for i, c in enumerate(chains):
         achieved = achieved.at[c].set(achieved_all[i][c])
     return jnp.sum(totals), achieved
+
+
+def stuck_schedule_packed(
+    packed: jax.Array,
+    chains: list[jax.Array],
+    p: jax.Array | float,
+    key: jax.Array,
+    *,
+    rows: int,
+    stuck_cols: int = 1,
+    include_initial: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """:func:`stuck_schedule` on packed planes (same padding + key schedule).
+
+    Returns (chain_totals int32[L], achieved uint8[S, W, cols]) — bit-exact
+    with the bool path given the same key (``sum(chain_totals)`` equals the
+    bool path's scalar total).  Per-chain totals are returned, unlike the
+    seed bool API, so callers can aggregate on the host in int64: a
+    whole-tensor total can exceed int32 at extreme scale, while one chain's
+    total (chain length x rows x cols bits) stays far below it.
+    """
+    padded, valid, keys = _pad_chains(chains, key)
+
+    totals, states_all = jax.vmap(
+        lambda o, v, k: _walk_packed(
+            packed, o, p, k, rows=rows, stuck_cols=stuck_cols,
+            include_initial=include_initial, valid=v,
+        )
+    )(padded, valid, keys)
+
+    # Each section belongs to exactly one chain; padded steps are masked
+    # no-ops (see _pad_chains), so duplicate indices in this scatter carry
+    # values identical to the last real visit and one scatter combines all
+    # chains regardless of JAX's duplicate-write ordering.
+    achieved = packed.at[padded.reshape(-1)].set(
+        states_all.reshape((-1,) + packed.shape[1:])
+    )
+    return totals, achieved
 
 
 def expected_saving_fraction(

@@ -12,14 +12,104 @@ requires an input buffer in hardware; in simulation it is an exact gather.
 
 Beyond-paper (§7 of DESIGN.md): ``tsp_greedy_order`` replaces the magnitude
 sort's *section order* with a nearest-neighbour walk on actual bit-pattern
-Hamming distance — magnitude sorting is a proxy for this objective.
+Hamming distance — magnitude sorting is a proxy for this objective.  It
+operates on the planner's canonical *packed* uint8 planes
+(``bitslice.section_planes_packed``); bool planes are packed on entry.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bitslice, cost
+
+
+_SORT_POOL = None  # lazily-created 2-thread pool for the split host sort
+_SPLIT_SORT_MIN = 1 << 18  # below this, one np.argsort call wins
+
+
+def _split_stable_argsort(keys: np.ndarray) -> np.ndarray:
+    """Stable argsort via two threaded half-sorts + a vectorized stable merge.
+
+    numpy's sort releases the GIL, so the two halves run truly in parallel.
+    The merge ranks with ``searchsorted`` — ``side='left'`` for the left
+    half, ``side='right'`` for the right half — which reproduces exactly the
+    left-first tie order of a single stable sort.
+    """
+    global _SORT_POOL
+    if _SORT_POOL is None:
+        from concurrent.futures import ThreadPoolExecutor
+
+        _SORT_POOL = ThreadPoolExecutor(max_workers=2)
+    n = keys.shape[0]
+    mid = n // 2
+    lo, hi = keys[:mid], keys[mid:]
+    f_lo = _SORT_POOL.submit(np.argsort, lo, kind="stable")
+    p_hi = np.argsort(hi, kind="stable")
+    p_lo = f_lo.result()
+    k_lo, k_hi = lo[p_lo], hi[p_hi]
+    pos_lo = np.searchsorted(k_hi, k_lo, side="left") + np.arange(mid, dtype=np.int64)
+    pos_hi = np.searchsorted(k_lo, k_hi, side="right") + np.arange(n - mid, dtype=np.int64)
+    perm = np.empty(n, dtype=np.int32)
+    perm[pos_lo] = p_lo.astype(np.int32)
+    perm[pos_hi] = (p_hi + mid).astype(np.int32)
+    return perm
+
+
+def _host_stable_argsort(nonneg: bool, with_inverse: bool):
+    def cb(keys: np.ndarray):
+        if nonneg and keys.dtype == np.float32 and not np.isnan(np.max(keys)):
+            # Non-negative IEEE floats order like their bit patterns, and
+            # numpy sorts uint32 keys measurably faster than float32.  NaNs
+            # force the float path: a float stable sort treats all NaNs as
+            # tied (original order kept) while bit patterns would order them
+            # by payload, silently changing the permutation vs the device
+            # sort.  (np.max propagates NaN, so this is a single cheap pass.)
+            keys = np.ascontiguousarray(keys).view(np.uint32)
+        if keys.shape[0] >= _SPLIT_SORT_MIN:
+            perm = _split_stable_argsort(keys)
+        else:
+            perm = np.argsort(keys, kind="stable").astype(np.int32)
+        if not with_inverse:
+            return (perm,)
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(perm.shape[0], dtype=np.int32)
+        return perm, inv
+
+    return cb
+
+
+def stable_argsort(
+    keys: jax.Array, *, with_inverse: bool = False, nonneg: bool = False
+) -> jax.Array:
+    """Stable ascending argsort (+ optional inverse), fastest available route.
+
+    On the CPU backend this is a ``pure_callback`` into numpy — XLA:CPU's
+    comparison sort is ~4x slower than numpy's stable sort on large arrays,
+    and computing the inverse on the host turns the planner's reconstruction
+    scatter into a cheap gather.  On TPU/GPU the sort stays on-device.  Both
+    routes are *stable*, so they yield the identical permutation — callers
+    may mix them freely without changing any downstream result.  ``nonneg``
+    asserts the keys are >= 0 (or NaN), unlocking a faster integer-keyed
+    host sort with the same ordering (NaNs still sort last).
+    """
+    if jax.default_backend() == "cpu":
+        out_shapes = (jax.ShapeDtypeStruct(keys.shape, jnp.int32),) * (
+            2 if with_inverse else 1
+        )
+        out = jax.pure_callback(
+            _host_stable_argsort(nonneg, with_inverse),
+            out_shapes,
+            keys,
+            vmap_method="sequential",
+        )
+        perm = out[0]
+        inv = out[1] if with_inverse else perm
+    else:
+        perm = jnp.argsort(keys, stable=True).astype(jnp.int32)
+        inv = inverse_permutation(perm) if with_inverse else perm
+    return (perm, inv) if with_inverse else perm
 
 
 def sws_permutation(flat: jax.Array, *, descending: bool = False) -> jax.Array:
@@ -32,7 +122,7 @@ def sws_permutation(flat: jax.Array, *, descending: bool = False) -> jax.Array:
     key = jnp.abs(flat)
     if descending:
         key = -key
-    return jnp.argsort(key, stable=True)
+    return stable_argsort(key, nonneg=not descending)
 
 
 def inverse_permutation(perm: jax.Array) -> jax.Array:
@@ -58,11 +148,14 @@ def restore_flat(sections: jax.Array, perm: jax.Array, n: int) -> jax.Array:
 def tsp_greedy_order(packed_planes: jax.Array, *, start: int = 0) -> jax.Array:
     """Beyond-paper: nearest-neighbour section order on true Hamming distance.
 
-    packed_planes: uint8[S, words, cols] (from ``bitslice.pack_rows``).
+    packed_planes: uint8[S, words, cols] (from ``bitslice.pack_rows`` /
+    ``bitslice.section_planes_packed``); bool[S, rows, cols] is packed here.
     Returns an int32[S] visiting order.  O(S^2) distance evaluations done as a
     scan with a masked argmin; intended for per-tensor section counts up to a
     few thousand (typical LM matrices at rows=128).
     """
+    if packed_planes.dtype != jnp.uint8:
+        packed_planes = bitslice.pack_rows(packed_planes)
     s = packed_planes.shape[0]
     flat = packed_planes.reshape(s, -1)
 

@@ -1,0 +1,92 @@
+"""Minimal stand-in for ``hypothesis`` used when the real package is absent.
+
+The container image does not ship hypothesis and installing packages is not
+an option, so ``conftest.py`` falls back to this shim.  It implements exactly
+the surface this test suite uses — ``given``, ``settings`` profiles, and the
+``integers`` / ``sampled_from`` / ``lists`` / ``booleans`` strategies — with
+deterministic example generation (seeded per test name, mirroring the CI
+profile's ``derandomize=True``).  It is NOT a property-testing engine: no
+shrinking, no coverage-guided search, just a fixed number of random draws.
+"""
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def draw(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def integers(min_value: int, max_value: int) -> _Strategy:
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements) -> _Strategy:
+    seq = list(elements)
+    return _Strategy(lambda rng: seq[rng.randrange(len(seq))])
+
+
+def booleans() -> _Strategy:
+    return sampled_from([False, True])
+
+
+def lists(elements: _Strategy, *, min_size: int = 0, max_size: int = 10) -> _Strategy:
+    return _Strategy(
+        lambda rng: [elements.draw(rng) for _ in range(rng.randint(min_size, max_size))]
+    )
+
+
+class settings:
+    """Profile registry; only ``max_examples`` is honoured."""
+
+    _profiles: dict[str, dict] = {}
+    _current: dict = {"max_examples": 25}
+
+    def __init__(self, **kwargs):
+        self.kwargs = kwargs
+
+    def __call__(self, fn):  # @settings(...) decorator form: no-op wrapper
+        return fn
+
+    @classmethod
+    def register_profile(cls, name: str, **kwargs) -> None:
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name: str) -> None:
+        cls._current = {**cls._current, **cls._profiles.get(name, {})}
+
+
+def given(**param_strategies):
+    def decorator(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(int(settings._current.get("max_examples", 25))):
+                drawn = {k: s.draw(rng) for k, s in param_strategies.items()}
+                fn(*args, **drawn, **kwargs)
+
+        # pytest resolves fixtures through __wrapped__'s signature; the drawn
+        # parameters must not look like fixture requests.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        return wrapper
+
+    return decorator
+
+
+# Register as an importable ``hypothesis`` (+ strategies submodule) so plain
+# ``from hypothesis import given, strategies as st`` works in test modules.
+strategies = types.ModuleType("hypothesis.strategies")
+for _name in ("integers", "sampled_from", "booleans", "lists"):
+    setattr(strategies, _name, globals()[_name])
+sys.modules.setdefault("hypothesis", sys.modules[__name__])
+sys.modules.setdefault("hypothesis.strategies", strategies)

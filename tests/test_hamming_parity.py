@@ -1,0 +1,111 @@
+"""Three-way parity: Pallas hamming kernel vs packed popcount vs bool planes.
+
+The packed-plane invariant (see ``core.cost``) promises that every pricing
+route — the Pallas ``hamming_pairs_kernel`` (interpret mode off-TPU), the
+portable ``pair_transitions_packed`` popcount, and the readable bool
+``pair_transitions`` oracle — returns identical counts, including on ragged
+pair counts that force kernel-side padding and on all-zero pristine-state
+pairs (the synthetic ``prev = -1`` state of ``schedule.chain_pairs``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitslice, cost, schedule, stucking
+from repro.kernels.hamming import ops as hm_ops
+from repro.kernels.hamming import ref as hm_ref
+
+
+def _random_sections(seed: int, t: int, rows: int, cols: int) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2, (t, rows, cols)), jnp.bool_)
+
+
+# T values chosen to exercise kernel padding: 1 and 7 pad up to the block
+# multiple, 300 is ragged over the default bt, 256 is exact.
+@pytest.mark.parametrize("t", [1, 7, 256, 300])
+@pytest.mark.parametrize("rows,cols", [(24, 6), (128, 10)])
+def test_three_way_pair_parity(t, rows, cols):
+    a = _random_sections(t, t, rows, cols)
+    b = _random_sections(t + 1, t, rows, cols)
+    pa, pb = bitslice.pack_rows(a), bitslice.pack_rows(b)
+
+    want = cost.pair_transitions(a, b)  # bool oracle
+    np.testing.assert_array_equal(cost.pair_transitions_packed(pa, pb), want)
+    np.testing.assert_array_equal(hm_ref.hamming_pairs(pa, pb), want)
+    # ops wrapper pads T and runs the Pallas kernel (interpret mode on CPU)
+    np.testing.assert_array_equal(hm_ops.hamming_pairs(pa, pb, interpret=True), want)
+    # the planner's dispatcher (popcount fallback on CPU, kernel on TPU)
+    np.testing.assert_array_equal(hm_ops.price_pairs(pa, pb), want)
+
+
+def test_pristine_state_pairs():
+    """All-zero 'prev' operands (first program of every chain) price to the
+    popcount of the target alone, on every route."""
+    b = _random_sections(3, 9, 40, 8)
+    pb = bitslice.pack_rows(b)
+    zeros_b = jnp.zeros_like(b)
+    zeros_p = jnp.zeros_like(pb)
+
+    want = jnp.sum(b, axis=(1, 2), dtype=jnp.int32)
+    np.testing.assert_array_equal(cost.pair_transitions(zeros_b, b), want)
+    np.testing.assert_array_equal(cost.pair_transitions_packed(zeros_p, pb), want)
+    np.testing.assert_array_equal(hm_ops.hamming_pairs(zeros_p, pb, interpret=True), want)
+    # and zero-vs-zero is free
+    assert int(jnp.sum(hm_ops.price_pairs(zeros_p, zeros_p))) == 0
+
+
+@pytest.mark.parametrize("include_initial", [True, False])
+@pytest.mark.parametrize("kind", ["stride1", "strideL"])
+def test_batched_schedule_pricing_matches_looped_reference(kind, include_initial):
+    """One batched price_pairs call == the seed per-chain Python loop,
+    job-for-job, for bool and packed inputs alike."""
+    planes = _random_sections(11, 60, 32, 8)
+    chains = schedule.make_chains(60, 7, kind)
+    want = schedule.schedule_job_costs_looped(
+        planes, chains, include_initial=include_initial
+    )
+    got_bool = schedule.schedule_job_costs(planes, chains, include_initial=include_initial)
+    got_packed = schedule.schedule_job_costs(
+        bitslice.pack_rows(planes), chains, include_initial=include_initial
+    )
+    np.testing.assert_array_equal(got_bool, want)
+    np.testing.assert_array_equal(got_packed, want)
+
+
+def test_chain_cost_packed_matches_bool(key):
+    planes = jax.random.bernoulli(key, 0.5, (20, 48, 10))
+    packed = bitslice.pack_rows(planes)
+    order = jnp.asarray(np.random.default_rng(0).permutation(20), jnp.int32)
+    for include_initial in (True, False):
+        assert int(cost.chain_transitions_packed(packed, order, include_initial=include_initial)) == int(
+            cost.chain_transitions(planes, order, include_initial=include_initial)
+        )
+        np.testing.assert_array_equal(
+            cost.consecutive_costs_packed(packed, order, include_initial=include_initial),
+            cost.consecutive_costs(planes, order, include_initial=include_initial),
+        )
+    np.testing.assert_array_equal(
+        cost.chain_transitions_packed(packed, per_column=True),
+        cost.chain_transitions(planes, per_column=True),
+    )
+
+
+@pytest.mark.parametrize("p", [0.0, 0.5, 1.0])
+def test_stuck_schedule_packed_bit_exact_with_bool(key, p):
+    """Same key schedule + same Bernoulli mask shape -> identical achieved
+    planes and identical programmed-transition totals."""
+    rows, cols, s = 40, 8, 30  # rows deliberately not a multiple of 8
+    planes = jax.random.bernoulli(key, 0.4, (s, rows, cols))
+    packed = bitslice.pack_rows(planes)
+    chains = schedule.stride_1_chains(s, 4)
+
+    total_b, achieved_b = stucking.stuck_schedule(planes, chains, p, key, stuck_cols=2)
+    chain_totals_p, achieved_p = stucking.stuck_schedule_packed(
+        packed, chains, p, key, rows=rows, stuck_cols=2
+    )
+    assert int(total_b) == int(np.sum(np.asarray(chain_totals_p), dtype=np.int64))
+    np.testing.assert_array_equal(bitslice.unpack_rows(achieved_p, rows), achieved_b)

@@ -22,6 +22,9 @@ from repro.models import api
 from repro.optim import AdamWConfig, adamw_init
 from repro.runtime import FaultPolicy, TrainLoop, TrainLoopConfig
 
+# trains a model end-to-end: minutes of wall clock -> out of tier-1
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def trained():

@@ -110,6 +110,7 @@ _SHARDED_MOE_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow  # spawns a fresh 8-device interpreter: minutes of wall clock
 def test_sharded_moe_parity_subprocess():
     env = dict(os.environ, PYTHONPATH="src", XLA_FLAGS="")
     out = subprocess.run(

@@ -1,0 +1,121 @@
+"""Packed fast-path vs bool reference: whole-plan bit-exactness + benchmark.
+
+The fast parity test is the tier-1 guarantee behind the throughput numbers:
+``impl="packed"`` and ``impl="bool"`` must produce the SAME DeploymentPlan —
+transitions, lockstep times, and achieved weights — for every config knob.
+The end-to-end speedup measurement itself is marked slow (it times tens of
+seconds of both implementations) and runs via ``-m slow`` or
+``python -m benchmarks.planner_throughput``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.planner import CrossbarSpec, PlannerConfig, analyze_tensor, build_deployment
+
+
+def _plans_equal(pa, pb) -> bool:
+    if set(pa.reports) != set(pb.reports):
+        return False
+    for k, ra in pa.reports.items():
+        rb = pb.reports[k]
+        if (
+            ra.transitions_baseline != rb.transitions_baseline
+            or ra.transitions_sws != rb.transitions_sws
+            or ra.transitions_final != rb.transitions_final
+            or ra.lockstep_time_unsorted != rb.lockstep_time_unsorted
+            or ra.lockstep_time_greedy != rb.lockstep_time_greedy
+            or ra.lockstep_time_ideal != rb.lockstep_time_ideal
+            or ra.quant_mse != rb.quant_mse
+        ):
+            return False
+        if not bool(jnp.all(pa.deployed[k] == pb.deployed[k])):
+            return False
+    return True
+
+
+@pytest.mark.parametrize("p_stuck", [1.0, 0.5])
+@pytest.mark.parametrize("kind", ["stride1", "strideL"])
+def test_packed_plan_bit_exact_vs_bool(key, p_stuck, kind):
+    params = {
+        "a": {"w": jax.random.normal(key, (96, 64)) * 0.02},
+        "b": {"w": jax.random.normal(jax.random.PRNGKey(3), (64, 80)) * 0.02},
+    }
+    spec = CrossbarSpec(rows=64, cols=8)
+    mk = lambda impl: PlannerConfig(
+        p_stuck=p_stuck, schedule=kind, min_size=1024, impl=impl
+    )
+    plan_p = build_deployment(params, spec, mk("packed"))
+    plan_b = build_deployment(params, spec, mk("bool"))
+    assert _plans_equal(plan_p, plan_b)
+
+
+@pytest.mark.parametrize("encoding", ["sign_magnitude", "offset_binary"])
+def test_packed_bit_exact_across_encodings(key, encoding):
+    w = jax.random.normal(key, (128, 72)) * 0.03 + 0.01
+    spec = CrossbarSpec(rows=128, cols=10, encoding=encoding)
+    rp, wp = analyze_tensor(w, spec, PlannerConfig(p_stuck=0.5), key)
+    rb, wb = analyze_tensor(w, spec, PlannerConfig(p_stuck=0.5, impl="bool"), key)
+    assert rp.transitions_baseline == rb.transitions_baseline
+    assert rp.transitions_sws == rb.transitions_sws
+    assert rp.transitions_final == rb.transitions_final
+    np.testing.assert_array_equal(np.asarray(wp), np.asarray(wb))
+
+
+def test_shape_bucketed_jit_reuses_traces(key):
+    """Same-shape tensors must not retrace the jitted per-tensor core."""
+    from repro.core.planner import _analyze_core
+
+    spec = CrossbarSpec(rows=64, cols=8)
+    cfg = PlannerConfig(min_size=1024)
+    before = _analyze_core._cache_size()
+    for i in range(4):
+        w = jax.random.normal(jax.random.PRNGKey(i), (64, 96)) * 0.02
+        analyze_tensor(w, spec, cfg, jax.random.PRNGKey(i))
+    assert _analyze_core._cache_size() - before <= 1
+
+
+def test_totals_aggregate_in_int64(monkeypatch, key):
+    """Whole-tensor totals must not wrap int32: aggregation happens on the
+    host in int64 from per-job / per-chain int32 values."""
+    from repro.core import planner as planner_mod
+
+    w = jax.random.normal(key, (128, 64)) * 0.02
+    spec = CrossbarSpec(rows=64, cols=8)
+    real_core = planner_mod._analyze_core
+
+    def inflated_core(flat, key, spec, config):
+        metrics, aux = real_core(flat, key, spec, config)
+        # simulate an extreme-scale tensor: 64 jobs of 2^27 transitions each
+        # (sum 2^33, far past int32) — only the aggregation path is under test
+        metrics = dict(metrics)
+        metrics["jobs_u"] = jnp.full((64,), 2**27, jnp.int32)
+        metrics["jobs_s"] = jnp.full((64,), 2**27, jnp.int32)
+        return metrics, aux
+
+    monkeypatch.setattr(planner_mod, "_analyze_core", inflated_core)
+    rep, _ = planner_mod.analyze_tensor(w, spec, PlannerConfig(), key)
+    assert rep.transitions_baseline == 64 * 2**27  # 2^33 > int32 max
+    assert rep.transitions_sws == 64 * 2**27
+    assert rep.lockstep_time_greedy == 2**27  # one round of 64 equal jobs
+    assert rep.lockstep_time_ideal == 2**33 / 64
+
+
+def test_unknown_impl_rejected(key):
+    w = jnp.ones((64, 64))
+    with pytest.raises(ValueError, match="unknown planner impl"):
+        analyze_tensor(w, CrossbarSpec(rows=64, cols=8), PlannerConfig(impl="turbo"), key)
+
+
+@pytest.mark.slow
+def test_planner_throughput_benchmark_speedup():
+    """Acceptance: packed path >= 3x over the seed bool path at LM scale,
+    bit-exact.  Runs the real benchmark entry point (smaller workload)."""
+    from benchmarks.planner_throughput import run
+
+    r = run(max_elems=500_000, layers=4)
+    assert r["bit_exact"]
+    assert r["speedup"] >= 3.0, r

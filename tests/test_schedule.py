@@ -71,6 +71,18 @@ def test_lockstep_speedup_near_ideal_for_bell_jobs(key):
     assert sp > 0.9 * 64
 
 
+def test_lpt_loads_no_int32_overflow():
+    """Regression: per-thread loads used an int32 scan accumulator and wrapped
+    past 2^31 on large deployments; loads are now host int64."""
+    jobs = jnp.full((64,), 2**27, jnp.int32)  # each job fits int32 comfortably
+    tids, loads = schedule.lpt_assignment(jobs, 2)
+    assert loads.dtype == np.int64
+    assert int(np.sum(loads)) == 64 * 2**27  # 2^33: overflows int32
+    assert int(np.max(loads)) == 32 * 2**27  # perfectly balanced split
+    assert int(schedule.lpt_makespan(jobs, 2)) == 32 * 2**27
+    assert np.min(tids) == 0 and np.max(tids) == 1
+
+
 @given(seed=st.integers(0, 50), threads=st.integers(1, 16))
 def test_lpt_bounds(seed, threads):
     """LPT respects the classic (4/3 - 1/3m) * OPT bound via the trivial

@@ -44,6 +44,7 @@ def test_probes_zero_for_identical_params(key):
     assert float(simulator.top1_agreement(logits_f, params, params, batch)) == 1.0
 
 
+@pytest.mark.slow  # full reduced-LM deploy + forward probes per p value
 @pytest.mark.parametrize("p_stuck", [1.0, 0.5, 0.0])
 def test_deploy_and_probe_accuracy_preserved(key, p_stuck):
     """The paper's headline constraint on a real LM: crossbar deployment with

@@ -86,6 +86,32 @@ def test_stuck_schedule_combines_chains(key):
     np.testing.assert_array_equal(achieved_h[..., 1:], planes[..., 1:])
 
 
+def test_schedule_padding_steps_are_free(key):
+    """Regression: schedule-padding steps (repeating a chain's last section)
+    must be complete no-ops under p < 1 — previously each padded step redrew
+    a Bernoulli mask and kept reprogramming residual stuck bits, so a
+    section's achieved state depended on how much padding its chain got (and
+    the combining scatter saw duplicate indices with differing values)."""
+    planes = _sorted_planes(key, s=8, rows=32, cols=8)
+    packed = bitslice.pack_rows(planes)
+    order = jnp.array([3, 5, 5, 5], jnp.int32)  # last section 'padded' twice
+    valid = jnp.array([True, True, False, False])
+
+    _, states = stucking._walk_packed(
+        packed, order, 0.5, key, rows=32, stuck_cols=2, include_initial=True, valid=valid
+    )
+    # state frozen across the masked steps (p=0.5 leaves residual stuck-bit
+    # transitions that an unmasked retry would program)
+    np.testing.assert_array_equal(states[1], states[2])
+    np.testing.assert_array_equal(states[1], states[3])
+
+    t_b, ach_b = stucking.stuck_chain(planes, order, 0.5, key, stuck_cols=2, valid=valid)
+    t_p, _ = stucking.stuck_chain_packed(
+        packed, order, 0.5, key, rows=32, stuck_cols=2, valid=valid
+    )
+    assert int(t_b) == int(t_p)
+
+
 def test_achieved_error_is_lsb_bounded(key):
     """Deployed weights deviate from ideal by at most the LSB multiplier."""
     rows, cols, s = 32, 8, 40
