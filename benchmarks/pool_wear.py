@@ -1,0 +1,105 @@
+"""Pool wear benchmark: persistent crossbar pool + wear-leveling assignment.
+
+Streams a sequence of model deployments (checkpoints of the reduced gemma-2b
+architecture, drifting between deployments) through ONE persistent
+``CrossbarPool`` per leveling policy and reports physical per-cell wear:
+max/mean cell writes, per-crossbar imbalance, and the endurance-budget
+exhaustion horizon.  The headline number is how much the LPT wear-leveling
+chain->crossbar assignment reduces *max-cell* wear versus the naive identity
+assignment — max-cell wear is what kills a crossbar array first.
+
+  PYTHONPATH=src python -m benchmarks.pool_wear [--deployments N]
+
+Writes experiments/bench/BENCH_pool.json.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, banner, save_json
+from repro.configs import get_arch
+from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment
+from repro.core.pool import DEFAULT_ENDURANCE, LEVELINGS, CrossbarPool
+from repro.models import api
+
+ARCH = "gemma-2b"
+DRIFT = 0.02  # relative weight drift between successive deployments
+
+
+def _checkpoints(n: int, seed: int):
+    """The same reduced-gemma param tree, drifting like training checkpoints."""
+    cfg = get_arch(ARCH, reduced=True)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    key = jax.random.PRNGKey(seed + 1)
+    for _ in range(n):
+        yield params
+        key, sub = jax.random.split(key)
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        subs = jax.random.split(sub, len(leaves))
+        leaves = [
+            w + DRIFT * jnp.std(w) * jax.random.normal(k, w.shape)
+            if hasattr(w, "shape") and w.ndim >= 2 else w
+            for w, k in zip(leaves, subs)
+        ]
+        params = jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def run(*, deployments: int = 3, p_stuck: float = 0.5, seed: int = 0) -> dict:
+    spec = CrossbarSpec(rows=128, cols=10)
+    results: dict[str, dict] = {}
+    for leveling in LEVELINGS:
+        cfg = PlannerConfig(
+            p_stuck=p_stuck, min_size=1024, pool_leveling=leveling
+        )
+        pool = CrossbarPool(spec, cfg.crossbars, leveling=leveling)
+        with Timer() as t:
+            for params in _checkpoints(deployments, seed):
+                build_deployment(params, spec, cfg, pool=pool)
+        stats = pool.stats()
+        per_xbar = pool.wear_totals()
+        results[leveling] = {
+            **stats.to_dict(DEFAULT_ENDURANCE),
+            # exhaustion_horizon counts repeats of the whole observed history
+            # (here: `deployments` deployments) — convert to deployments
+            "exhaustion_horizon_deployments": stats.exhaustion_horizon(DEFAULT_ENDURANCE)
+            * deployments,
+            "crossbar_imbalance": float(per_xbar.max() / max(per_xbar.mean(), 1.0)),
+            "seconds": t.seconds,
+        }
+    none_max = results["none"]["max_cell_writes"]
+    lpt_max = results["lpt"]["max_cell_writes"]
+    return {
+        "arch": f"{ARCH} (reduced)",
+        "backend": jax.default_backend(),
+        "deployments": deployments,
+        "drift": DRIFT,
+        "p_stuck": p_stuck,
+        "endurance": DEFAULT_ENDURANCE,
+        "levelings": results,
+        "max_wear_reduction_lpt_vs_none": none_max / max(lpt_max, 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--deployments", type=int, default=3)
+    ap.add_argument("--p-stuck", type=float, default=0.5)
+    args = ap.parse_args()
+
+    banner("Pool wear — persistent crossbar pool + wear leveling")
+    r = run(deployments=args.deployments, p_stuck=args.p_stuck)
+    for lev, s in r["levelings"].items():
+        print(
+            f"  {lev:7s} max_cell={s['max_cell_writes']:8d}  "
+            f"mean={s['mean_cell_writes']:8.1f}  imbalance={s['crossbar_imbalance']:.3f}  "
+            f"horizon={s['exhaustion_horizon_deployments']:.3g} deployments"
+        )
+    print(f"  LPT leveling reduces max-cell wear {r['max_wear_reduction_lpt_vs_none']:.2f}x")
+    save_json("BENCH_pool", r)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ from benchmarks import (
     fig9_p_sweep,
     fig10_columns,
     planner_throughput,
+    pool_wear,
     redeploy_delta,
     roofline,
 )
@@ -107,6 +108,20 @@ def main() -> None:
     summary["planner_throughput"] = {
         "speedup": rpt["speedup"],
         "bit_exact": rpt["bit_exact"],
+    }
+
+    banner("Pool wear — persistent crossbar pool + wear leveling")
+    rpool = pool_wear.run(deployments=3 if not args.full else 6)
+    for lev, s in rpool["levelings"].items():
+        print(f"  {lev:7s} max_cell={s['max_cell_writes']:8d}  "
+              f"imbalance={s['crossbar_imbalance']:.3f}  "
+              f"horizon={s['exhaustion_horizon_deployments']:.3g} deployments")
+    print(f"  LPT leveling reduces max-cell wear "
+          f"{rpool['max_wear_reduction_lpt_vs_none']:.2f}x")
+    save_json("BENCH_pool", rpool)
+    summary["pool_wear"] = {
+        "max_wear_reduction_lpt_vs_none": rpool["max_wear_reduction_lpt_vs_none"],
+        "max_cell_writes_lpt": rpool["levelings"]["lpt"]["max_cell_writes"],
     }
 
     banner("Redeploy delta (training-time integration, beyond-paper)")

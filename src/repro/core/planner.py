@@ -39,13 +39,16 @@ from __future__ import annotations
 import dataclasses
 import re
 from functools import partial
-from typing import Any, Callable
+from typing import TYPE_CHECKING, Any, Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bitslice, schedule, stucking, sws
+
+if TYPE_CHECKING:
+    from repro.core.pool import CrossbarPool
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,6 +75,9 @@ class PlannerConfig:
     exclude: tuple[str, ...] = ("embed", "embedding", "lm_head", "pos_emb")
     seed: int = 0
     impl: str = "packed"  # "packed" (jitted fast path) | "bool" (reference)
+    # chain->crossbar wear leveling when streaming through a CrossbarPool:
+    # "none" | "rotate" | "lpt"; None defers to the pool's own setting
+    pool_leveling: str | None = None
 
 
 @dataclasses.dataclass
@@ -103,6 +109,7 @@ class DeploymentPlan:
     config: PlannerConfig
     reports: dict[str, TensorReport]
     deployed: dict[str, jax.Array]  # name -> achieved weights (w_hat)
+    pool_stats: dict | None = None  # wear summary when built against a CrossbarPool
 
     def totals(self) -> dict[str, float]:
         base = sum(r.transitions_baseline for r in self.reports.values())
@@ -163,18 +170,44 @@ def _perm_full(
     return _perm_full_with_inverse(flat_padded, spec, config, q_padded)[0]
 
 
-@partial(jax.jit, static_argnames=("spec", "config"))
-def _analyze_core(
-    flat: jax.Array, key: jax.Array, spec: CrossbarSpec, config: PlannerConfig
-) -> tuple[dict[str, jax.Array], jax.Array]:
-    """Jitted per-tensor pipeline on canonical packed planes.
+def _perm_full_bool(
+    flat_padded: jax.Array, spec: CrossbarSpec, config: PlannerConfig, q_padded: jax.Array
+) -> jax.Array:
+    """Eager twin of :func:`_perm_full` for the bool reference paths.
 
-    flat: f32[n] logical weights.  Retraces per distinct ``n`` (and static
-    spec/config), so same-shape tensors across a model share one compilation.
-    Returns (metric scalars, reconstruction aux).  Weight reconstruction
-    happens *outside* this jit (see ``analyze_tensor``): XLA contracts the
-    dequant multiply+add into an FMA inside a fused graph, which would break
-    bit-exactness of w_hat against the eager bool reference.
+    Uses the seed device argsort — stable, hence the identical permutation to
+    the host-callback sort of the packed path.  Kept as the ONE place the
+    bool pipeline's sort discipline lives (the stateless reference and the
+    pool twin both call it), so the packed/bool parity contract cannot drift
+    between copies.
+    """
+    total = flat_padded.shape[0]
+    if not config.sws:
+        return jnp.arange(total, dtype=jnp.int32)
+    perm = jnp.argsort(_sort_key(flat_padded, spec.encoding), stable=True).astype(jnp.int32)
+    if config.section_order == "tsp":
+        packed_t = bitslice.section_planes_packed(q_padded[perm], spec.rows, spec.cols)
+        order = sws.tsp_greedy_order(packed_t)
+        slot = (
+            order[:, None] * spec.rows + jnp.arange(spec.rows, dtype=jnp.int32)
+        ).reshape(-1)
+        perm = perm[slot]
+    return perm
+
+
+@partial(jax.jit, static_argnames=("spec", "config"))
+def _prep_core_pool(
+    flat: jax.Array, spec: CrossbarSpec, config: PlannerConfig
+) -> tuple[jax.Array, dict[str, jax.Array]]:
+    """Shared per-tensor prep: quantize, baseline pricing, SWS packed planes.
+
+    The common prefix of the stateless ``_analyze_core`` (which inlines it
+    under its own jit) and of pool-mode analysis, where the stateful
+    ``CrossbarPool`` performs the pricing walk itself — it must carry
+    crossbar content and wear across tensors, so the jit stops at the
+    canonical SWS-ordered packed planes plus the pristine-baseline job costs
+    and the reconstruction aux.  Same shape-bucketed retrace behavior as
+    ``_analyze_core``.
     """
     n = flat.shape[0]
     pad = (-n) % spec.rows
@@ -196,6 +229,34 @@ def _analyze_core(
     # --- SWS order ---------------------------------------------------------
     perm, inv_perm = _perm_full_with_inverse(flat_padded, spec, config, q_padded)
     packed_s = bitslice.section_planes_packed(q_padded[perm], spec.rows, spec.cols)
+    aux = {
+        "packed_s": packed_s,
+        "sign_slots": sign_padded[perm].reshape(s, spec.rows),
+        "scale": qt.scale,
+        "offset": qt.offset,
+        "inv_perm": inv_perm,
+    }
+    return jobs_u, aux
+
+
+@partial(jax.jit, static_argnames=("spec", "config"))
+def _analyze_core(
+    flat: jax.Array, key: jax.Array, spec: CrossbarSpec, config: PlannerConfig
+) -> tuple[dict[str, jax.Array], jax.Array]:
+    """Jitted per-tensor pipeline on canonical packed planes.
+
+    flat: f32[n] logical weights.  Retraces per distinct ``n`` (and static
+    spec/config), so same-shape tensors across a model share one compilation.
+    Returns (metric scalars, reconstruction aux).  Weight reconstruction
+    happens *outside* this jit (see ``analyze_tensor``): XLA contracts the
+    dequant multiply+add into an FMA inside a fused graph, which would break
+    bit-exactness of w_hat against the eager bool reference.
+    """
+    jobs_u, prep = _prep_core_pool(flat, spec, config)
+    packed_s = prep["packed_s"]
+    s = packed_s.shape[0]
+    l = max(1, min(config.crossbars, s))
+    chains = schedule.make_chains(s, l, config.schedule)
     jobs_s = schedule.schedule_job_costs(packed_s, chains, include_initial=config.include_initial)
 
     # --- bit stucking on the SWS schedule ----------------------------------
@@ -224,10 +285,10 @@ def _analyze_core(
     }
     aux = {
         "achieved_packed": achieved_packed,
-        "sign_slots": sign_padded[perm].reshape(s, spec.rows),
-        "scale": qt.scale,
-        "offset": qt.offset,
-        "inv_perm": inv_perm,
+        "sign_slots": prep["sign_slots"],
+        "scale": prep["scale"],
+        "offset": prep["offset"],
+        "inv_perm": prep["inv_perm"],
     }
     return metrics, aux
 
@@ -252,6 +313,40 @@ def _dequant_slots(
     return bitslice.dequantize_from_planes(achieved, sign_slots, scale, offset)
 
 
+def _prep_bool(
+    flat: jax.Array, spec: CrossbarSpec, config: PlannerConfig
+) -> tuple[Any, jax.Array, jax.Array, list[np.ndarray], jax.Array, jax.Array]:
+    """Eager twin of :func:`_prep_core_pool`: the seed reference's per-tensor
+    prep — quantize, pad, baseline job pricing, SWS permutation.  The ONE
+    place the bool pipeline's prep discipline lives; shared by the stateless
+    reference and the pool twin so the packed/bool parity contract cannot
+    drift between copies.
+
+    Returns (qt, q_padded, sign_padded, chains, jobs_u, perm).
+    """
+    n = flat.shape[0]
+    pad = (-n) % spec.rows
+    flat_padded = jnp.pad(flat, (0, pad))
+    s = flat_padded.shape[0] // spec.rows
+    l = max(1, min(config.crossbars, s))
+
+    qt = bitslice.quantize(flat, spec.cols, spec.encoding)
+    q_padded = jnp.pad(qt.q, (0, pad))
+    sign_padded = jnp.pad(qt.sign, (0, pad), constant_values=1)
+
+    # --- baseline: unsorted natural order, full reprogramming --------------
+    planes_u = bitslice.bitplanes(q_padded.reshape(s, spec.rows), spec.cols)
+    chains = schedule.make_chains(s, l, config.schedule)
+    jobs_u = schedule.schedule_job_costs_looped(
+        planes_u, chains, include_initial=config.include_initial
+    )
+
+    # --- SWS order (see _perm_full_bool: the seed device argsort, identical
+    # to the fast host-callback sort the packed path uses) ------------------
+    perm = _perm_full_bool(flat_padded, spec, config, q_padded)
+    return qt, q_padded, sign_padded, chains, jobs_u, perm
+
+
 def _analyze_tensor_bool(
     w: jax.Array,
     spec: CrossbarSpec,
@@ -266,38 +361,12 @@ def _analyze_tensor_bool(
     """
     flat = jnp.ravel(w).astype(jnp.float32)
     n = flat.shape[0]
-    pad = (-n) % spec.rows
-    flat_padded = jnp.pad(flat, (0, pad))
-    total = flat_padded.shape[0]
+    qt, q_padded, sign_padded, chains, jobs_u, perm = _prep_bool(flat, spec, config)
+    total = q_padded.shape[0]
     s = total // spec.rows
-    l = max(1, min(config.crossbars, s))
-
-    qt = bitslice.quantize(flat, spec.cols, spec.encoding)
-    q_padded = jnp.pad(qt.q, (0, pad))
-    sign_padded = jnp.pad(qt.sign, (0, pad), constant_values=1)
-
-    # --- baseline: unsorted natural order, full reprogramming --------------
-    planes_u = bitslice.bitplanes(q_padded.reshape(s, spec.rows), spec.cols)
-    chains = schedule.make_chains(s, l, config.schedule)
-    jobs_u = schedule.schedule_job_costs_looped(
-        planes_u, chains, include_initial=config.include_initial
-    )
     trans_base = int(jnp.sum(jobs_u))
     lk_unsorted = int(schedule.lockstep_time(jobs_u, config.threads, sort_jobs=False))
 
-    # --- SWS order (seed device argsort; stable, so identical to the fast
-    # host-callback sort the packed path uses) ------------------------------
-    if not config.sws:
-        perm = jnp.arange(total, dtype=jnp.int32)
-    else:
-        perm = jnp.argsort(_sort_key(flat_padded, spec.encoding), stable=True).astype(jnp.int32)
-        if config.section_order == "tsp":
-            packed_t = bitslice.section_planes_packed(q_padded[perm], spec.rows, spec.cols)
-            order = sws.tsp_greedy_order(packed_t)
-            slot = (
-                order[:, None] * spec.rows + jnp.arange(spec.rows, dtype=jnp.int32)
-            ).reshape(-1)
-            perm = perm[slot]
     planes_s = bitslice.bitplanes(q_padded[perm].reshape(s, spec.rows), spec.cols)
     jobs_s = schedule.schedule_job_costs_looped(
         planes_s, chains, include_initial=config.include_initial
@@ -346,18 +415,106 @@ def _analyze_tensor_bool(
     return report, w_hat
 
 
+def _analyze_tensor_pool(
+    w: jax.Array,
+    spec: CrossbarSpec,
+    config: PlannerConfig,
+    key: jax.Array,
+    pool: "CrossbarPool",
+    name: str = "w",
+) -> tuple[TensorReport, jax.Array]:
+    """Per-tensor pipeline streaming through a persistent ``CrossbarPool``.
+
+    ``transitions_sws``/``transitions_final`` price reprogramming from the
+    pool's *current* content (the first job of every chain is a cross-tensor
+    seam); with the pool reset between tensors they reproduce the stateless
+    path bit-exactly (parity invariant pinned by ``tests/test_pool.py``).
+    Supports both planner impls: ``packed`` preps via a jitted core,
+    ``bool`` via the eager seed path; the pool twins mirror the same split.
+    """
+    if not config.include_initial:
+        raise ValueError(
+            "pool streaming prices physical seam programs; include_initial=False "
+            "has no pool interpretation"
+        )
+    if (spec.rows, spec.cols) != (pool.spec.rows, pool.spec.cols):
+        raise ValueError(f"planner spec {spec} != pool spec {pool.spec}")
+    flat = jnp.ravel(w).astype(jnp.float32)
+    n = int(flat.shape[0])
+    s = -(-n // spec.rows)
+    l = max(1, min(config.crossbars, s))
+    chains = schedule.make_chains(s, l, config.schedule)
+
+    if config.impl == "packed":
+        jobs_u, aux = _prep_core_pool(flat, spec, config)
+    elif config.impl == "bool":
+        qt, q_padded, sign_padded, chains, jobs_u, perm = _prep_bool(flat, spec, config)
+        aux = {
+            "packed_s": bitslice.section_planes_packed(q_padded[perm], spec.rows, spec.cols),
+            "sign_slots": sign_padded[perm].reshape(s, spec.rows),
+            "scale": qt.scale,
+            "offset": qt.offset,
+            "inv_perm": sws.inverse_permutation(perm),
+        }
+    else:
+        raise ValueError(f"unknown planner impl: {config.impl!r}")
+
+    prep = pool.program(
+        aux["packed_s"],
+        chains,
+        p_stuck=config.p_stuck,
+        key=key,
+        stuck_cols=config.stuck_cols,
+        leveling=config.pool_leveling,
+        impl=config.impl,
+        name=name,
+    )
+
+    w_hat_slots = _dequant_slots(
+        prep.achieved, aux["sign_slots"], aux["scale"], aux["offset"], rows=spec.rows
+    )
+    w_hat_flat = w_hat_slots.reshape(-1)[aux["inv_perm"]][:n]
+    w_hat = w_hat_flat.reshape(w.shape).astype(w.dtype)
+
+    jobs_u_np = np.asarray(jobs_u)
+    report = TensorReport(
+        name=name,
+        shape=tuple(w.shape),
+        n_weights=n,
+        n_sections=s,
+        transitions_baseline=int(np.sum(jobs_u_np, dtype=np.int64)),
+        transitions_sws=prep.transitions_full,
+        transitions_final=prep.transitions_programmed,
+        lockstep_time_unsorted=int(
+            schedule.lockstep_time_host(jobs_u_np, config.threads, sort_jobs=False)
+        ),
+        lockstep_time_greedy=int(
+            schedule.lockstep_time_host(prep.job_costs, config.threads, sort_jobs=True)
+        ),
+        lockstep_time_ideal=float(prep.transitions_full) / config.threads,
+        quant_mse=float(jnp.mean((flat - w_hat_flat) ** 2)),
+    )
+    return report, w_hat
+
+
 def analyze_tensor(
     w: jax.Array,
     spec: CrossbarSpec,
     config: PlannerConfig,
     key: jax.Array,
     name: str = "w",
+    *,
+    pool: "CrossbarPool | None" = None,
 ) -> tuple[TensorReport, jax.Array]:
     """Full paper pipeline for one weight tensor.
 
     Returns (report, w_hat) where w_hat carries the achieved (quantized +
-    stuck-bit) values in the tensor's logical layout.
+    stuck-bit) values in the tensor's logical layout.  With ``pool`` the
+    tensor streams through persistent crossbar state instead of a pristine
+    per-tensor pool (see ``core.pool``).
     """
+    if pool is not None:
+        return _analyze_tensor_pool(w, spec, config, key, pool, name=name)
     if config.impl == "bool":
         return _analyze_tensor_bool(w, spec, config, key, name=name)
     if config.impl != "packed":
@@ -412,7 +569,13 @@ def analyze_tensor(
 def iter_weights(params: Any, config: PlannerConfig):
     """Yield (name, tensor) for every crossbar-eligible weight in a pytree."""
     flat, _ = jax.tree_util.tree_flatten_with_path(params)
-    pat = re.compile("|".join(config.exclude)) if config.exclude else None
+    # exclude patterns are literal substrings: escape them so metacharacters
+    # ("w.bias", "head[") neither over-match nor blow up the alternation
+    pat = (
+        re.compile("|".join(re.escape(p) for p in config.exclude))
+        if config.exclude
+        else None
+    )
     for path, leaf in flat:
         if not hasattr(leaf, "ndim"):
             continue
@@ -430,8 +593,18 @@ def build_deployment(
     config: PlannerConfig = PlannerConfig(),
     *,
     progress: Callable[[str], None] | None = None,
+    pool: "CrossbarPool | None" = None,
 ) -> DeploymentPlan:
-    """Plan crossbar deployment for every eligible weight in ``params``."""
+    """Plan crossbar deployment for every eligible weight in ``params``.
+
+    With ``pool``, the model's tensors stream through ONE persistent
+    crossbar pool in iteration order: every tensor's chains reprogram
+    whatever the previous tensor left on its assigned crossbars (cross-tensor
+    seams), and the pool's per-cell wear counters accumulate the whole
+    deployment.  The per-tensor PRNG split discipline is identical with and
+    without a pool, so resetting the pool between tensors recovers the
+    stateless plan bit-exactly.
+    """
     key = jax.random.PRNGKey(config.seed)
     reports: dict[str, TensorReport] = {}
     deployed: dict[str, jax.Array] = {}
@@ -439,10 +612,16 @@ def build_deployment(
         key, sub = jax.random.split(key)
         if progress:
             progress(name)
-        report, w_hat = analyze_tensor(w, spec, config, sub, name=name)
+        report, w_hat = analyze_tensor(w, spec, config, sub, name=name, pool=pool)
         reports[name] = report
         deployed[name] = w_hat
-    return DeploymentPlan(spec=spec, config=config, reports=reports, deployed=deployed)
+    return DeploymentPlan(
+        spec=spec,
+        config=config,
+        reports=reports,
+        deployed=deployed,
+        pool_stats=pool.stats().to_dict() if pool is not None else None,
+    )
 
 
 def deploy_params(params: Any, plan: DeploymentPlan) -> Any:

@@ -15,12 +15,16 @@ by ``benchmarks/redeploy_delta.py``.
 from __future__ import annotations
 
 import dataclasses
+from typing import TYPE_CHECKING
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import bitslice, cost
+from repro.core import bitslice, cost, schedule
 from repro.core.planner import CrossbarSpec, PlannerConfig, _perm_full
+
+if TYPE_CHECKING:
+    from repro.core.pool import CrossbarPool
 
 
 @dataclasses.dataclass
@@ -28,11 +32,12 @@ class RedeployReport:
     name: str
     transitions_natural: int  # reprogram in-place, natural layout
     transitions_sws: int  # reprogram in-place, SWS layout (old perm kept)
-    n_bits: int  # total memristors (upper bound on transitions)
+    n_bits: int  # physical memristors holding real weights (upper bound on transitions)
     # streaming-chain costs of the NEW checkpoint through a crossbar pool:
     chain_natural: int = 0  # natural layout
     chain_stale_sws: int = 0  # the OLD checkpoint's sort order (index map kept)
     chain_fresh_sws: int = 0  # re-sorted on the new weights (new index map)
+    chain_pool: int = 0  # stale-SWS refresh through a persistent CrossbarPool
 
     @property
     def sws_delta_speedup(self) -> float:
@@ -62,12 +67,22 @@ def delta_cost(
     spec: CrossbarSpec = CrossbarSpec(),
     config: PlannerConfig = PlannerConfig(),
     name: str = "w",
+    *,
+    pool: "CrossbarPool | None" = None,
 ) -> RedeployReport:
     """Price reprogramming crossbars holding ``w_old`` to hold ``w_new``.
 
     The SWS path keeps the *old* checkpoint's permutation (re-sorting every
     checkpoint would defeat index-matching stability); the shared scale is
     re-fit on the new tensor, matching what a deployment refresh would do.
+
+    With ``pool``, the refresh additionally *programs* the new checkpoint
+    (stale-SWS layout, full reprogramming) through the persistent
+    ``CrossbarPool``: ``chain_pool`` prices the multi-crossbar stream from
+    whatever the pool currently holds — the previous checkpoint after the
+    first call — and the pool's wear counters absorb the refresh, so a
+    training run's cumulative cell wear is tracked across checkpoints
+    instead of being re-priced from pristine every time.
     """
     rows, cols = spec.rows, spec.cols
     fo = jnp.ravel(w_old).astype(jnp.float32)
@@ -91,12 +106,39 @@ def delta_cost(
     natural = transitions(ident)
     perm_stale = _perm_full(fo_p, spec, config, qo)
     perm_fresh = _perm_full(fn_p, spec, config, qn)
+
+    chain_pool = 0
+    if pool is not None:
+        s = fo_p.shape[0] // rows
+        l = max(1, min(config.crossbars, s))
+        chains = schedule.make_chains(s, l, config.schedule)
+        if pool.tensors_seen == 0:
+            # a pristine pool has never physically held w_old: seat it first,
+            # so (a) the refresh seams come from resident content rather than
+            # zeros and (b) the wear counters include the initial
+            # deployment's writes — otherwise the cumulative lifetime is
+            # understated by one full deployment
+            pool.program(
+                bitslice.section_planes_packed(qo[perm_stale], rows, cols),
+                chains, p_stuck=1.0,
+                leveling=config.pool_leveling, name=f"{name}@deploy",
+            )
+        packed_new = bitslice.section_planes_packed(qn[perm_stale], rows, cols)
+        prep = pool.program(
+            packed_new, chains, p_stuck=1.0,
+            leveling=config.pool_leveling, name=name,
+        )
+        chain_pool = prep.transitions_full
+
     return RedeployReport(
         name=name,
         transitions_natural=natural,
         transitions_sws=transitions(perm_stale),
-        n_bits=int(fo_p.shape[0]) * cols,
+        # unpadded count: zero-padding never transitions, so padded cells
+        # would only slacken the bound
+        n_bits=int(fo.shape[0]) * cols,
         chain_natural=chain(ident),
         chain_stale_sws=chain(perm_stale),
         chain_fresh_sws=chain(perm_fresh),
+        chain_pool=chain_pool,
     )

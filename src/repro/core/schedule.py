@@ -208,7 +208,13 @@ def lockstep_speedup(job_costs: jax.Array, threads: int, *, sort_jobs: bool) -> 
     return seq.astype(jnp.float32) / jnp.maximum(t.astype(jnp.float32), 1.0)
 
 
-def lpt_assignment(job_costs: jax.Array, threads: int) -> tuple[np.ndarray, np.ndarray]:
+def lpt_assignment(
+    job_costs: jax.Array,
+    threads: int,
+    *,
+    initial_loads: np.ndarray | None = None,
+    capacity: int | None = None,
+) -> tuple[np.ndarray, np.ndarray]:
     """Longest-processing-time greedy makespan balancing (async ablation).
 
     Returns (thread_id int32[njobs], thread_loads int64[threads]).  Runs on
@@ -217,18 +223,40 @@ def lpt_assignment(job_costs: jax.Array, threads: int) -> tuple[np.ndarray, np.n
     accumulator wrapped past ~2^31 total transitions per thread; jax without
     x64 cannot widen it).  Ties break toward the lowest thread id, matching
     the previous ``argmin`` behavior.
+
+    ``initial_loads`` seeds each thread's starting load (the crossbar pool's
+    wear-leveling assignment seeds with accumulated per-crossbar wear, so
+    heavy chains land on the least-worn crossbars).  ``capacity`` bounds how
+    many jobs one thread may take; ``capacity=1`` turns the greedy into a
+    min-max matching (each chain on a distinct physical crossbar).  Returned
+    loads include the initial loads.
     """
     costs = np.asarray(job_costs, dtype=np.int64)
+    if capacity is not None and costs.shape[0] > threads * capacity:
+        raise ValueError(
+            f"{costs.shape[0]} jobs exceed {threads} threads x capacity {capacity}"
+        )
     order = np.argsort(-costs, kind="stable")
     tids = np.empty(costs.shape[0], np.int32)
-    loads = np.zeros(threads, np.int64)
-    heap = [(0, t) for t in range(threads)]
+    if initial_loads is None:
+        loads = np.zeros(threads, np.int64)
+    else:
+        loads = np.asarray(initial_loads, dtype=np.int64).copy()
+        if loads.shape != (threads,):
+            raise ValueError(f"initial_loads shape {loads.shape} != ({threads},)")
+    taken = np.zeros(threads, np.int64)
+    heap = [(int(loads[t]), t) for t in range(threads)]
+    heapq.heapify(heap)
     for j in order:
-        load, t = heapq.heappop(heap)
+        while True:
+            load, t = heapq.heappop(heap)
+            if capacity is None or taken[t] < capacity:
+                break
+            # thread already full: drop it from the heap for good
+        taken[t] += 1
         tids[j] = t
-        heapq.heappush(heap, (load + int(costs[j]), t))
-    for load, t in heap:
-        loads[t] = load
+        loads[t] = load + int(costs[j])
+        heapq.heappush(heap, (int(loads[t]), t))
     return tids, loads
 
 

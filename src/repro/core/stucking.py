@@ -130,7 +130,9 @@ def _walk_packed(
     stuck_cols: int,
     include_initial: bool,
     valid: jax.Array | None = None,
-) -> tuple[jax.Array, jax.Array]:
+    state0: jax.Array | None = None,
+    with_wear: bool = False,
+) -> tuple[jax.Array, ...]:
     """One packed chain walk -> (total int32[], states uint8[T, W, cols]).
 
     ``states[t]`` is the crossbar content while section ``order[t]`` was
@@ -138,6 +140,16 @@ def _walk_packed(
     index (kept separate so vmapped schedules can combine all chains with a
     single scatter instead of one full-plane copy per chain).  ``valid``
     marks schedule-padding steps exactly as in :func:`stuck_chain`.
+
+    ``state0`` is the crossbar's state *before* the first program (defaults
+    to pristine all-zero); ``core.pool`` passes the persistent pool state so
+    the first program is a cross-tensor seam.  ``with_wear=True`` additionally
+    accumulates per-cell programmed-transition counts and returns the
+    extended tuple (total, states, counts int32[T], wear int32[rows, cols]).
+    Neither option perturbs the PRNG discipline: the per-step key schedule
+    and mask draws are identical for every combination, which is what keeps
+    the packed walk bit-exact with the bool oracle and the pool walk
+    bit-exact with the pristine one when ``state0`` is zero.
     """
     t = order.shape[0]
     seq = packed[order]
@@ -145,7 +157,8 @@ def _walk_packed(
     p = jnp.asarray(p, dtype=jnp.float32)
     valid_t = jnp.ones((t,), jnp.bool_) if valid is None else valid
 
-    def step(state, inp):
+    def step(carry, inp):
+        state, wear = carry
         target, k, v = inp
         trans = jnp.bitwise_xor(state, target)
         program = trans
@@ -156,11 +169,19 @@ def _walk_packed(
             program = jnp.concatenate([stuck_part, trans[:, stuck_cols:]], axis=1)
         program = jnp.where(v, program, jnp.uint8(0))
         new_state = jnp.bitwise_xor(state, program)  # program ⊆ trans
-        return new_state, (new_state, jnp.sum(_popcount_i32(program)))
+        if with_wear:
+            wear = wear + jnp.unpackbits(program, axis=0, count=rows).astype(jnp.int32)
+        return (new_state, wear), (new_state, jnp.sum(_popcount_i32(program)))
 
-    state0 = jnp.zeros(packed.shape[1:], dtype=jnp.uint8)
-    _, (states, counts) = jax.lax.scan(step, state0, (seq, keys, valid_t))
+    init_state = jnp.zeros(packed.shape[1:], dtype=jnp.uint8) if state0 is None else state0
+    cols = packed.shape[-1]
+    wear0 = jnp.zeros((rows, cols), jnp.int32) if with_wear else jnp.zeros((), jnp.int32)
+    (_, wear), (states, counts) = jax.lax.scan(
+        step, (init_state, wear0), (seq, keys, valid_t)
+    )
     total = jnp.sum(counts) if include_initial else jnp.sum(counts[1:])
+    if with_wear:
+        return total, states, counts, wear
     return total, states
 
 

@@ -3,11 +3,18 @@
 Serves a model with batched requests through the same prefill/serve_step
 functions the dry-run lowers, optionally swapping every eligible weight for
 its crossbar-deployed (quantized + bit-stuck) counterpart so the *serving*
-accuracy impact of the paper's technique is observable end to end.
+accuracy impact of the paper's technique is observable end to end.  With
+``--cim`` the deployment streams through a persistent ``CrossbarPool``, so
+the report includes physical wear: max/mean per-cell writes and the
+endurance-budget exhaustion horizon (how many such deployments the pool
+survives).
+
+Throughput accounting: one full prefill+decode step runs *before* the timer
+starts, so jit compilation never pollutes the reported tok/s.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --batch 4 --prompt-len 32 --gen 16 [--cim --p-stuck 0.5]
+      --batch 4 --prompt-len 32 --gen 16 [--cim --p-stuck 0.5 --pool-leveling lpt]
 """
 from __future__ import annotations
 
@@ -19,12 +26,18 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment, deploy_params
+from repro.core.pool import DEFAULT_ENDURANCE, LEVELINGS, CrossbarPool
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import api
 
 
 def generate(cfg, params, batch, *, gen_len: int, greedy: bool = True, seed: int = 0):
-    """Prefill then decode ``gen_len`` tokens; returns (tokens, tok/s)."""
+    """Prefill then decode ``gen_len`` tokens; returns (tokens, tok/s).
+
+    The first prefill+decode step is executed once untimed (jit warmup):
+    compile time used to land inside the timer and understate tok/s by an
+    order of magnitude on short generations.
+    """
     b, prompt_len = batch["tokens"].shape
     prefill = jax.jit(make_prefill_step(cfg))
     serve = jax.jit(make_serve_step(cfg))
@@ -34,20 +47,33 @@ def generate(cfg, params, batch, *, gen_len: int, greedy: bool = True, seed: int
         cfg, b, prompt_len + gen_len,
         src_len=prompt_len if cfg.encdec else None,
     )
+
+    key = jax.random.PRNGKey(seed)
+
+    def pick(logits, key):
+        """Next token from the last position — one sampling path for every
+        decode step, the first post-prefill token included."""
+        if greedy:
+            return jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), key
+        key, sub = jax.random.split(key)
+        return jax.random.categorical(sub, logits[:, -1])[:, None].astype(jnp.int32), key
+
+    # --- warmup: compile prefill + decode outside the timed region ---------
+    logits_w, pf_cache_w = prefill(params, batch)
+    cache_w = api.merge_prefill_cache(cfg, cache, pf_cache_w)
+    tok_w = jnp.argmax(logits_w[:, -1:], axis=-1).astype(jnp.int32)
+    jax.block_until_ready(serve(params, cache_w, tok_w, jnp.int32(prompt_len))[0])
+
+    # --- timed generation ---------------------------------------------------
     t0 = time.time()
     logits, pf_cache = prefill(params, batch)
     # prefill returns per-segment caches of the prompt; copy into the full cache
-    cache = api.merge_prefill_cache(cfg, cache, pf_cache)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    run_cache = api.merge_prefill_cache(cfg, cache, pf_cache)
+    tok, key = pick(logits, key)
     out = [tok]
-    key = jax.random.PRNGKey(seed)
     for i in range(gen_len - 1):
-        logits, cache = serve(params, cache, tok, jnp.int32(prompt_len + i))
-        if greedy:
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        else:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits[:, -1])[:, None].astype(jnp.int32)
+        logits, run_cache = serve(params, run_cache, tok, jnp.int32(prompt_len + i))
+        tok, key = pick(logits, key)
         out.append(tok)
     tokens = jnp.concatenate(out, axis=1)
     jax.block_until_ready(tokens)
@@ -66,6 +92,18 @@ def main() -> None:
     ap.add_argument("--p-stuck", type=float, default=0.5)
     ap.add_argument("--rows", type=int, default=128)
     ap.add_argument("--cols", type=int, default=10)
+    ap.add_argument(
+        "--min-size", type=int, default=PlannerConfig().min_size,
+        help="smallest tensor (elements) deployed to crossbars",
+    )
+    ap.add_argument(
+        "--pool-leveling", choices=LEVELINGS, default="none",
+        help="wear-leveling chain->crossbar assignment for the pool",
+    )
+    ap.add_argument(
+        "--endurance", type=float, default=DEFAULT_ENDURANCE,
+        help="per-cell write endurance budget for the exhaustion horizon",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -78,18 +116,28 @@ def main() -> None:
     print(f"fp weights:   {tps:8.1f} tok/s   first request: {tokens[0, :12].tolist()}")
 
     if args.cim:
-        plan = build_deployment(
-            params,
-            CrossbarSpec(rows=args.rows, cols=args.cols),
-            PlannerConfig(p_stuck=args.p_stuck, min_size=1024),
+        spec = CrossbarSpec(rows=args.rows, cols=args.cols)
+        planner_cfg = PlannerConfig(
+            p_stuck=args.p_stuck,
+            min_size=args.min_size,
+            pool_leveling=args.pool_leveling,
         )
+        pool = CrossbarPool(spec, planner_cfg.crossbars, leveling=args.pool_leveling)
+        plan = build_deployment(params, spec, planner_cfg, pool=pool)
         params_hat = deploy_params(params, plan)
         tokens_hat, tps_hat = generate(cfg, params_hat, batch, gen_len=args.gen, seed=args.seed)
         agree = float(jnp.mean((tokens == tokens_hat).astype(jnp.float32)))
         t = plan.totals()
+        stats = pool.stats()
+        horizon = stats.exhaustion_horizon(args.endurance)
         print(f"cim weights:  {tps_hat:8.1f} tok/s   first request: {tokens_hat[0, :12].tolist()}")
         print(f"token agreement: {agree:.3f}   reprog speedup: {t['total_speedup']:.2f}x "
               f"(sws {t['sws_speedup']:.2f}x)")
+        print(f"pool wear: max cell {stats.max_cell_writes} writes, "
+              f"mean {stats.mean_cell_writes:.2f}, total {stats.total_writes} "
+              f"over {stats.tensors_seen} tensors")
+        print(f"endurance horizon: ~{horizon:.3g} such deployments "
+              f"@ {args.endurance:.0e} writes/cell ({args.pool_leveling} leveling)")
 
 
 if __name__ == "__main__":

@@ -27,6 +27,7 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ArchConfig
 from repro.core.planner import CrossbarSpec, PlannerConfig
+from repro.core.pool import CrossbarPool
 from repro.core.redeploy import delta_cost
 from repro.data import SyntheticLMDataset
 from repro.runtime.fault import FaultPolicy, StragglerPolicy, run_with_retries
@@ -67,6 +68,11 @@ class TrainLoop:
         self.straggler = straggler or StragglerPolicy()
         self.crossbar_spec = crossbar_spec
         self.planner_cfg = planner_cfg
+        # one persistent CrossbarPool per priced tensor (each deployed tensor
+        # is resident on its own physical crossbars): checkpoint refreshes
+        # reprogram the same cells the previous checkpoint left behind, and
+        # per-cell wear accumulates over the whole training run
+        self.pools: dict[str, CrossbarPool] = {}
         self.host, self.n_hosts = host, n_hosts
         self.ckpt = CheckpointManager(
             loop_cfg.checkpoint_dir, keep=loop_cfg.keep_checkpoints, async_write=True
@@ -97,6 +103,15 @@ class TrainLoop:
         mats.sort(key=lambda kv: -int(np.prod(kv[1].shape)))
         return dict(mats[: self.loop_cfg.redeploy_tensors])
 
+    def _pool_for(self, name: str) -> CrossbarPool:
+        if name not in self.pools:
+            self.pools[name] = CrossbarPool(
+                self.crossbar_spec,
+                self.planner_cfg.crossbars,
+                leveling=self.planner_cfg.pool_leveling or "none",
+            )
+        return self.pools[name]
+
     def _price_redeploy(self, step: int) -> None:
         current = self._largest_weights()
         if self._deployed_snapshot is not None:
@@ -104,9 +119,12 @@ class TrainLoop:
                 w_old = self._deployed_snapshot.get(name)
                 if w_old is None or w_old.shape != w_new.shape:
                     continue
+                pool = self._pool_for(name)
                 rep = delta_cost(
-                    w_old, w_new, self.crossbar_spec, self.planner_cfg, name=name
+                    w_old, w_new, self.crossbar_spec, self.planner_cfg,
+                    name=name, pool=pool,
                 )
+                stats = pool.stats()
                 self.redeploy_log.append(
                     {
                         "step": step,
@@ -115,9 +133,12 @@ class TrainLoop:
                         "transitions_sws": rep.transitions_sws,
                         "chain_stale_sws": rep.chain_stale_sws,
                         "chain_fresh_sws": rep.chain_fresh_sws,
+                        "chain_pool": rep.chain_pool,
                         "stale_sort_speedup": rep.stale_sort_speedup,
                         "sws_delta_speedup": rep.sws_delta_speedup,
                         "n_bits": rep.n_bits,
+                        "pool_max_cell_writes": stats.max_cell_writes,
+                        "pool_total_writes": stats.total_writes,
                     }
                 )
         self._deployed_snapshot = {k: jax.device_get(v) for k, v in current.items()}
@@ -167,4 +188,5 @@ class TrainLoop:
             "metrics_log": self.metrics_log,
             "redeploy_log": self.redeploy_log,
             "straggler_events": self.straggler.events,
+            "pool_wear": {name: p.stats().to_dict() for name, p in self.pools.items()},
         }

@@ -73,6 +73,20 @@ def test_iter_weights_filters(key):
     assert names == ["layer/w"]
 
 
+def test_iter_weights_exclude_escapes_regex_metacharacters():
+    """Regression: exclude patterns were joined into one regex unescaped, so
+    "w.bias" silently over-matched ("wxbias") and "head[" raised."""
+    params = {
+        "w.bias": jnp.zeros((64, 64)),
+        "wxbias": jnp.zeros((64, 64)),
+        "head[0]": jnp.zeros((64, 64)),
+        "keep": jnp.zeros((64, 64)),
+    }
+    cfg = PlannerConfig(min_size=1, exclude=("w.bias", "head["))
+    names = sorted(n for n, _ in iter_weights(params, cfg))
+    assert names == ["keep", "wxbias"]
+
+
 def test_build_and_deploy_roundtrip(key):
     params = {
         "a": {"w": jax.random.normal(key, (128, 64)) * 0.02},

@@ -1,0 +1,223 @@
+"""Tests for the persistent CrossbarPool: cross-tensor seams, wear, leveling.
+
+Pins the three pool parity invariants:
+
+(a) resetting the pool between tensors reproduces the stateless planner's
+    per-tensor ``transitions_*`` totals bit-exactly (packed and bool impls);
+(b) wear conservation — per-cell wear increments sum exactly to the
+    programmed transitions, cross-tensor seams included;
+(c) the packed fast path and the eager bool-oracle twin agree on every
+    output (job costs, wear, state, achieved weights).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitslice, cost, schedule
+from repro.core.planner import (
+    CrossbarSpec,
+    PlannerConfig,
+    analyze_tensor,
+    build_deployment,
+    iter_weights,
+)
+from repro.core.pool import CrossbarPool
+
+SPEC = CrossbarSpec(rows=64, cols=8)
+
+
+def _params():
+    return {
+        "a": {"w": jax.random.normal(jax.random.PRNGKey(0), (96, 64)) * 0.02},
+        # deliberately row-padded: 64*100 = 6400 -> 100 sections of 64
+        "b": {"w": jax.random.normal(jax.random.PRNGKey(1), (64, 100)) * 0.02},
+    }
+
+
+def _random_packed(key, s: int):
+    q = jax.random.randint(key, (s * SPEC.rows,), 0, 2**SPEC.cols, dtype=jnp.int32)
+    return bitslice.section_planes_packed(q, SPEC.rows, SPEC.cols)
+
+
+@pytest.mark.parametrize("impl", ["packed", "bool"])
+@pytest.mark.parametrize("p_stuck", [1.0, 0.5])
+def test_pool_reset_parity(impl, p_stuck):
+    """(a) pool reset between tensors == stateless per-tensor accounting."""
+    cfg = PlannerConfig(p_stuck=p_stuck, min_size=1024, crossbars=8, impl=impl)
+    params = _params()
+    plan_ref = build_deployment(params, SPEC, cfg)
+    pool = CrossbarPool(SPEC, cfg.crossbars)
+    key = jax.random.PRNGKey(cfg.seed)
+    seen = 0
+    for name, w in iter_weights(params, cfg):
+        key, sub = jax.random.split(key)
+        pool.reset()
+        rep, w_hat = analyze_tensor(w, SPEC, cfg, sub, name=name, pool=pool)
+        ref = plan_ref.reports[name]
+        assert rep.transitions_baseline == ref.transitions_baseline
+        assert rep.transitions_sws == ref.transitions_sws
+        assert rep.transitions_final == ref.transitions_final
+        assert rep.lockstep_time_unsorted == ref.lockstep_time_unsorted
+        assert rep.lockstep_time_greedy == ref.lockstep_time_greedy
+        assert bool(jnp.all(w_hat == plan_ref.deployed[name]))
+        seen += 1
+    assert seen == 2
+
+
+@pytest.mark.parametrize("p_stuck", [1.0, 0.5])
+def test_pool_packed_bool_twin_bit_exact(p_stuck):
+    """(c) persistent streaming (no resets): packed == bool oracle everywhere."""
+    params = _params()
+    outs = {}
+    for impl in ("packed", "bool"):
+        cfg = PlannerConfig(p_stuck=p_stuck, min_size=1024, crossbars=8, impl=impl)
+        pool = CrossbarPool(SPEC, 8)
+        plan = build_deployment(params, SPEC, cfg, pool=pool)
+        outs[impl] = (plan, pool)
+    (plan_p, pool_p), (plan_b, pool_b) = outs["packed"], outs["bool"]
+    assert set(plan_p.reports) == set(plan_b.reports)
+    for name in plan_p.reports:
+        assert plan_p.reports[name].transitions_sws == plan_b.reports[name].transitions_sws
+        assert plan_p.reports[name].transitions_final == plan_b.reports[name].transitions_final
+        assert bool(jnp.all(plan_p.deployed[name] == plan_b.deployed[name]))
+    np.testing.assert_array_equal(pool_p.wear, pool_b.wear)
+    np.testing.assert_array_equal(pool_p.state, pool_b.state)
+    assert pool_p.total_writes == pool_b.total_writes
+
+
+@pytest.mark.parametrize("p_stuck", [1.0, 0.5])
+def test_pool_wear_conservation(p_stuck):
+    """(b) sum of wear increments == sum of transitions_final, seams included."""
+    cfg = PlannerConfig(p_stuck=p_stuck, min_size=1024, crossbars=8)
+    pool = CrossbarPool(SPEC, 8)
+    plan = build_deployment(_params(), SPEC, cfg, pool=pool)
+    fin = sum(r.transitions_final for r in plan.reports.values())
+    assert pool.total_writes == fin
+    assert int(pool.wear.sum()) == fin
+    assert plan.pool_stats is not None
+    assert plan.pool_stats["total_writes"] == fin
+    assert plan.pool_stats["max_cell_writes"] == int(pool.wear.max())
+
+
+def test_pool_seam_pricing_from_persistent_state(key):
+    """Seams of the second tensor are priced against the first tensor's
+    leftover content, exactly as a manual XOR-popcount says."""
+    k1, k2 = jax.random.split(key)
+    packed1, packed2 = _random_packed(k1, 12), _random_packed(k2, 12)
+    chains = schedule.make_chains(12, 4, "stride1")
+    pool = CrossbarPool(SPEC, 4)
+
+    rep1 = pool.program(packed1, chains)
+    # a pristine pool's seam IS the include_initial first-program cost
+    firsts = np.array([c[0] for c in chains])
+    np.testing.assert_array_equal(
+        rep1.seam_costs,
+        np.asarray(
+            cost.pair_transitions_packed(jnp.zeros_like(packed1[firsts]), packed1[firsts])
+        ),
+    )
+
+    state_before = jnp.asarray(pool.state)
+    rep2 = pool.program(packed2, chains)
+    expected = cost.pair_transitions_packed(
+        state_before[rep2.assignment], packed2[firsts]
+    )
+    np.testing.assert_array_equal(rep2.seam_costs, np.asarray(expected))
+    assert rep2.transitions_full == int(rep2.job_costs.sum())
+    assert rep2.transitions_programmed == rep2.transitions_full  # p=1
+
+
+def test_pool_final_state_is_last_section():
+    """After a full-reprogram walk each crossbar holds its chain's last section."""
+    packed = _random_packed(jax.random.PRNGKey(3), 8)
+    chains = schedule.make_chains(8, 4, "stride1")
+    pool = CrossbarPool(SPEC, 4)
+    rep = pool.program(packed, chains)
+    for i, c in enumerate(chains):
+        np.testing.assert_array_equal(
+            pool.state[rep.assignment[i]], np.asarray(packed[int(c[-1])])
+        )
+
+
+def test_pool_lpt_leveling_reduces_max_cell_wear():
+    """Acceptance: LPT leveling beats the naive identity assignment on
+    max-cell wear for a stream of SWS-sorted tensors (whose chain costs are
+    persistently skewed — the last chain always holds the largest weights)."""
+    params = {
+        f"l{i}": {"w": jax.random.normal(jax.random.PRNGKey(i), (128, 96)) * 0.02}
+        for i in range(6)
+    }
+    wear_max = {}
+    for leveling in ("none", "lpt"):
+        cfg = PlannerConfig(p_stuck=1.0, min_size=1024, crossbars=8, pool_leveling=leveling)
+        pool = CrossbarPool(SPEC, 8, leveling=leveling)
+        build_deployment(params, SPEC, cfg, pool=pool)
+        wear_max[leveling] = pool.stats().max_cell_writes
+        per_xbar = pool.wear_totals()
+        if leveling == "lpt":
+            assert per_xbar.max() / per_xbar.mean() < 1.2  # balanced
+    assert wear_max["lpt"] < wear_max["none"]
+
+
+def test_pool_lpt_assignment_targets_least_worn():
+    """Heaviest chain lands on the least-worn crossbar; assignment is a
+    permutation (distinct physical crossbars)."""
+    packed = _random_packed(jax.random.PRNGKey(5), 8)
+    pool = CrossbarPool(SPEC, 4, leveling="lpt")
+    # pre-skew wear: crossbar 2 pristine, others heavily worn
+    pool.wear[0] += 1000
+    pool.wear[1] += 800
+    pool.wear[3] += 600
+    chains = schedule.make_chains(8, 4, "stride1")
+    rep = pool.program(packed, chains)
+    assert sorted(rep.assignment.tolist()) == [0, 1, 2, 3]
+    intra = rep.chain_totals - rep.seam_costs
+    assert rep.assignment[int(np.argmax(intra))] == 2
+
+
+def test_pool_rotate_leveling_spreads_small_tensors():
+    """With fewer chains than crossbars, rotation seeds at the least-worn
+    crossbar, so repeated small tensors spread over the whole pool."""
+    pool = CrossbarPool(SPEC, 8, leveling="rotate")
+    chains = schedule.make_chains(4, 4, "stride1")
+    used = set()
+    for i in range(4):
+        packed = _random_packed(jax.random.PRNGKey(10 + i), 4)
+        rep = pool.program(packed, chains)
+        used.update(rep.assignment.tolist())
+    assert used == set(range(8))
+
+
+def test_pool_validation():
+    pool = CrossbarPool(SPEC, 2)
+    packed = _random_packed(jax.random.PRNGKey(0), 6)
+    with pytest.raises(ValueError):  # more chains than crossbars
+        pool.program(packed, schedule.make_chains(6, 3, "stride1"))
+    with pytest.raises(ValueError):  # wrong geometry
+        CrossbarPool(CrossbarSpec(rows=128, cols=10), 2).program(
+            packed, schedule.make_chains(6, 2, "stride1")
+        )
+    with pytest.raises(ValueError):
+        CrossbarPool(SPEC, 2, leveling="wearless")
+    with pytest.raises(ValueError):  # pools price physical seams
+        analyze_tensor(
+            jnp.zeros((64, 64)),
+            SPEC,
+            PlannerConfig(include_initial=False),
+            jax.random.PRNGKey(0),
+            pool=pool,
+        )
+
+
+def test_pool_reset_keeps_wear_by_default():
+    packed = _random_packed(jax.random.PRNGKey(1), 6)
+    pool = CrossbarPool(SPEC, 3)
+    pool.program(packed, schedule.make_chains(6, 3, "stride1"))
+    assert pool.total_writes > 0
+    pool.reset()
+    assert np.all(pool.state == 0) and pool.total_writes > 0
+    pool.reset(wear=True)
+    assert pool.total_writes == 0 and int(pool.wear.sum()) == 0

@@ -1,0 +1,88 @@
+"""Tests for checkpoint-to-checkpoint redeploy pricing (core.redeploy).
+
+Covers the ``delta_cost`` invariants — permutation-invariance of the
+in-place rewrite cost, stale-vs-fresh chain ordering, tightness of the
+``n_bits`` bound on padded tails — and the persistent-pool refresh path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.planner import CrossbarSpec, PlannerConfig
+from repro.core.pool import CrossbarPool
+from repro.core.redeploy import delta_cost
+
+
+def _drifted(w, scale, seed=1):
+    return w + scale * jax.random.normal(jax.random.PRNGKey(seed), w.shape)
+
+
+def test_inplace_rewrite_is_permutation_invariant(key):
+    """Summed per-element Hamming distance does not depend on layout, so the
+    SWS in-place rewrite cost equals the natural one and the speedup is
+    exactly 1.0 — a sanity check that index-matching bookkeeping is exact."""
+    w_old = jax.random.normal(key, (128, 64)) * 0.02
+    rep = delta_cost(w_old, _drifted(w_old, 0.001))
+    assert rep.transitions_natural == rep.transitions_sws > 0
+    assert rep.sws_delta_speedup == 1.0
+
+
+def test_zero_drift_zero_transitions(key):
+    w = jax.random.normal(key, (128, 64)) * 0.02
+    rep = delta_cost(w, w)
+    assert rep.transitions_natural == 0 and rep.transitions_sws == 0
+    # streaming the (identical) new checkpoint still costs programs
+    assert rep.chain_natural > 0
+
+
+def test_stale_vs_fresh_chain_ordering(key):
+    """After modest drift the stale sort is still near-sorted: fresh re-sort
+    is at least as good as stale, and stale still beats the natural layout."""
+    w_old = jax.random.normal(key, (128, 64)) * 0.02
+    rep = delta_cost(w_old, _drifted(w_old, 0.002))
+    assert 0 < rep.chain_fresh_sws <= rep.chain_stale_sws
+    assert rep.chain_stale_sws < rep.chain_natural
+    assert rep.fresh_sort_speedup >= rep.stale_sort_speedup > 1.0
+
+
+def test_n_bits_counts_only_real_memristors(key):
+    """Regression: padded-tail elements used to be counted as physical cells,
+    slackening the 'upper bound on transitions' claim."""
+    spec = CrossbarSpec(rows=128, cols=10)
+    w_old = jax.random.normal(key, (100, 7)) * 0.02  # 700 % 128 != 0
+    rep = delta_cost(w_old, _drifted(w_old, 0.05), spec)
+    assert rep.n_bits == 700 * spec.cols
+    assert 0 < rep.transitions_natural <= rep.n_bits
+    assert rep.transitions_sws <= rep.n_bits
+
+
+def test_pool_refresh_seeds_old_checkpoint_then_accumulates(key):
+    """A pristine pool is first seated with w_old (its deployment writes are
+    part of the cells' lifetime), then the refresh reprograms the resident
+    old checkpoint; later refreshes never re-seed, and wear accumulates
+    exactly (p=1 full reprogramming: wear == priced transitions)."""
+    spec = CrossbarSpec(rows=64, cols=8)
+    cfg = PlannerConfig(crossbars=1)
+    w_old = jax.random.normal(key, (64, 48)) * 0.02
+    w_new = _drifted(w_old, 0.001)
+    pool = CrossbarPool(spec, 1)
+    rep = delta_cost(w_old, w_new, spec, cfg, pool=pool)
+    assert pool.tensors_seen == 2  # w_old seated, then refreshed to w_new
+    assert rep.chain_pool > 0
+    assert pool.total_writes > rep.chain_pool  # includes w_old's deployment
+
+    w_new2 = _drifted(w_new, 0.001, seed=2)
+    before = pool.total_writes
+    rep2 = delta_cost(w_new, w_new2, spec, cfg, pool=pool)
+    assert pool.tensors_seen == 3  # no re-seed on a warm pool
+    assert rep2.chain_pool > 0
+    assert pool.total_writes == before + rep2.chain_pool  # wear conservation
+
+
+def test_pool_refresh_default_report_has_no_pool_cost(key):
+    w_old = jax.random.normal(key, (64, 64)) * 0.02
+    rep = delta_cost(w_old, _drifted(w_old, 0.001), CrossbarSpec(rows=64, cols=8))
+    assert rep.chain_pool == 0

@@ -83,6 +83,21 @@ def test_lpt_loads_no_int32_overflow():
     assert np.min(tids) == 0 and np.max(tids) == 1
 
 
+def test_lpt_initial_loads_and_capacity():
+    """Wear-leveling contract: loads seeded with accumulated wear, capacity 1
+    turns the greedy into a min-max matching on distinct crossbars."""
+    jobs = jnp.asarray([10, 8, 5, 1], jnp.int32)
+    init = np.asarray([100, 0, 50, 0], np.int64)
+    tids, loads = schedule.lpt_assignment(jobs, 4, initial_loads=init, capacity=1)
+    # heaviest job -> least-loaded thread (ties to lowest id), one job each
+    np.testing.assert_array_equal(tids, [1, 3, 2, 0])
+    np.testing.assert_array_equal(loads, [101, 10, 55, 8])
+    with pytest.raises(ValueError):
+        schedule.lpt_assignment(jobs, 2, capacity=1)  # 4 jobs, 2 slots
+    with pytest.raises(ValueError):
+        schedule.lpt_assignment(jobs, 4, initial_loads=np.zeros(3, np.int64))
+
+
 @given(seed=st.integers(0, 50), threads=st.integers(1, 16))
 def test_lpt_bounds(seed, threads):
     """LPT respects the classic (4/3 - 1/3m) * OPT bound via the trivial
