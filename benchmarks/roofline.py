@@ -4,16 +4,50 @@ Reads experiments/dryrun/*.json (written by repro.launch.dryrun) and emits
 the per-(arch x shape x mesh) three-term roofline table: compute / memory /
 collective seconds, the dominant term, MODEL_FLOPS/HLO_FLOPS, and the
 roofline fraction (useful FLOP/s at the roofline step time over peak).
+
+Also owns the CIM *weight-traffic* accounting (``cim_weight_bytes``): the
+bytes of deployed-weight HBM reads a decode step costs under each serving
+representation.  The packed-plane operand stores one bit per bit cell
+(``uint8[cols, ceil(K/8), N]`` planes + a ``ceil(K/8) x N`` sign-bit mask),
+so its byte count is ~(cols+1)/8 per weight versus ``cols`` for the int8
+plane operand — the ~8x traffic reduction the packed serving path exists
+for.  When ``experiments/bench/BENCH_serve.json`` exists (written by
+``benchmarks.serving_throughput``) its traffic table is folded into the
+roofline report.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import math
 from pathlib import Path
 
-from benchmarks.common import banner, save_json
+from benchmarks.common import OUT_DIR, banner, save_json
 
 DRYRUN_DIR = Path("experiments/dryrun")
+
+
+def cim_weight_bytes(shape: tuple[int, ...], cols: int, repr: str) -> int:
+    """Weight bytes one matmul pass must read for a [..., K, N] tensor.
+
+    * ``dense_f32``    — 4 bytes per weight (the dense-materialized baseline);
+    * ``planes_int8``  — ``cols`` bytes per weight: one int8 per bit cell,
+      the naive bit-sliced operand;
+    * ``packed``       — bit-packed planes + sign mask: ``(cols+1) *
+      ceil(K/8) * N`` bytes per [K, N] slab, i.e. ~(cols+1)/8 per weight.
+    """
+    if len(shape) < 2:
+        raise ValueError(f"weight shape {shape} has no (K, N) axes")
+    n_elem = math.prod(shape)
+    if repr == "dense_f32":
+        return 4 * n_elem
+    if repr == "planes_int8":
+        return cols * n_elem
+    if repr == "packed":
+        k, n = shape[-2], shape[-1]
+        lead = math.prod(shape[:-2]) if len(shape) > 2 else 1
+        return lead * (cols + 1) * (-(-k // 8)) * n
+    raise ValueError(f"unknown representation {repr!r}")
 
 
 def load_cells(dryrun_dir: Path = DRYRUN_DIR, variant: str = "") -> list[dict]:
@@ -49,6 +83,22 @@ def table_rows(cells: list[dict]) -> list[dict]:
     return rows
 
 
+def serving_weight_traffic() -> dict | None:
+    """Fold the serving benchmark's weight-traffic roofline into the report."""
+    path = OUT_DIR / "BENCH_serve.json"
+    if not path.exists():
+        return None
+    d = json.loads(path.read_text())
+    t = d.get("weight_bytes_per_decode_step")
+    if not t:
+        return None
+    return {
+        "arch": d.get("arch"),
+        "bytes_per_decode_step": t,
+        "tok_s": d.get("tok_s"),
+    }
+
+
 def run(variant: str = "") -> dict:
     cells = load_cells(variant=variant)
     rows = table_rows(cells)
@@ -64,6 +114,7 @@ def run(variant: str = "") -> dict:
         "rows": rows,
         "worst_roofline_fraction": worst[:3],
         "most_collective_bound": most_coll[:3],
+        "serving_weight_traffic": serving_weight_traffic(),
     }
 
 
@@ -75,6 +126,12 @@ def main() -> None:
 
     banner("Roofline (from dry-run artifacts)")
     res = run(variant=args.variant)
+    swt = res["serving_weight_traffic"]
+    if swt:
+        t = swt["bytes_per_decode_step"]
+        print(f"  serving weight traffic ({swt['arch']}): dense {t['dense_f32']:,} B/step, "
+              f"int8-planes {t['planes_int8']:,} B/step, packed {t['packed']:,} B/step "
+              f"(int8/packed = {t['int8_over_packed']:.2f}x)")
     rows = [r for r in res["rows"] if args.mesh in (None, r["mesh"])]
     if not rows:
         print("  no dry-run artifacts found — run: python -m repro.launch.dryrun --all --mesh both")

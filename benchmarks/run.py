@@ -23,6 +23,7 @@ from benchmarks import (
     pool_wear,
     redeploy_delta,
     roofline,
+    serving_throughput,
 )
 from benchmarks.common import banner, save_json
 
@@ -122,6 +123,23 @@ def main() -> None:
     summary["pool_wear"] = {
         "max_wear_reduction_lpt_vs_none": rpool["max_wear_reduction_lpt_vs_none"],
         "max_cell_writes_lpt": rpool["levelings"]["lpt"]["max_cell_writes"],
+    }
+
+    banner("Serving throughput — fp vs cim-dense vs int8-planes vs packed")
+    rserve = serving_throughput.run(
+        gen=16 if not args.full else 64, batch=4 if not args.full else 8
+    )
+    for name, tps in rserve["tok_s"].items():
+        print(f"  {name:16s} {tps:10.1f} tok/s")
+    tr = rserve["weight_bytes_per_decode_step"]
+    print(f"  weight traffic int8-planes/packed: {tr['int8_over_packed']:.2f}x "
+          f"({tr['planes_int8']:,} -> {tr['packed']:,} B/step)")
+    save_json("BENCH_serve", rserve)
+    summary["serving"] = {
+        "tok_s": rserve["tok_s"],
+        "packed_over_int8_tok_s": rserve["packed_over_int8_tok_s"],
+        "int8_over_packed_bytes": tr["int8_over_packed"],
+        "token_agreement_vs_dense": rserve["token_agreement_vs_dense"],
     }
 
     banner("Redeploy delta (training-time integration, beyond-paper)")

@@ -1,0 +1,154 @@
+"""Serving throughput: fp dense vs cim-dense vs cim int8-planes vs cim-packed.
+
+Serves one reduced LM four times through ``launch.serve.generate`` (scan
+decode loop, donated KV cache):
+
+  * ``fp``          — float weights, the framework baseline;
+  * ``cim_dense``   — crossbar-achieved weights materialized dense f32;
+  * ``cim_planes_int8`` — achieved weights served as signed int8 bit planes
+    through ``cim_linear`` (one byte of weight traffic per bit cell);
+  * ``cim_packed``  — achieved weights served straight from the canonical
+    bit-packed plane words (one *bit* per bit cell, the pool's own
+    representation) through the packed kernel/reference.
+
+Alongside tok/s it emits the weight-traffic roofline for one decode step
+(``roofline.cim_weight_bytes``): bytes of deployed weights a decode step must
+read under each representation, and the int8-plane/packed ratio (~8x).
+
+  PYTHONPATH=src python -m benchmarks.serving_throughput [--quick]
+
+Writes experiments/bench/BENCH_serve.json (used by benchmarks.roofline and
+uploaded as a CI artifact).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import Timer, banner, save_json
+from benchmarks.roofline import cim_weight_bytes
+from repro.configs import get_arch
+from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment, deploy_params
+from repro.core.pool import CrossbarPool
+from repro.launch.serve import generate
+from repro.models import api
+
+
+def weight_traffic(plan) -> dict:
+    """Deployed-weight bytes one decode step reads, per representation.
+
+    Tensors the planner forces dense under every materialization
+    (``planner.MATERIALIZE_DENSE_ONLY`` — non-matmul consumers) are priced
+    as dense f32 in all three columns, matching what ``deploy_params``
+    actually serves.
+    """
+    from repro.core.planner import _dense_only
+
+    out = {rep: 0 for rep in ("dense_f32", "planes_int8", "packed")}
+    for name, r in plan.reports.items():
+        for rep in out:
+            eff = "dense_f32" if _dense_only(name) else rep
+            out[rep] += cim_weight_bytes(r.shape, plan.spec.cols, eff)
+    out["int8_over_packed"] = out["planes_int8"] / max(out["packed"], 1)
+    out["dense_over_packed"] = out["dense_f32"] / max(out["packed"], 1)
+    return out
+
+
+def run(
+    arch: str = "gemma-2b",
+    *,
+    reduced: bool = True,
+    batch: int = 4,
+    prompt_len: int = 32,
+    gen: int = 16,
+    p_stuck: float = 0.5,
+    min_size: int = 1024,
+    seed: int = 0,
+) -> dict:
+    cfg = get_arch(arch, reduced=reduced)
+    key = jax.random.PRNGKey(seed)
+    params = api.init(key, cfg)
+    bt = api.make_batch(cfg, key, batch, prompt_len)
+
+    spec = CrossbarSpec(rows=128, cols=10)
+    pcfg = PlannerConfig(p_stuck=p_stuck, min_size=min_size)
+    pool = CrossbarPool(spec, pcfg.crossbars)
+    plan = build_deployment(params, spec, pcfg, pool=pool)
+
+    # build each variant inside the loop so peak memory stays fp + one
+    # materialization, not all four at once
+    variants = {
+        "fp": lambda: params,
+        "cim_dense": lambda: deploy_params(params, plan),
+        "cim_planes_int8": lambda: deploy_params(params, plan, materialize="planes_int8"),
+        "cim_packed": lambda: deploy_params(params, plan, materialize="packed"),
+    }
+    tok_s: dict[str, float] = {}
+    tokens: dict[str, jax.Array] = {}
+    for name, make in variants.items():
+        p = make()
+        with Timer():
+            toks, tps = generate(cfg, p, bt, gen_len=gen, seed=seed)
+        tok_s[name] = tps
+        tokens[name] = toks
+        del p
+
+    agree = {
+        name: float(jnp.mean((tokens["cim_dense"] == tokens[name]).astype(jnp.float32)))
+        for name in ("cim_planes_int8", "cim_packed")
+    }
+    traffic = weight_traffic(plan)
+    return {
+        "arch": arch,
+        "reduced": reduced,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "gen": gen,
+        "p_stuck": p_stuck,
+        "backend": jax.default_backend(),
+        "tok_s": tok_s,
+        "packed_over_int8_tok_s": tok_s["cim_packed"] / max(tok_s["cim_planes_int8"], 1e-9),
+        "token_agreement_vs_dense": agree,
+        "weight_bytes_per_decode_step": traffic,
+        "n_deployed_tensors": len(plan.reports),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--full-size", action="store_true", help="no --reduced config")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--p-stuck", type=float, default=0.5)
+    ap.add_argument(
+        "--quick", action="store_true",
+        help="CI smoke shapes: batch 2, prompt 8, gen 4",
+    )
+    args = ap.parse_args()
+    if args.quick:
+        args.batch, args.prompt_len, args.gen = 2, 8, 4
+
+    banner("Serving throughput — fp vs cim-dense vs int8-planes vs packed")
+    res = run(
+        args.arch,
+        reduced=not args.full_size,
+        batch=args.batch,
+        prompt_len=args.prompt_len,
+        gen=args.gen,
+        p_stuck=args.p_stuck,
+    )
+    for name, tps in res["tok_s"].items():
+        print(f"  {name:16s} {tps:10.1f} tok/s")
+    t = res["weight_bytes_per_decode_step"]
+    print(f"  weight bytes/step: dense {t['dense_f32']:,}  int8-planes {t['planes_int8']:,}  "
+          f"packed {t['packed']:,}  (int8/packed = {t['int8_over_packed']:.2f}x)")
+    print(f"  token agreement vs cim-dense: {res['token_agreement_vs_dense']}")
+    save_json("BENCH_serve", res)
+
+
+if __name__ == "__main__":
+    main()

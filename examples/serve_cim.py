@@ -25,6 +25,11 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--p-stuck", type=float, default=0.5)
+    ap.add_argument(
+        "--materialize", default="packed",
+        choices=["dense", "packed", "planes_int8"],
+        help="serving representation of the deployed weights",
+    )
     args = ap.parse_args()
 
     cfg = get_arch(args.arch, reduced=True)
@@ -39,11 +44,11 @@ def main() -> None:
         params, CrossbarSpec(rows=128, cols=10),
         PlannerConfig(p_stuck=args.p_stuck, min_size=1024),
     )
-    params_cim = deploy_params(params, plan)
+    params_cim = deploy_params(params, plan, materialize=args.materialize)
     toks_cim, tps_cim = generate(cfg, params_cim, batch, gen_len=args.gen)
     agree = float(jnp.mean((toks_fp == toks_cim).astype(jnp.float32)))
     t = plan.totals()
-    print(f"cim serve: {tps_cim:8.1f} tok/s   token agreement={agree:.3f}")
+    print(f"cim serve: {tps_cim:8.1f} tok/s ({args.materialize})   token agreement={agree:.3f}")
     print(f"reprogramming: sws={t['sws_speedup']:.2f}x total={t['total_speedup']:.2f}x "
           f"({t['transitions_baseline']:,} -> {t['transitions_final']:,} transitions)")
 

@@ -166,6 +166,35 @@ def section_planes_packed(q: jax.Array, rows: int, cols: int) -> jax.Array:
     return pack_rows(bitplanes(q.reshape(-1, rows), cols))
 
 
+@partial(jax.jit, static_argnames=("cols",))
+def pack_linear_planes(q: jax.Array, cols: int) -> jax.Array:
+    """int[..., K, N] magnitudes -> packed uint8[..., cols, ceil(K/8), N].
+
+    The *serving* operand layout (kernels/cim_matmul packed mode): the plane
+    axis comes first (plane 0 = LSB, same column order as every other packed
+    representation here), and the contraction axis K is packed MSB-first into
+    bytes — the byte convention :func:`pack_rows` uses, so pool state and
+    serving operands share one bit order.  K-padding bits are zero (pristine
+    cells) and the matching activation rows are zero-padded by the kernel
+    wrapper, so padding never contributes to a dot product.
+    """
+    planes = bitplanes(q, cols)  # [..., K, N, cols]
+    planes = jnp.moveaxis(planes, -1, -3)  # [..., cols, K, N]
+    return jnp.packbits(planes.astype(jnp.uint8), axis=-2)
+
+
+@jax.jit
+def pack_linear_sign(sign: jax.Array) -> jax.Array:
+    """+1/-1 int8[..., K, N] -> packed sign bits uint8[..., ceil(K/8), N].
+
+    Bit convention: 1 = negative weight (sign applied digitally after the
+    magnitude reconstruction, mirroring differential crossbar pairs).  Same
+    MSB-first K packing as :func:`pack_linear_planes`; padding bits are zero,
+    i.e. +1, which multiplies only zero-magnitude padding cells.
+    """
+    return jnp.packbits((sign < 0).astype(jnp.uint8), axis=-2)
+
+
 def section(flat: jax.Array, rows: int) -> tuple[jax.Array, int]:
     """Partition a flat array into crossbar sections of ``rows`` weights.
 

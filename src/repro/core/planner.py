@@ -93,6 +93,11 @@ class TensorReport:
     lockstep_time_greedy: int
     lockstep_time_ideal: float
     quant_mse: float  # ||w - w_hat||^2 / n  (quantization + stucking error)
+    # dequantization constants of the achieved weights — what deploy_params
+    # needs to re-materialize crossbar operands (packed / int8 planes) from
+    # the dense w_hat without re-running the planner
+    scale: float = 0.0
+    offset: float = 0.0
 
     @property
     def sws_speedup(self) -> float:
@@ -411,6 +416,8 @@ def _analyze_tensor_bool(
         lockstep_time_greedy=lk_greedy,
         lockstep_time_ideal=lk_ideal,
         quant_mse=float(jnp.mean((flat - w_hat_flat) ** 2)),
+        scale=float(qt.scale),
+        offset=float(qt.offset),
     )
     return report, w_hat
 
@@ -493,6 +500,8 @@ def _analyze_tensor_pool(
         ),
         lockstep_time_ideal=float(prep.transitions_full) / config.threads,
         quant_mse=float(jnp.mean((flat - w_hat_flat) ** 2)),
+        scale=float(aux["scale"]),
+        offset=float(aux["offset"]),
     )
     return report, w_hat
 
@@ -562,6 +571,8 @@ def analyze_tensor(
         ),
         lockstep_time_ideal=float(trans_sws) / config.threads,
         quant_mse=float(jnp.mean((flat - w_hat_flat) ** 2)),
+        scale=float(aux["scale"]),
+        offset=float(aux["offset"]),
     )
     return report, w_hat
 
@@ -624,11 +635,67 @@ def build_deployment(
     )
 
 
-def deploy_params(params: Any, plan: DeploymentPlan) -> Any:
-    """Return a params pytree with deployed tensors replaced by w_hat."""
+MATERIALIZATIONS = ("dense", "packed", "planes_int8")
+
+# Deployed tensors whose consumers are not plain [K, N] matmuls (per-head
+# reshapes, convolutions, elementwise/einsum uses): always materialized as
+# dense w_hat even under "packed"/"planes_int8" — still the achieved
+# crossbar weights, just dense-served.  Matched against '/'-separated path
+# components of the tensor name, not substrings.
+MATERIALIZE_DENSE_ONLY = (
+    "wk_b", "wv_b",  # MLA absorbed-decode up-projections (reshaped per head)
+    "conv",          # SSM causal-conv taps (depthwise conv, not a matmul)
+    "a_log",         # Mamba state matrix (elementwise exp)
+    "r",             # sLSTM recurrent kernel (per-head einsum)
+    "meta",          # Hymba meta tokens (concatenated, never multiplied)
+)
+
+
+def _dense_only(name: str) -> bool:
+    parts = name.split("/")
+    return any(p in parts for p in MATERIALIZE_DENSE_ONLY)
+
+
+def deploy_params(params: Any, plan: DeploymentPlan, *, materialize: str = "dense") -> Any:
+    """Return a params pytree with deployed tensors replaced by achieved state.
+
+    ``materialize`` chooses the serving representation of every deployed
+    tensor (non-deployed leaves are always passed through dense):
+
+    * ``"dense"`` (default / baseline) — the achieved f32 weights ``w_hat``;
+      the model's matmuls stay ordinary dense dots.
+    * ``"packed"`` — bit-packed crossbar operand dicts (the canonical packed
+      planes the pool holds, ~8x less weight traffic); eligible matmuls run
+      through ``simulator.cim_linear`` (see ``models.layers.linear``).
+    * ``"planes_int8"`` — signed int8 plane operand dicts (one byte per bit
+      cell); the parity/traffic baseline for the packed path.
+
+    Operand dicts are exact re-encodings of ``w_hat`` (same achieved weights,
+    stucking included) — see ``simulator.operands_from_dense``.
+    """
+    if materialize not in MATERIALIZATIONS:
+        raise ValueError(
+            f"unknown materialize {materialize!r}; choose from {MATERIALIZATIONS}"
+        )
+    if materialize != "dense":
+        from repro.core import simulator
+
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
     out = []
     for path, leaf in flat:
         name = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
-        out.append(plan.deployed.get(name, leaf))
+        if name not in plan.deployed:
+            out.append(leaf)
+            continue
+        w_hat = plan.deployed[name]
+        if materialize == "dense" or _dense_only(name):
+            out.append(w_hat)
+            continue
+        r = plan.reports[name]
+        out.append(
+            simulator.operands_from_dense(
+                w_hat, r.scale, r.offset, plan.spec.encoding, plan.spec.cols,
+                materialize=materialize,
+            )
+        )
     return jax.tree_util.tree_unflatten(treedef, out)

@@ -32,6 +32,14 @@ Parity invariants (pinned by ``tests/test_pool.py``):
 (b) wear conservation — the per-cell wear increments of a ``program`` call
     sum exactly to its programmed transitions (seams included);
 (c) packed and bool implementations agree on every output.
+
+Serving export: ``PoolProgramReport.achieved`` is the canonical packed
+resident state per section after a program call — the planner dequantizes it
+into the plan's ``deployed`` weights, and ``deploy_params(materialize=
+"packed")`` re-encodes those into the bit-packed serving operands
+(``simulator.operands_from_dense``; the re-encoding is bit-exact with the
+pool's planes, pinned by ``tests/test_cim_packed.py``) — so ``serve --cim
+--materialize packed`` computes on exactly the bits this pool holds.
 """
 from __future__ import annotations
 

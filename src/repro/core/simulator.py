@@ -3,12 +3,22 @@
 ``cim_linear`` computes a linear layer the way the analog array does: as a
 sum over bit columns of {0,1}-plane dot products scaled by powers of two
 (sign applied digitally for sign_magnitude; rank-1 offset correction for
-offset_binary).  On TPU this dispatches to the fused Pallas ``cim_matmul``
-kernel (one VMEM-resident activation tile accumulates all bit planes); on CPU
-it uses the pure-jnp reference.  Numerically both equal ``x @ w_hat`` for the
-dequantized planes — the value of the simulation is that *error-injected*
-planes (bit stucking, stuck-at faults) flow through the same path the
-hardware would use.
+offset_binary).  Two operand representations are supported:
+
+  * **int8 signed planes** (``splanes`` int8[cols, K, N], sign folded in) —
+    the original simulation/parity surface; one byte of traffic per bit cell.
+  * **packed planes** (``planes_packed`` uint8[cols, ceil(K/8), N] +
+    ``sign_packed`` uint8[ceil(K/8), N]) — the *serving* representation: the
+    same canonical bit-packed words the planner and ``CrossbarPool`` hold,
+    one bit of traffic per bit cell (~8x less weight HBM read).
+
+Kernel dispatch policy (mirrors ``kernels.hamming.ops.price_pairs``): with
+``use_kernel=True`` the compiled Pallas kernel runs on TPU; on every other
+backend the portable jnp reference does — interpret-mode Pallas runs the grid
+in Python and would be orders of magnitude slower than the fallback.
+Numerically every path equals ``x @ w_hat`` for the dequantized planes — the
+value of the simulation is that *error-injected* planes (bit stucking,
+stuck-at faults) flow through the same path the hardware would use.
 
 ``logit_kl`` / ``output_mse`` are the accuracy-preservation probes used by
 the benchmarks when a labelled task is unavailable (DESIGN.md §2).
@@ -20,47 +30,177 @@ import jax.numpy as jnp
 
 from repro.core import bitslice
 from repro.core.planner import CrossbarSpec, DeploymentPlan, PlannerConfig, analyze_tensor
+from repro.kernels._util import on_tpu
+
+
+def int8_plane_operands(
+    q: jax.Array, sign: jax.Array, scale: jax.Array, offset: jax.Array, cols: int
+) -> dict[str, jax.Array]:
+    """Magnitudes + signs [..., K, N] -> int8 signed-plane operands.
+
+    Signed planes in {-1, 0, 1}: sign folded in so the matmul core is a plain
+    integer dot product per column (kernels/cim_matmul contract: splanes is
+    [..., cols, K, N] with plane 0 = LSB).  Array-only dict (jit-safe as a
+    params-pytree leaf); leading dims of ``q`` become leading dims of every
+    entry, ``scale``/``offset`` broadcast to them.
+    """
+    planes = bitslice.bitplanes(q, cols)  # [..., K, N, cols]
+    splanes = jnp.moveaxis(planes.astype(jnp.int8) * sign[..., None], -1, -3)
+    lead = q.shape[:-2]
+    return {
+        "splanes": splanes,
+        "scale": jnp.broadcast_to(jnp.asarray(scale, jnp.float32), lead),
+        "offset": jnp.broadcast_to(jnp.asarray(offset, jnp.float32), lead),
+    }
+
+
+def packed_operands(
+    q: jax.Array, sign: jax.Array, scale: jax.Array, offset: jax.Array, cols: int
+) -> dict[str, jax.Array]:
+    """Magnitudes + signs [..., K, N] -> bit-packed serving operands.
+
+    ``planes_packed`` uint8[..., cols, ceil(K/8), N] (plane 0 = LSB, K packed
+    MSB-first per byte) and ``sign_packed`` uint8[..., ceil(K/8), N] (bit 1 =
+    negative) — see ``bitslice.pack_linear_planes``.  Array-only dict; leading
+    dims as in :func:`int8_plane_operands`.
+    """
+    lead = q.shape[:-2]
+    return {
+        "planes_packed": bitslice.pack_linear_planes(q, cols),
+        "sign_packed": bitslice.pack_linear_sign(sign),
+        "scale": jnp.broadcast_to(jnp.asarray(scale, jnp.float32), lead),
+        "offset": jnp.broadcast_to(jnp.asarray(offset, jnp.float32), lead),
+        # zero-byte K marker: the true (pre-padding) contraction length lives
+        # in this array's static shape, so jitted consumers (densify, refs)
+        # can slice the 8-padded K axis without a non-array pytree leaf
+        "kdim": jnp.zeros(lead + q.shape[-2:-1] + (0,), jnp.float32),
+    }
+
+
+def operands_from_dense(
+    w_hat: jax.Array,
+    scale: jax.Array | float,
+    offset: jax.Array | float,
+    encoding: str,
+    cols: int,
+    materialize: str = "packed",
+) -> dict[str, jax.Array]:
+    """Recover crossbar operands from achieved dense weights ``w_hat``.
+
+    ``w_hat`` must be exactly representable under (scale, offset, encoding) —
+    true for any planner-deployed tensor, stucking included.  The integer
+    magnitude is recovered by rounding: q <= 2**cols - 1 keeps the float
+    error of ``q*scale/scale`` far below 0.5, so the round is exact.
+    """
+    w32 = w_hat.astype(jnp.float32)
+    scale = jnp.asarray(scale, jnp.float32)
+    offset = jnp.asarray(offset, jnp.float32)
+    levels = float(2**cols - 1)
+    if encoding == "sign_magnitude":
+        q = jnp.clip(jnp.round(jnp.abs(w32) / scale), 0, levels).astype(jnp.int32)
+        # signbit, not `< 0`: a q=0 cell with negative sign dequantizes to
+        # -0.0, and recovering its sign keeps the re-encoding bit-exact
+        sign = jnp.where(jnp.signbit(w32), -1, 1).astype(jnp.int8)
+    elif encoding == "offset_binary":
+        q = jnp.clip(jnp.round((w32 - offset) / scale), 0, levels).astype(jnp.int32)
+        sign = jnp.ones_like(q, dtype=jnp.int8)
+    else:
+        raise ValueError(f"unknown encoding: {encoding!r}")
+    build = packed_operands if materialize == "packed" else int8_plane_operands
+    return build(q, sign, scale, offset, cols)
+
+
+def is_cim_operands(w) -> bool:
+    """True if ``w`` is a crossbar operand dict rather than a dense array."""
+    return isinstance(w, dict) and ("planes_packed" in w or "splanes" in w)
+
+
+def densify_operands(op: dict[str, jax.Array]) -> jax.Array:
+    """Packed operand dict -> dense achieved weights f32[..., K, N].
+
+    The once-per-dispatch decompression the serving steps use on backends
+    without the packed Pallas kernel (see ``launch.steps``): unpack, weight,
+    sign, scale, offset — exactly ``bitslice.dequantize`` of the achieved
+    planes, so serving tokens match the dense materialization.
+    """
+    from repro.kernels.cim_matmul import ref as cim_ref
+
+    planes = op["planes_packed"]
+    if planes.ndim > 3:  # stacked layers / experts
+        return jax.vmap(densify_operands)(op)
+    k = op["kdim"].shape[-2]
+    w = cim_ref.unpack_weights(planes, op["sign_packed"], k)
+    return w * op["scale"] + op["offset"]
+
+
+def densify_packed(params):
+    """Replace every *packed* operand dict in a params pytree with its dense
+    achieved weights; int8 ``splanes`` dicts (the faithful per-step bit-slice
+    simulation baseline) and dense leaves pass through untouched."""
+
+    def walk(tree):
+        if isinstance(tree, dict):
+            if "planes_packed" in tree:
+                return densify_operands(tree)
+            return {kk: walk(v) for kk, v in tree.items()}
+        if isinstance(tree, (list, tuple)):
+            return type(tree)(walk(v) for v in tree)
+        return tree
+
+    return walk(params)
 
 
 def prepare_linear(
-    w: jax.Array, spec: CrossbarSpec = CrossbarSpec()
+    w: jax.Array, spec: CrossbarSpec = CrossbarSpec(), *, materialize: str = "int8"
 ) -> dict[str, jax.Array]:
     """Quantize a [K, N] weight matrix into crossbar operands for cim_linear.
 
     Sections here are per (row-block of K): the natural, unpermuted layout —
     this is the *execution* path (what the array computes), independent of the
     *programming order* optimizations which live in the planner.
+    ``materialize="int8"`` keeps the original signed int8 planes (plus the
+    ``encoding`` tag, for parity with older callers); ``"packed"`` returns the
+    bit-packed serving operands.
     """
     if w.ndim != 2:
         raise ValueError("prepare_linear expects a 2-D weight")
     qt = bitslice.quantize(w, spec.cols, spec.encoding)
     q = qt.q.reshape(w.shape)
     sign = qt.sign.reshape(w.shape)
-    planes = bitslice.bitplanes(q, spec.cols)  # bool[K, N, cols]
-    # signed planes in {-1, 0, 1}: sign folded in so the matmul core is a
-    # plain integer dot product per column (kernels/cim_matmul contract:
-    # splanes is [cols, K, N] with plane 0 = LSB).
-    splanes = jnp.moveaxis(planes.astype(jnp.int8) * sign[..., None], -1, 0)
-    return {
-        "splanes": splanes,
-        "scale": qt.scale,
-        "offset": qt.offset,
-        "encoding": spec.encoding,
-    }
+    if materialize == "packed":
+        return packed_operands(q, sign, qt.scale, qt.offset, spec.cols)
+    if materialize != "int8":
+        raise ValueError(f"unknown materialize: {materialize!r}")
+    ops = int8_plane_operands(q, sign, qt.scale, qt.offset, spec.cols)
+    ops["encoding"] = spec.encoding
+    return ops
 
 
 def cim_linear(x: jax.Array, operands: dict[str, jax.Array], *, use_kernel: bool = False) -> jax.Array:
-    """y = x @ w_hat computed bit-plane by bit-plane (crossbar dataflow)."""
-    if use_kernel:
-        from repro.kernels.cim_matmul import ops as cim_ops
+    """y = x @ w_hat computed bit-plane by bit-plane (crossbar dataflow).
 
+    ``use_kernel=True`` runs the compiled Pallas kernel on TPU and the
+    portable jnp reference elsewhere (dispatch policy above); packed operands
+    take the bit-packed kernel/ref, int8 operands the plane einsum paths.
+    """
+    from repro.kernels.cim_matmul import ops as cim_ops
+    from repro.kernels.cim_matmul import ref as cim_ref
+
+    kernel = use_kernel and on_tpu()
+    if "planes_packed" in operands:
+        fn = cim_ops.cim_matmul_packed if kernel else cim_ref.cim_matmul_packed
+        y = fn(x, operands["planes_packed"], operands["sign_packed"], operands["scale"])
+    elif kernel or (use_kernel and "encoding" in operands):
+        # explicit use_kernel on a legacy operand dict keeps the historical
+        # behavior (interpret-mode Pallas off-TPU) for kernel parity tests
         y = cim_ops.cim_matmul(x, operands["splanes"], operands["scale"])
     else:
-        from repro.kernels.cim_matmul import ref as cim_ref
-
         y = cim_ref.cim_matmul(x, operands["splanes"], operands["scale"])
-    if operands["encoding"] == "offset_binary":
-        # rank-1 digital correction: x @ (Q*scale + offset) = core + sum(x)*offset
+    encoding = operands.get("encoding")
+    if encoding == "offset_binary" or encoding is None:
+        # rank-1 digital correction: x @ (Q*scale + offset) = core + sum(x)*offset.
+        # Array-only operand dicts carry no encoding tag; offset is exactly 0
+        # for sign_magnitude, so applying it unconditionally is a no-op there.
         y = y + jnp.sum(x, axis=-1, keepdims=True) * operands["offset"]
     return y
 

@@ -1,4 +1,4 @@
-"""Public jit'd wrapper for the CIM matmul kernel (pads, dispatches, scales)."""
+"""Public jit'd wrappers for the CIM matmul kernels (pad, dispatch, scale)."""
 from __future__ import annotations
 
 import functools
@@ -6,8 +6,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels._util import default_interpret, pad_axis_to, round_up
-from repro.kernels.cim_matmul.kernel import cim_matmul_kernel
+from repro.kernels._util import cdiv, default_interpret, pad_axis_to, round_up
+from repro.kernels.cim_matmul.kernel import cim_matmul_kernel, cim_matmul_packed_kernel
+
+
+def _block(requested: int, dim: int, unit: int) -> int:
+    """Clamp a requested block size to the problem while keeping it a multiple
+    of the hardware ``unit``.
+
+    The naive ``min(b, round_up(dim, unit))`` can return a non-multiple of
+    ``unit`` when the caller's ``b`` isn't one (and the padded dim, a multiple
+    of the *block*, is then not tile-aligned) — degenerate decode shapes
+    (M = 1..8) hit exactly this.  Rounding the clamp itself keeps every padded
+    axis a multiple of both the block and the unit; the kernel entries assert
+    the invariant.
+    """
+    return round_up(min(requested, round_up(dim, unit)), unit)
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "bm", "bn", "bk", "interpret"))
@@ -34,11 +48,66 @@ def cim_matmul(
         raise ValueError(f"K mismatch: x has {k}, splanes has {k2}")
     interp = default_interpret(interpret)
 
-    bm_ = min(bm, round_up(m, 8))
-    bn_ = min(bn, round_up(n, 128))
-    bk_ = min(bk, round_up(k, 128))
+    bm_ = _block(bm, m, 8)
+    bn_ = _block(bn, n, 128)
+    bk_ = _block(bk, k, 128)
     xp = pad_axis_to(pad_axis_to(x, 0, round_up(m, bm_)), 1, round_up(k, bk_))
     pp = pad_axis_to(pad_axis_to(splanes, 1, round_up(k, bk_)), 2, round_up(n, bn_))
 
     y = cim_matmul_kernel(xp, pp, bm=bm_, bn=bn_, bk=bk_, mode=mode, interpret=interp)
+    return y[:m, :n] * jnp.asarray(scale, dtype=jnp.float32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bn", "bk", "m_chunk", "interpret")
+)
+def cim_matmul_packed(
+    x: jax.Array,
+    planes_packed: jax.Array,
+    sign_packed: jax.Array,
+    scale: jax.Array | float = 1.0,
+    *,
+    bn: int = 128,
+    bk: int = 128,
+    m_chunk: int = 256,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Bit-packed serving matmul: y = scale * (x @ unpack(planes, signs)).
+
+    Operand contract (``bitslice.pack_linear_planes`` / ``pack_linear_sign``):
+    planes_packed uint8[cols, ceil(K/8), N] with plane 0 = LSB and K packed
+    MSB-first per byte; sign_packed uint8[ceil(K/8), N] with bit 1 = negative.
+    Each stored bit cell costs one bit of HBM traffic — (cols+1)/8 bytes per
+    weight vs ``cols`` bytes for the int8-plane operand.
+
+    Arbitrary (M, K, N), K need not divide 8.  M is processed in chunks of
+    ``m_chunk`` rows so the whole-M-resident kernel grid stays inside VMEM;
+    within a chunk the weight tile is unpacked once per (N, K) block, never
+    per M block.
+    """
+    m, k = x.shape
+    cols, kw, n = planes_packed.shape
+    if kw != cdiv(k, 8):
+        raise ValueError(f"planes K bytes {kw} != ceil({k}/8)")
+    if sign_packed.shape != (kw, n):
+        raise ValueError(f"sign shape {sign_packed.shape} != {(kw, n)}")
+    interp = default_interpret(interpret)
+
+    bn_ = _block(bn, n, 128)
+    bk_ = _block(bk, k, 128)  # multiple of 128, hence of 8
+    kp = round_up(k, bk_)
+    xp = pad_axis_to(x, 1, kp)
+    pp = pad_axis_to(pad_axis_to(planes_packed, 1, kp // 8), 2, round_up(n, bn_))
+    sp = pad_axis_to(pad_axis_to(sign_packed, 0, kp // 8), 1, round_up(n, bn_))
+
+    outs = []
+    for m0 in range(0, max(m, 1), m_chunk):
+        chunk = xp[m0 : m0 + m_chunk]
+        mp = round_up(chunk.shape[0], 8)
+        outs.append(
+            cim_matmul_packed_kernel(
+                pad_axis_to(chunk, 0, mp), pp, sp, bn=bn_, bk=bk_, interpret=interp
+            )[: chunk.shape[0]]
+        )
+    y = jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
     return y[:m, :n] * jnp.asarray(scale, dtype=jnp.float32)

@@ -26,3 +26,39 @@ def cim_matmul(x: jax.Array, splanes: jax.Array, scale: jax.Array) -> jax.Array:
         precision=jax.lax.Precision.HIGHEST,
     )
     return y * scale
+
+
+def unpack_weights(
+    planes_packed: jax.Array, sign_packed: jax.Array, k: int
+) -> jax.Array:
+    """Packed serving operands -> dense unscaled weights f32[..., K, N].
+
+    planes_packed: uint8[..., cols, ceil(K/8), N], plane 0 = LSB, K packed
+    MSB-first per byte (``bitslice.pack_linear_planes``); sign_packed:
+    uint8[..., ceil(K/8), N] with bit 1 = negative.  Returns sign * magnitude,
+    i.e. ``w_hat / scale``.
+    """
+    cols = planes_packed.shape[-3]
+    bits = jnp.unpackbits(planes_packed, axis=-2, count=k)  # [..., cols, K, N]
+    pow2 = (2.0 ** jnp.arange(cols, dtype=jnp.float32))
+    mag = jnp.einsum("...bkn,b->...kn", bits.astype(jnp.float32), pow2)
+    sgn = 1.0 - 2.0 * jnp.unpackbits(sign_packed, axis=-2, count=k).astype(jnp.float32)
+    return mag * sgn
+
+
+def cim_matmul_packed(
+    x: jax.Array,
+    planes_packed: jax.Array,
+    sign_packed: jax.Array,
+    scale: jax.Array,
+) -> jax.Array:
+    """Bit-packed oracle / portable fast path: y = scale * (x @ unpack(planes)).
+
+    Also the CPU/GPU serving fallback (see simulator.cim_linear's dispatch
+    policy): the unpack is a handful of byte ops and the matmul is a single
+    dense dot, so XLA compiles this far faster than an interpreted Pallas
+    grid or the ``cols``-matmul einsum of the int8-plane oracle.
+    """
+    k = x.shape[-1]
+    w = unpack_weights(planes_packed, sign_packed, k)
+    return (x.astype(jnp.float32) @ w) * scale

@@ -9,12 +9,25 @@ the report includes physical wear: max/mean per-cell writes and the
 endurance-budget exhaustion horizon (how many such deployments the pool
 survives).
 
+Serving representation (``--materialize``): ``dense`` serves the achieved
+weights as ordinary f32 matmuls (the baseline); ``packed`` serves straight
+from the crossbar state — bit-packed plane operands (the same canonical
+packed words the planner/pool hold) flowing through the Pallas
+``cim_matmul`` packed kernel on TPU (portable packed reference elsewhere);
+``planes_int8`` is the one-byte-per-bit-cell traffic baseline.
+
+Decode loop (``--loop``): ``scan`` (default) runs the whole generation as a
+single ``lax.scan`` dispatch with the KV cache donated, so decode never
+copies the cache between tokens; ``python`` keeps the per-token dispatch
+loop (cache still donated per step where the backend supports it).
+
 Throughput accounting: one full prefill+decode step runs *before* the timer
 starts, so jit compilation never pollutes the reported tok/s.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
-      --batch 4 --prompt-len 32 --gen 16 [--cim --p-stuck 0.5 --pool-leveling lpt]
+      --batch 4 --prompt-len 32 --gen 16 \
+      [--cim --p-stuck 0.5 --pool-leveling lpt --materialize packed]
 """
 from __future__ import annotations
 
@@ -25,22 +38,47 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment, deploy_params
+from repro.core.planner import (
+    MATERIALIZATIONS,
+    CrossbarSpec,
+    PlannerConfig,
+    build_deployment,
+    deploy_params,
+)
 from repro.core.pool import DEFAULT_ENDURANCE, LEVELINGS, CrossbarPool
-from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.launch.steps import (
+    cache_donation,
+    make_decode_loop,
+    make_prefill_step,
+    make_serve_step,
+)
 from repro.models import api
 
 
-def generate(cfg, params, batch, *, gen_len: int, greedy: bool = True, seed: int = 0):
+def generate(
+    cfg, params, batch, *, gen_len: int, greedy: bool = True, seed: int = 0,
+    loop: str = "scan",
+):
     """Prefill then decode ``gen_len`` tokens; returns (tokens, tok/s).
 
     The first prefill+decode step is executed once untimed (jit warmup):
     compile time used to land inside the timer and understate tok/s by an
-    order of magnitude on short generations.
+    order of magnitude on short generations.  ``loop="scan"`` (default)
+    fuses the decode loop into one donated-cache ``lax.scan`` dispatch;
+    ``loop="python"`` is the legacy per-token dispatch loop.  Both share one
+    sampling path and PRNG schedule, so tokens agree between loops.
     """
+    if loop not in ("scan", "python"):
+        raise ValueError(f"unknown decode loop {loop!r}")
     b, prompt_len = batch["tokens"].shape
     prefill = jax.jit(make_prefill_step(cfg))
-    serve = jax.jit(make_serve_step(cfg))
+    donate = cache_donation()
+    if loop == "scan":
+        decode = jax.jit(
+            make_decode_loop(cfg, gen_len - 1, greedy=greedy), donate_argnums=donate
+        )
+    else:
+        serve = jax.jit(make_serve_step(cfg), donate_argnums=donate)
 
     # cache sized for the full generation; encdec keeps a src-len cross cache
     cache = api.init_cache(
@@ -58,25 +96,28 @@ def generate(cfg, params, batch, *, gen_len: int, greedy: bool = True, seed: int
         key, sub = jax.random.split(key)
         return jax.random.categorical(sub, logits[:, -1])[:, None].astype(jnp.int32), key
 
-    # --- warmup: compile prefill + decode outside the timed region ---------
-    logits_w, pf_cache_w = prefill(params, batch)
-    cache_w = api.merge_prefill_cache(cfg, cache, pf_cache_w)
-    tok_w = jnp.argmax(logits_w[:, -1:], axis=-1).astype(jnp.int32)
-    jax.block_until_ready(serve(params, cache_w, tok_w, jnp.int32(prompt_len))[0])
-
-    # --- timed generation ---------------------------------------------------
-    t0 = time.time()
-    logits, pf_cache = prefill(params, batch)
-    # prefill returns per-segment caches of the prompt; copy into the full cache
-    run_cache = api.merge_prefill_cache(cfg, cache, pf_cache)
-    tok, key = pick(logits, key)
-    out = [tok]
-    for i in range(gen_len - 1):
-        logits, run_cache = serve(params, run_cache, tok, jnp.int32(prompt_len + i))
+    def run(key):
+        """One full prefill + decode; called once untimed, once timed."""
+        logits, pf_cache = prefill(params, batch)
+        # prefill returns per-segment caches of the prompt; copy into the full cache
+        run_cache = api.merge_prefill_cache(cfg, cache, pf_cache)
         tok, key = pick(logits, key)
-        out.append(tok)
-    tokens = jnp.concatenate(out, axis=1)
-    jax.block_until_ready(tokens)
+        if loop == "scan":
+            toks, _ = decode(params, run_cache, tok, key, jnp.int32(prompt_len))
+            tokens = jnp.concatenate([tok, toks], axis=1)
+        else:
+            out = [tok]
+            for i in range(gen_len - 1):
+                logits, run_cache = serve(params, run_cache, tok, jnp.int32(prompt_len + i))
+                tok, key = pick(logits, key)
+                out.append(tok)
+            tokens = jnp.concatenate(out, axis=1)
+        jax.block_until_ready(tokens)
+        return tokens
+
+    run(key)  # warmup: compile prefill + decode outside the timed region
+    t0 = time.time()
+    tokens = run(key)
     dt = time.time() - t0
     return tokens, b * gen_len / dt
 
@@ -89,6 +130,14 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--cim", action="store_true", help="serve crossbar-deployed weights")
+    ap.add_argument(
+        "--materialize", choices=MATERIALIZATIONS, default="dense",
+        help="serving representation of deployed tensors (packed = bit-plane-native)",
+    )
+    ap.add_argument(
+        "--loop", choices=["scan", "python"], default="scan",
+        help="decode loop: one fused lax.scan dispatch or per-token dispatches",
+    )
     ap.add_argument("--p-stuck", type=float, default=0.5)
     ap.add_argument("--rows", type=int, default=128)
     ap.add_argument("--cols", type=int, default=10)
@@ -112,7 +161,7 @@ def main() -> None:
     params = api.init(key, cfg)
     batch = api.make_batch(cfg, key, args.batch, args.prompt_len)
 
-    tokens, tps = generate(cfg, params, batch, gen_len=args.gen, seed=args.seed)
+    tokens, tps = generate(cfg, params, batch, gen_len=args.gen, seed=args.seed, loop=args.loop)
     print(f"fp weights:   {tps:8.1f} tok/s   first request: {tokens[0, :12].tolist()}")
 
     if args.cim:
@@ -124,13 +173,16 @@ def main() -> None:
         )
         pool = CrossbarPool(spec, planner_cfg.crossbars, leveling=args.pool_leveling)
         plan = build_deployment(params, spec, planner_cfg, pool=pool)
-        params_hat = deploy_params(params, plan)
-        tokens_hat, tps_hat = generate(cfg, params_hat, batch, gen_len=args.gen, seed=args.seed)
+        params_hat = deploy_params(params, plan, materialize=args.materialize)
+        tokens_hat, tps_hat = generate(
+            cfg, params_hat, batch, gen_len=args.gen, seed=args.seed, loop=args.loop
+        )
         agree = float(jnp.mean((tokens == tokens_hat).astype(jnp.float32)))
         t = plan.totals()
         stats = pool.stats()
         horizon = stats.exhaustion_horizon(args.endurance)
-        print(f"cim weights:  {tps_hat:8.1f} tok/s   first request: {tokens_hat[0, :12].tolist()}")
+        print(f"cim weights:  {tps_hat:8.1f} tok/s   ({args.materialize} materialization)"
+              f"   first request: {tokens_hat[0, :12].tolist()}")
         print(f"token agreement: {agree:.3f}   reprog speedup: {t['total_speedup']:.2f}x "
               f"(sws {t['sws_speedup']:.2f}x)")
         print(f"pool wear: max cell {stats.max_cell_writes} writes, "

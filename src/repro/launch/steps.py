@@ -50,9 +50,28 @@ def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *, remat: str = "full
     return train_step
 
 
+def _serving_params(params):
+    """Backend policy for bit-packed weight operands in serving steps.
+
+    On TPU, packed operand dicts flow through to the model unchanged — every
+    decode step computes on them via the packed Pallas ``cim_matmul`` kernel,
+    reading ~1 bit of weight HBM per bit cell.  On backends without the
+    compiled kernel the packed representation is a *storage* format: the
+    serve/prefill steps decompress it to dense achieved weights once per
+    dispatch (inside jit, hoisted above the whole scan-over-tokens decode
+    loop) instead of paying a per-token, per-site bit-unpack emulation.
+    Int8-plane operands are exempt: they exist as the faithful per-step
+    bit-sliced simulation baseline.
+    """
+    from repro.core import simulator
+    from repro.kernels._util import on_tpu
+
+    return params if on_tpu() else simulator.densify_packed(params)
+
+
 def make_prefill_step(cfg: ArchConfig):
     def prefill_step(params, batch):
-        return api.prefill(params, cfg, batch)
+        return api.prefill(_serving_params(params), cfg, batch)
 
     return prefill_step
 
@@ -61,6 +80,51 @@ def make_serve_step(cfg: ArchConfig):
     """One-token decode: (params, cache, token, pos) -> (logits, cache)."""
 
     def serve_step(params, cache, token, pos):
-        return api.decode_step(params, cfg, cache, token, pos)
+        return api.decode_step(_serving_params(params), cfg, cache, token, pos)
 
     return serve_step
+
+
+def cache_donation() -> tuple[int, ...]:
+    """``donate_argnums`` for the cache operand of serve_step / decode_loop.
+
+    Donating the KV cache lets XLA update it in place instead of copying the
+    full cache every decoded token.  Params are deliberately NOT donated:
+    every decode step (and every subsequent ``generate`` call — fp vs cim
+    comparisons serve the same params twice) reuses them.  CPU has no buffer
+    donation; returning () there avoids a per-dispatch warning.
+    """
+    return (1,) if jax.default_backend() != "cpu" else ()
+
+
+def make_decode_loop(cfg: ArchConfig, n_steps: int, *, greedy: bool = True):
+    """Whole-generation decode as ONE ``lax.scan`` dispatch.
+
+    Returns decode_loop(params, cache, tok0, key, prompt_len) ->
+    (tokens (B, n_steps) i32, final cache).  The scan carries (cache, token,
+    key); combined with cache donation the KV cache is updated in place for
+    the entire generation — no per-token dispatch, no per-step cache copy.
+    The sampling path and PRNG split schedule are identical to the eager
+    per-token loop in ``launch.serve.generate``, so both loops emit the same
+    tokens for the same seed.
+    """
+
+    def decode_loop(params, cache, tok0, key, prompt_len):
+        params = _serving_params(params)  # hoisted above the token scan
+
+        def body(carry, pos):
+            cache, tok, key = carry
+            logits, cache = api.decode_step(params, cfg, cache, tok, pos)
+            if greedy:
+                nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = jax.random.categorical(sub, logits[:, -1])[:, None].astype(jnp.int32)
+            return (cache, nxt, key), nxt
+
+        positions = prompt_len + jnp.arange(n_steps, dtype=jnp.int32)
+        (cache, _, _), toks = jax.lax.scan(body, (cache, tok0, key), positions)
+        # toks: (n_steps, B, 1) -> (B, n_steps)
+        return jnp.swapaxes(toks[..., 0], 0, 1), cache
+
+    return decode_loop

@@ -44,9 +44,9 @@ def _qkv(p: Params, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
     dtype = x.dtype
-    q = (x @ p["wq"].astype(dtype)).reshape(b, s, cfg.n_heads, hd)
-    k = (x @ p["wk"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd)
-    v = (x @ p["wv"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    q = layers.linear(p["wq"], x, dtype).reshape(b, s, cfg.n_heads, hd)
+    k = layers.linear(p["wk"], x, dtype).reshape(b, s, cfg.n_kv_heads, hd)
+    v = layers.linear(p["wv"], x, dtype).reshape(b, s, cfg.n_kv_heads, hd)
     q = layers.apply_rope(q.transpose(0, 2, 1, 3), positions[None, None, :], cfg.rope_theta)
     k = layers.apply_rope(k.transpose(0, 2, 1, 3), positions[None, None, :], cfg.rope_theta)
     v = v.transpose(0, 2, 1, 3)
@@ -68,7 +68,7 @@ def attention_fwd(
     q, k, v = _qkv(p, cfg, x, positions)
     out = attention(q, k, v, kind=kind, window=window, q_offset=q_offset)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
-    y = out @ p["wo"].astype(x.dtype)
+    y = layers.linear(p["wo"], out, x.dtype)
     cache = {"k": k, "v": v} if return_cache else None
     return y, cache
 
@@ -90,7 +90,7 @@ def attention_step(
     v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=2)
     out = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
     out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
-    y = out @ p["wo"].astype(x.dtype)
+    y = layers.linear(p["wo"], out, x.dtype)
     return y, {"k": k_cache, "v": v_cache}
 
 

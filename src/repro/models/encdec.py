@@ -39,8 +39,8 @@ def _cross_kv(p: Params, cfg: ArchConfig, enc_out: jax.Array):
     b, s, _ = enc_out.shape
     hd = cfg.resolved_head_dim
     dtype = enc_out.dtype
-    k = (enc_out @ p["wk"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
-    v = (enc_out @ p["wv"].astype(dtype)).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    k = layers.linear(p["wk"], enc_out, dtype).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = layers.linear(p["wv"], enc_out, dtype).reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
     return k, v
 
 
@@ -48,9 +48,9 @@ def _cross_attend(p: Params, cfg: ArchConfig, x: jax.Array, k, v):
     b, s, _ = x.shape
     hd = cfg.resolved_head_dim
     dtype = x.dtype
-    q = (x @ p["wq"].astype(dtype)).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    q = layers.linear(p["wq"], x, dtype).reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     out = blockwise_attention(q, k, v, kind="bidir")
-    return out.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["wo"].astype(dtype)
+    return layers.linear(p["wo"], out.transpose(0, 2, 1, 3).reshape(b, s, -1), dtype)
 
 
 def dec_block_fwd(
@@ -83,9 +83,9 @@ def dec_block_step(p: Params, cfg: ArchConfig, x, cache, pos):
     xq = layers.rmsnorm(p["ln_x"], x)
     b = x.shape[0]
     hd = cfg.resolved_head_dim
-    q = (xq @ p["cross"]["wq"].astype(x.dtype)).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    q = layers.linear(p["cross"]["wq"], xq, x.dtype).reshape(b, 1, cfg.n_heads, hd).transpose(0, 2, 1, 3)
     out = decode_attention(q, cache["cross_k"], cache["cross_v"], cache["cross_k"].shape[2])
-    x = x + out.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ p["cross"]["wo"].astype(x.dtype)
+    x = x + layers.linear(p["cross"]["wo"], out.transpose(0, 2, 1, 3).reshape(b, 1, -1), x.dtype)
     x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
     return x, {"self": self_cache, "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
 

@@ -52,7 +52,7 @@ def hymba_block_fwd(
     attn = attention(
         q, k, v, kind=kind, window=window if kind == "swa" else None, q_offset=q_offset
     )
-    attn = attn.transpose(0, 2, 1, 3).reshape(b, s, -1) @ p["attn"]["wo"].astype(x.dtype)
+    attn = layers.linear(p["attn"]["wo"], attn.transpose(0, 2, 1, 3).reshape(b, s, -1), x.dtype)
     ssm_out, ssm_cache = ssm.mamba_fwd(p["mamba"], cfg, xn, return_cache=return_cache)
     x = x + _fuse(p, attn, ssm_out)
     x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
@@ -96,7 +96,7 @@ def hymba_block_step(
         k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, pos, axis=2)
         v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, pos, axis=2)
         attn = decode_attention(q, k_cache, v_cache, pos + 1)
-    attn = attn.transpose(0, 2, 1, 3).reshape(b, 1, -1) @ p["attn"]["wo"].astype(x.dtype)
+    attn = layers.linear(p["attn"]["wo"], attn.transpose(0, 2, 1, 3).reshape(b, 1, -1), x.dtype)
     ssm_out, ssm_cache = ssm.mamba_step(p["mamba"], cfg, xn, cache["ssm"])
     x = x + _fuse(p, attn, ssm_out)
     x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)

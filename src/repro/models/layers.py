@@ -26,8 +26,42 @@ def init_dense(key, in_dim: int, out_dim: int, scale: float = 1.0) -> Params:
     return {"w": _dense_init(key, in_dim, out_dim, scale)}
 
 
+def _cim_apply(w: dict, x: jax.Array) -> jax.Array:
+    """Crossbar operand dict @ activations, any rank.
+
+    Leading operand dims beyond the canonical 3-D planes (stacked experts /
+    scan-sliced layers) are vmapped against matching leading dims of ``x``;
+    the remaining batch dims of ``x`` flatten into the matmul M axis.
+    """
+    from repro.core import simulator
+
+    planes = w.get("planes_packed", w.get("splanes"))
+    if planes.ndim > 3:
+        return jax.vmap(_cim_apply)(w, x)
+    lead = x.shape[:-1]
+    y = simulator.cim_linear(x.reshape(-1, x.shape[-1]), w, use_kernel=True)
+    return y.reshape(*lead, y.shape[-1])
+
+
+def linear(w, x: jax.Array, dtype) -> jax.Array:
+    """x @ w for a dense weight array or a CIM crossbar operand dict.
+
+    THE routing point for crossbar-native serving: every model matmul whose
+    weight the planner may deploy goes through here.  Dense arrays take the
+    ordinary dot (bit-identical to the pre-refactor inline ``@``); operand
+    dicts (``deploy_params(materialize="packed"/"planes_int8")``) run through
+    ``simulator.cim_linear`` — the compiled Pallas kernel on TPU, the portable
+    packed reference elsewhere.  Batched 3-D weights (MoE experts) work for
+    both representations: dense via the ``@`` batching rule, operands via
+    vmap over the leading dims.
+    """
+    if isinstance(w, dict):
+        return _cim_apply(w, x).astype(dtype)
+    return x @ w.astype(dtype)
+
+
 def dense(p: Params, x: jax.Array, dtype) -> jax.Array:
-    return x @ p["w"].astype(dtype)
+    return linear(p["w"], x, dtype)
 
 
 def init_norm(dim: int) -> Params:
@@ -77,15 +111,15 @@ def init_glu_mlp(key, d_model: int, d_ff: int) -> Params:
 
 
 def glu_mlp(p: Params, x: jax.Array, act: str, dtype) -> jax.Array:
-    gate = x @ p["wi_gate"].astype(dtype)
-    up = x @ p["wi_up"].astype(dtype)
+    gate = linear(p["wi_gate"], x, dtype)
+    up = linear(p["wi_up"], x, dtype)
     if act == "swiglu":
         h = jax.nn.silu(gate) * up
     elif act == "geglu":
         h = jax.nn.gelu(gate, approximate=True) * up
     else:
         raise ValueError(f"unknown act {act!r}")
-    return h @ p["wo"].astype(dtype)
+    return linear(p["wo"], h, dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -110,4 +144,4 @@ def init_lm_head(key, d_model: int, vocab: int) -> Params:
 
 
 def lm_head(p: Params, x: jax.Array) -> jax.Array:
-    return x.astype(jnp.float32) @ p["w"].astype(jnp.float32)
+    return linear(p["w"], x.astype(jnp.float32), jnp.float32)

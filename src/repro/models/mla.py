@@ -44,8 +44,8 @@ def _project_q(p: Params, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
     b, s, _ = x.shape
     h = cfg.n_heads
     dtype = x.dtype
-    ql = layers.rmsnorm(p["q_norm"], x @ p["wq_a"].astype(dtype))
-    q = (ql @ p["wq_b"].astype(dtype)).reshape(b, s, h, -1).transpose(0, 2, 1, 3)
+    ql = layers.rmsnorm(p["q_norm"], layers.linear(p["wq_a"], x, dtype))
+    q = layers.linear(p["wq_b"], ql, dtype).reshape(b, s, h, -1).transpose(0, 2, 1, 3)
     q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
     q_rope = layers.apply_rope(q_rope, positions[None, None, :], cfg.rope_theta)
     return q_nope, q_rope
@@ -55,7 +55,7 @@ def _project_kv_latent(p: Params, cfg: ArchConfig, x: jax.Array, positions: jax.
     """-> c_kv (B,S,r), k_rope (B,S,dr) — exactly what the decode cache holds."""
     m = cfg.mla
     dtype = x.dtype
-    kv = x @ p["wkv_a"].astype(dtype)
+    kv = layers.linear(p["wkv_a"], x, dtype)
     c_kv, k_rope = kv[..., : m.kv_lora_rank], kv[..., m.kv_lora_rank :]
     c_kv = layers.rmsnorm(p["kv_norm"], c_kv)
     k_rope = layers.apply_rope(k_rope[:, None], positions[None, None, :], cfg.rope_theta)[:, 0]
@@ -75,6 +75,9 @@ def mla_attention_fwd(
     q_nope, q_rope = _project_q(p, cfg, x, positions)
     c_kv, k_rope = _project_kv_latent(p, cfg, x, positions)
 
+    # wk_b / wv_b stay dense under every materialization (planner
+    # MATERIALIZE_DENSE_ONLY): the absorbed decode path below reshapes them
+    # per head, which has no crossbar-operand equivalent
     k_nope = (c_kv @ p["wk_b"].astype(dtype)).reshape(b, s, h, m.qk_nope_head_dim)
     v = (c_kv @ p["wv_b"].astype(dtype)).reshape(b, s, h, m.v_head_dim)
     k_nope = k_nope.transpose(0, 2, 1, 3)
@@ -85,7 +88,7 @@ def mla_attention_fwd(
     k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
     out = blockwise_attention(q, k, v, kind="causal", q_offset=q_offset)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, h * m.v_head_dim)
-    y = out @ p["wo"].astype(dtype)
+    y = layers.linear(p["wo"], out, dtype)
     cache = {"c_kv": c_kv, "k_rope": k_rope} if return_cache else None
     return y, cache
 
@@ -120,7 +123,7 @@ def mla_attention_step(p: Params, cfg: ArchConfig, x: jax.Array, cache, pos):
     wv_b = p["wv_b"].astype(dtype).reshape(m.kv_lora_rank, h, m.v_head_dim)
     out = jnp.einsum("bhqr,rhd->bhqd", ctx.astype(dtype), wv_b)
     out = out.transpose(0, 2, 1, 3).reshape(b, 1, h * m.v_head_dim)
-    y = out @ p["wo"].astype(dtype)
+    y = layers.linear(p["wo"], out, dtype)
     return y, {"c_kv": c_kv, "k_rope": k_rope}
 
 

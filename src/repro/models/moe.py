@@ -60,7 +60,7 @@ def init_moe_mlp(key, cfg: ArchConfig) -> Params:
 
 def _route(p: Params, m, xf: jax.Array, e: int):
     """Router: -> (topw (T,k) f32, topi (T,k) i32, aux scalar)."""
-    logits = (xf.astype(jnp.float32)) @ p["router"].astype(jnp.float32)  # (T, E)
+    logits = layers.linear(p["router"], xf.astype(jnp.float32), jnp.float32)  # (T, E)
     probs = jax.nn.softmax(logits, axis=-1)
     topw, topi = jax.lax.top_k(probs, m.top_k)  # (T, k)
     topw = topw / jnp.maximum(jnp.sum(topw, axis=-1, keepdims=True), 1e-9)
@@ -103,10 +103,13 @@ def _ffn_combine(
     tok = jnp.minimum(src // k, t - 1)
     buf = (xf[tok] * valid[:, None].astype(dtype)).reshape(n_buf, cap, d)
 
-    gate = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"].astype(dtype))
-    up = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(dtype))
+    # batched per-expert matmuls; layers.linear batches dense weights via the
+    # ``@`` broadcasting rule and vmaps crossbar operand dicts over the
+    # leading expert axis
+    gate = layers.linear(p["wi_gate"], buf, dtype)
+    up = layers.linear(p["wi_up"], buf, dtype)
     h = jax.nn.silu(gate) * up
-    out = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(dtype))
+    out = layers.linear(p["wo"], h, dtype)
 
     flat_o = jnp.concatenate([out.reshape(n_buf * cap, d), jnp.zeros((1, d), dtype)])
     y_tk = flat_o[slot] * (keep.astype(dtype) * topw.reshape(-1).astype(dtype))[:, None]

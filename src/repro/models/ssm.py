@@ -160,19 +160,19 @@ def mlstm_block_fwd(
     dtype = x.dtype
 
     xn = layers.rmsnorm(p["ln"], x)
-    u = xn @ p["w_up"].astype(dtype)
+    u = layers.linear(p["w_up"], xn, dtype)
     u_c, u_g = u[..., :di], u[..., di:]
     c = jax.nn.silu(causal_conv(p["conv"], u_c))
-    q = (c @ p["wq"].astype(dtype)).reshape(b, s, h, dh)
-    k = (c @ p["wk"].astype(dtype)).reshape(b, s, h, dh)
-    v = (u_c @ p["wv"].astype(dtype)).reshape(b, s, h, dh)
-    gates = xn @ p["w_if"].astype(dtype)
+    q = layers.linear(p["wq"], c, dtype).reshape(b, s, h, dh)
+    k = layers.linear(p["wk"], c, dtype).reshape(b, s, h, dh)
+    v = layers.linear(p["wv"], u_c, dtype).reshape(b, s, h, dh)
+    gates = layers.linear(p["w_if"], xn, dtype)
     i_logit, f_logit = gates[..., :h], gates[..., h:]
 
     state0 = jnp.zeros((b, h, dh, dh), jnp.float32)
     norm0 = jnp.zeros((b, h, dh), jnp.float32)
     y, state, norm = mlstm_cell(q, k, v, i_logit, f_logit, state0, norm0, s_cfg.chunk_size)
-    out = (y.reshape(b, s, di).astype(dtype) * jax.nn.silu(u_g)) @ p["w_down"].astype(dtype)
+    out = layers.linear(p["w_down"], y.reshape(b, s, di).astype(dtype) * jax.nn.silu(u_g), dtype)
     cache = None
     if return_cache:
         cache = {"state": state, "norm": norm, "conv": u_c[:, -(s_cfg.conv_width - 1) :, :]}
@@ -188,14 +188,14 @@ def mlstm_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, layer_flag=No
     dtype = x.dtype
 
     xn = layers.rmsnorm(p["ln"], x)
-    u = xn @ p["w_up"].astype(dtype)
+    u = layers.linear(p["w_up"], xn, dtype)
     u_c, u_g = u[..., :di], u[..., di:]
     conv_state, c = causal_conv_step(p["conv"], cache["conv"], u_c)
     c = jax.nn.silu(c)
-    q = (c @ p["wq"].astype(dtype)).reshape(b, h, dh) * (dh**-0.5)
-    k = (c @ p["wk"].astype(dtype)).reshape(b, h, dh)
-    v = (u_c @ p["wv"].astype(dtype)).reshape(b, h, dh)
-    gates = xn @ p["w_if"].astype(dtype)
+    q = layers.linear(p["wq"], c, dtype).reshape(b, h, dh) * (dh**-0.5)
+    k = layers.linear(p["wk"], c, dtype).reshape(b, h, dh)
+    v = layers.linear(p["wv"], u_c, dtype).reshape(b, h, dh)
+    gates = layers.linear(p["w_if"], xn, dtype)
     i_g = jax.nn.sigmoid(gates[..., :h].astype(jnp.float32)).reshape(b, h)
     f_g = jax.nn.sigmoid(gates[..., h:].astype(jnp.float32)).reshape(b, h)
 
@@ -206,7 +206,7 @@ def mlstm_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, layer_flag=No
     num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), state)
     den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), norm)), 1.0)
     y = (num / den[..., None]).reshape(b, 1, di).astype(dtype)
-    out = (y * jax.nn.silu(u_g)) @ p["w_down"].astype(dtype)
+    out = layers.linear(p["w_down"], y * jax.nn.silu(u_g), dtype)
     return x + out, {"state": state, "norm": norm, "conv": conv_state}
 
 
@@ -262,7 +262,7 @@ def slstm_block_fwd(
     dh = d // h
     dtype = x.dtype
     xn = layers.rmsnorm(p["ln"], x)
-    wx = (xn @ p["w"].astype(dtype)).reshape(b, s, h, 4 * dh)
+    wx = layers.linear(p["w"], xn, dtype).reshape(b, s, h, 4 * dh)
 
     hs0 = {
         "h": jnp.zeros((b, h, dh), jnp.float32),
@@ -277,7 +277,7 @@ def slstm_block_fwd(
 
     hs, ys = jax.lax.scan(step, hs0, wx.swapaxes(0, 1))
     y = ys.swapaxes(0, 1).reshape(b, s, d).astype(dtype)
-    out = y @ p["w_out"].astype(dtype)
+    out = layers.linear(p["w_out"], y, dtype)
     cache = hs if return_cache else None
     return x + out, cache
 
@@ -288,10 +288,10 @@ def slstm_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, layer_flag=No
     dh = d // h
     dtype = x.dtype
     xn = layers.rmsnorm(p["ln"], x)
-    wx = (xn @ p["w"].astype(dtype)).reshape(b, h, 4 * dh)
+    wx = layers.linear(p["w"], xn, dtype).reshape(b, h, 4 * dh)
     hs = _slstm_step(p, cfg, wx, cache)
     y = hs["h"].reshape(b, 1, d).astype(dtype)
-    out = y @ p["w_out"].astype(dtype)
+    out = layers.linear(p["w_out"], y, dtype)
     return x + out, hs
 
 
@@ -363,15 +363,15 @@ def mamba_fwd(p: Params, cfg: ArchConfig, xn, *, return_cache=False):
     n = s_cfg.state_size
     dtype = xn.dtype
 
-    u = xn @ p["in_proj"].astype(dtype)
+    u = layers.linear(p["in_proj"], xn, dtype)
     xc, z = u[..., :di], u[..., di:]
     conv_tail = xc[:, -(s_cfg.conv_width - 1) :, :]
     xc = jax.nn.silu(causal_conv(p["conv"], xc))
 
-    proj = xc @ p["x_proj"].astype(dtype)
+    proj = layers.linear(p["x_proj"], xc, dtype)
     dt_rank = proj.shape[-1] - 2 * n
     dt = jax.nn.softplus(
-        proj[..., :dt_rank] @ p["dt_proj"].astype(dtype) + p["dt_bias"].astype(dtype)
+        layers.linear(p["dt_proj"], proj[..., :dt_rank], dtype) + p["dt_bias"].astype(dtype)
     ).astype(jnp.float32)  # (B,S,di)
     b_in = proj[..., dt_rank : dt_rank + n].astype(jnp.float32)  # (B,S,N)
     c_out = proj[..., dt_rank + n :].astype(jnp.float32)  # (B,S,N)
@@ -383,7 +383,7 @@ def mamba_fwd(p: Params, cfg: ArchConfig, xn, *, return_cache=False):
     state0 = jnp.zeros((b, di, n), jnp.float32)
     hs, state = _mamba_scan_chunked(a_bar, bx, state0, s_cfg.chunk_size)
     y = jnp.einsum("bsdn,bsn->bsd", hs, c_out) + p["d_skip"][None, None] * xc.astype(jnp.float32)
-    y = (y.astype(dtype) * jax.nn.silu(z)) @ p["out_proj"].astype(dtype)
+    y = layers.linear(p["out_proj"], y.astype(dtype) * jax.nn.silu(z), dtype)
     cache = {"state": state, "conv": conv_tail} if return_cache else None
     return y, cache
 
@@ -396,15 +396,15 @@ def mamba_step(p: Params, cfg: ArchConfig, xn, cache):
     n = s_cfg.state_size
     dtype = xn.dtype
 
-    u = xn @ p["in_proj"].astype(dtype)
+    u = layers.linear(p["in_proj"], xn, dtype)
     xc, z = u[..., :di], u[..., di:]
     conv_state, xc1 = causal_conv_step(p["conv"], cache["conv"], xc)
     xc1 = jax.nn.silu(xc1)  # (B,1,di)
 
-    proj = xc1 @ p["x_proj"].astype(dtype)
+    proj = layers.linear(p["x_proj"], xc1, dtype)
     dt_rank = proj.shape[-1] - 2 * n
     dt = jax.nn.softplus(
-        proj[..., :dt_rank] @ p["dt_proj"].astype(dtype) + p["dt_bias"].astype(dtype)
+        layers.linear(p["dt_proj"], proj[..., :dt_rank], dtype) + p["dt_bias"].astype(dtype)
     ).astype(jnp.float32)[:, 0]  # (B,di)
     b_in = proj[:, 0, dt_rank : dt_rank + n].astype(jnp.float32)  # (B,N)
     c_out = proj[:, 0, dt_rank + n :].astype(jnp.float32)  # (B,N)
@@ -414,7 +414,7 @@ def mamba_step(p: Params, cfg: ArchConfig, xn, cache):
     bx = (dt * xc1[:, 0].astype(jnp.float32))[..., None] * b_in[:, None, :]
     state = a_bar * cache["state"] + bx
     y = jnp.einsum("bdn,bn->bd", state, c_out) + p["d_skip"][None] * xc1[:, 0].astype(jnp.float32)
-    y = (y[:, None].astype(dtype) * jax.nn.silu(z)) @ p["out_proj"].astype(dtype)
+    y = layers.linear(p["out_proj"], y[:, None].astype(dtype) * jax.nn.silu(z), dtype)
     return y, {"state": state, "conv": conv_state}
 
 
