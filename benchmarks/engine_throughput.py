@@ -1,0 +1,322 @@
+"""Continuous batching vs static lockstep batching under a Poisson trace.
+
+Serves one heterogeneous request trace (prompt lengths, generation lengths,
+and Poisson arrival times all drawn per request) two ways:
+
+  * ``static``  — the PR3-era lockstep server: requests are grouped into
+    fixed-size batches in arrival order, prompts padded to one static shape,
+    and decode runs until the *longest* request in the batch finishes — a
+    retired sequence burns compute until the batch drains, and the batch
+    cannot start until its last member arrives.
+  * ``engine``  — ``launch.engine.Engine``: paged KV cache, chunked prefill,
+    and mid-flight admission into freed slots; decode advances all live
+    slots in per-slot-masked quanta.
+
+Both servers are pre-warmed (the engine via ``Engine.prewarm`` — every
+bucketed variant compiled up front; the static server one dummy batch per
+generation bucket) so the wall-clock comparison measures steady-state
+serving.  Reported:
+useful tok/s (only each request's own ``max_new_tokens`` count) and p50/p95
+request latency (finish − arrival).
+
+  PYTHONPATH=src python -m benchmarks.engine_throughput [--quick] [--check]
+
+Writes experiments/bench/BENCH_engine.json.  ``--check`` exits non-zero if
+the engine's tok/s falls below the static baseline at equal load (the CI
+regression gate).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import banner, save_json
+from repro.configs import get_arch
+from repro.launch import steps
+from repro.launch.engine import Engine, EngineConfig, Request, _bucket
+from repro.models import api
+
+
+def make_trace(
+    cfg, n_requests: int, *, min_prompt=4, max_prompt=48, min_gen=2, max_gen=32,
+    rate: float = 500.0, seed: int = 0,
+) -> list[Request]:
+    """Heterogeneous Poisson trace: iid prompt lengths, heavy-tailed
+    generation lengths, exponential inter-arrival gaps at ``rate``
+    requests/second.
+
+    Generation lengths are a short/long mixture (75% short around
+    ``min_gen``, 25% long near ``max_gen``) — the shape of production
+    serving traffic, and the regime lockstep batching handles worst: one
+    long request in a batch drains every slot for its whole tail.
+    """
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+    reqs = []
+    for i in range(n_requests):
+        plen = int(rng.integers(min_prompt, max_prompt + 1))
+        if rng.random() < 0.75:
+            gen = int(rng.integers(min_gen, min(min_gen + 7, max_gen) + 1))
+        else:
+            gen = int(rng.integers(max(max_gen // 2, min_gen), max_gen + 1))
+        prompt = rng.integers(0, cfg.vocab_size, plen).astype(np.int32)
+        reqs.append(
+            Request(
+                rid=i, prompt=prompt, max_new_tokens=gen, greedy=True,
+                seed=i, arrival_time=float(arrivals[i]),
+            )
+        )
+    return reqs
+
+
+def _pct(xs, p):
+    return float(np.percentile(np.asarray(xs), p)) if xs else 0.0
+
+
+class StaticServer:
+    """Fixed-shape lockstep batching baseline.
+
+    One compiled (prefill, decode-loop) pair per generation-length bucket;
+    prompts are padded to the global ``max_prompt`` and decode always runs
+    the bucketed batch-max generation length — the whole batch drains before
+    the next one starts (exactly the ``launch.serve.generate`` shape
+    discipline, amortized across a trace).
+    """
+
+    def __init__(self, cfg, params, batch_size: int, max_prompt: int, max_gen: int):
+        self.cfg = cfg
+        self.params = steps.prepare_serving_params(params)
+        self.batch_size = batch_size
+        self.max_prompt = max_prompt
+        self.max_gen = max_gen
+        self.prefill = jax.jit(steps.make_prefill_step(cfg))
+        donate = steps.cache_donation()
+        self._loops = {}
+        self._donate = donate
+
+    def _loop(self, gen_bucket: int):
+        if gen_bucket not in self._loops:
+            self._loops[gen_bucket] = jax.jit(
+                steps.make_decode_loop(self.cfg, gen_bucket - 1),
+                donate_argnums=self._donate,
+            )
+        return self._loops[gen_bucket]
+
+    def serve_batch(self, reqs: list[Request]) -> np.ndarray:
+        """(B, gen_bucket) tokens; rows beyond each request's own gen are
+        drained lockstep waste."""
+        b = len(reqs)
+        gen_bucket = _bucket(max(r.max_new_tokens for r in reqs), self.max_gen)
+        tokens = np.zeros((self.batch_size, self.max_prompt), np.int32)
+        for i, r in enumerate(reqs):
+            tokens[i, : r.prompt.size] = r.prompt  # right-padded static shape
+        batch = {"tokens": jnp.asarray(tokens)}
+        logits, pf_cache = self.prefill(self.params, batch)
+        cache = api.init_cache(self.cfg, self.batch_size, self.max_prompt + gen_bucket)
+        cache = api.merge_prefill_cache(self.cfg, cache, pf_cache)
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        key = jax.random.PRNGKey(0)
+        toks, _ = self._loop(gen_bucket)(
+            self.params, cache, tok, key, jnp.int32(self.max_prompt)
+        )
+        out = np.concatenate([np.asarray(tok), np.asarray(toks)], axis=1)
+        jax.block_until_ready(toks)
+        return out[:b]
+
+    def warmup(self, gen_buckets: set[int]) -> None:
+        dummy = [
+            Request(rid=-1, prompt=np.zeros(4, np.int32), max_new_tokens=g)
+            for g in sorted(gen_buckets)
+        ]
+        for d in dummy:
+            self.serve_batch([d])
+
+    def run(self, reqs: list[Request]) -> dict:
+        t0 = time.perf_counter()
+        latencies, useful = [], 0
+        for lo in range(0, len(reqs), self.batch_size):
+            group = reqs[lo : lo + self.batch_size]
+            now = time.perf_counter() - t0
+            last = max(r.arrival_time for r in group)
+            if last > now:  # lockstep: the batch waits for its last member
+                time.sleep(last - now)
+            self.serve_batch(group)
+            done = time.perf_counter() - t0
+            for r in group:
+                latencies.append(done - r.arrival_time)
+                useful += r.max_new_tokens
+        wall = time.perf_counter() - t0
+        return {
+            "tok_s": useful / wall,
+            "wall_s": wall,
+            "p50_latency_ms": 1e3 * _pct(latencies, 50),
+            "p95_latency_ms": 1e3 * _pct(latencies, 95),
+            "n_batches": -(-len(reqs) // self.batch_size),
+        }
+
+
+def _retrace(trace: list[Request], tag: int) -> list[Request]:
+    """Fresh Request objects (distinct rids) for a repeat pass."""
+    return [
+        Request(
+            rid=tag * 10_000 + r.rid, prompt=r.prompt,
+            max_new_tokens=r.max_new_tokens, greedy=r.greedy, seed=r.seed,
+            arrival_time=r.arrival_time,
+        )
+        for r in trace
+    ]
+
+
+def run(
+    arch: str = "gemma-2b",
+    *,
+    reduced: bool = True,
+    n_requests: int = 64,
+    max_slots: int = 8,
+    min_prompt: int = 4,
+    max_prompt: int = 16,
+    min_gen: int = 2,
+    max_gen: int = 128,
+    rate: float = 500.0,
+    page_size: int = 16,
+    prefill_chunk: int = 16,
+    decode_quantum: int = 16,
+    passes: int = 3,
+    seed: int = 0,
+) -> dict:
+    """The default trace is chat-shaped: short prompts (4..16) and
+    heavy-tailed generations (75% short, tail to ``max_gen``) — the regime
+    where lockstep drain waste dominates: a static batch decodes its *max*
+    generation length for every row, so one tail request holds all slots
+    hostage.  ``passes``: both servers serve the trace best-of-N (single
+    passes on a reduced model are tens of milliseconds and swing with
+    scheduler noise, cf. serving_throughput)."""
+    cfg = get_arch(arch, reduced=reduced)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    trace = make_trace(
+        cfg, n_requests, min_prompt=min_prompt, max_prompt=max_prompt,
+        min_gen=min_gen, max_gen=max_gen, rate=rate, seed=seed,
+    )
+
+    # --- pre-warm both servers (every jit variant compiled untimed) ---
+    static = StaticServer(cfg, params, max_slots, max_prompt, max_gen)
+    buckets = set()
+    for lo in range(0, len(trace), max_slots):
+        group = trace[lo : lo + max_slots]
+        buckets.add(_bucket(max(r.max_new_tokens for r in group), max_gen))
+    static.warmup(buckets)
+    ecfg = EngineConfig(
+        max_slots=max_slots, page_size=page_size,
+        max_seq_len=max_prompt + max_gen, prefill_chunk=prefill_chunk,
+        decode_quantum=decode_quantum,
+    )
+    eng = Engine(cfg, params, ecfg)
+    eng.prewarm()
+
+    # --- timed passes, interleaved so both servers sample the same machine
+    # conditions (the reduced model serves a trace in ~100 ms; background
+    # load drifting between two separate measurement phases would skew the
+    # ratio more than anything either server does) ---
+    rs, re = None, None
+    for p in range(passes):
+        cand = static.run(_retrace(trace, 100 + p))
+        if rs is None or cand["wall_s"] < rs["wall_s"]:
+            rs = cand
+        stats0 = dict(eng.stats)
+        t0 = time.perf_counter()
+        results = eng.run(_retrace(trace, p))
+        wall = time.perf_counter() - t0
+        useful = sum(len(r.tokens) for r in results)
+        lat = [r.latency for r in results]
+        cand = {
+            "tok_s": useful / wall,
+            "wall_s": wall,
+            "p50_latency_ms": 1e3 * _pct(lat, 50),
+            "p95_latency_ms": 1e3 * _pct(lat, 95),
+            # per-PASS deltas (the engine accumulates stats across passes)
+            "decode_dispatches": eng.stats["decode_dispatches"] - stats0["decode_dispatches"],
+            "prefill_dispatches": eng.stats["prefill_dispatches"] - stats0["prefill_dispatches"],
+            "tokens_overrun": eng.stats["tokens_overrun"] - stats0["tokens_overrun"],
+        }
+        if re is None or cand["wall_s"] < re["wall_s"]:
+            re = cand
+    re["compiled_variants"] = len(eng._shapes_seen)
+
+    return {
+        "arch": arch,
+        "reduced": reduced,
+        "backend": jax.default_backend(),
+        "trace": {
+            "n_requests": n_requests, "rate_req_s": rate,
+            "prompt_len": [min_prompt, max_prompt], "gen_len": [min_gen, max_gen],
+            "total_tokens": sum(r.max_new_tokens for r in trace),
+        },
+        "max_slots": max_slots,
+        "engine_config": {
+            "page_size": page_size, "prefill_chunk": prefill_chunk,
+            "decode_quantum": decode_quantum,
+        },
+        "static": rs,
+        "engine": re,
+        "speedup_tok_s": re["tok_s"] / max(rs["tok_s"], 1e-9),
+        "p50_latency_ratio": rs["p50_latency_ms"] / max(re["p50_latency_ms"], 1e-9),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--full-size", action="store_true", help="no --reduced config")
+    ap.add_argument("--requests", type=int, default=64)
+    ap.add_argument("--slots", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=500.0)
+    ap.add_argument("--quick", action="store_true", help="CI smoke shapes")
+    ap.add_argument(
+        "--check", action="store_true",
+        help="exit non-zero if engine tok/s regresses below the static "
+             "baseline at equal load (CI gate)",
+    )
+    ap.add_argument(
+        "--check-threshold", type=float, default=0.9,
+        help="minimum engine/static tok/s ratio for --check; the default "
+             "leaves a 10%% noise margin for shared CI runners (quick-mode "
+             "passes are ~100 ms of wall time)",
+    )
+    args = ap.parse_args()
+
+    kw = dict(n_requests=args.requests, max_slots=args.slots, rate=args.rate)
+    if args.quick:
+        kw = dict(
+            n_requests=24, max_slots=4, rate=1000.0,
+            max_prompt=12, max_gen=64, prefill_chunk=16, decode_quantum=8,
+            passes=2,
+        )
+
+    banner("Engine throughput — continuous batching vs static lockstep")
+    res = run(args.arch, reduced=not args.full_size, **kw)
+    for name in ("static", "engine"):
+        r = res[name]
+        print(
+            f"  {name:8s} {r['tok_s']:9.1f} tok/s   "
+            f"p50 {r['p50_latency_ms']:8.1f} ms   p95 {r['p95_latency_ms']:8.1f} ms"
+        )
+    print(f"  speedup: {res['speedup_tok_s']:.2f}x tok/s, "
+          f"{res['p50_latency_ratio']:.2f}x lower p50 latency "
+          f"({res['engine']['compiled_variants']} compiled engine variants)")
+    save_json("BENCH_engine", res)
+    if args.check and res["speedup_tok_s"] < args.check_threshold:
+        print(
+            f"  CHECK FAILED: engine/static tok/s {res['speedup_tok_s']:.2f} "
+            f"< {args.check_threshold}",
+            file=sys.stderr,
+        )
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ import time
 
 from benchmarks import (
     accuracy_e2e,
+    engine_throughput,
     fig5_sws_single,
     fig6_strides,
     fig7_greedy,
@@ -140,6 +141,28 @@ def main() -> None:
         "packed_over_int8_tok_s": rserve["packed_over_int8_tok_s"],
         "int8_over_packed_bytes": tr["int8_over_packed"],
         "token_agreement_vs_dense": rserve["token_agreement_vs_dense"],
+    }
+
+    banner("Engine throughput — continuous batching vs static lockstep")
+    reng = engine_throughput.run(
+        n_requests=32 if not args.full else 64,
+        passes=2 if not args.full else 3,
+    )
+    print(f"  {'':10s} {'tok/s':>10s} {'p50 ms':>9s} {'p95 ms':>9s}")
+    for name in ("static", "engine"):
+        r = reng[name]
+        print(f"  {name:10s} {r['tok_s']:10.1f} {r['p50_latency_ms']:9.1f} "
+              f"{r['p95_latency_ms']:9.1f}")
+    print(f"  continuous batching: {reng['speedup_tok_s']:.2f}x tok/s, "
+          f"{reng['p50_latency_ratio']:.2f}x lower p50 latency "
+          f"({reng['trace']['n_requests']} requests, "
+          f"{reng['engine']['compiled_variants']} compiled variants)")
+    save_json("BENCH_engine", reng)
+    summary["engine"] = {
+        "static_tok_s": reng["static"]["tok_s"],
+        "engine_tok_s": reng["engine"]["tok_s"],
+        "speedup_tok_s": reng["speedup_tok_s"],
+        "p50_latency_ratio": reng["p50_latency_ratio"],
     }
 
     banner("Redeploy delta (training-time integration, beyond-paper)")

@@ -30,7 +30,7 @@ NEG_INF = -1e30
 
 
 def _kernel(
-    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+    q_ref, k_ref, v_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref,
     *, kind: str, window: Optional[int], q_offset: int, bq: int, bk: int,
     n_k: int, sk_valid: int, scale: float,
 ):
@@ -54,7 +54,9 @@ def _kernel(
 
         q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        mask = k_pos < sk_valid
+        # static padding tail AND the traced per-dispatch valid length (paged
+        # serving: the gathered cache view's tail holds stale pool bytes)
+        mask = jnp.logical_and(k_pos < sk_valid, k_pos < kvl_ref[0, 0])
         if kind != "bidir":
             mask = jnp.logical_and(mask, k_pos <= q_pos)
             if kind == "swa":
@@ -78,6 +80,9 @@ def _kernel(
         # the last query position (and for SWA, iff it is entirely behind the
         # window of the last query row).
         live = k_lo <= q_lo + bq - 1
+        # tiles entirely past the traced valid length are dead too (the cache
+        # view's unwritten tail in paged serving)
+        live = jnp.logical_and(live, k_lo < kvl_ref[0, 0])
         if kind == "swa":
             live = jnp.logical_and(live, k_lo + bk - 1 > q_lo - window)
         pl.when(live)(body)
@@ -96,6 +101,7 @@ def flash_attention_kernel(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
+    kv_valid_len: Optional[jax.Array] = None,
     *,
     kind: str = "causal",
     window: Optional[int] = None,
@@ -108,7 +114,10 @@ def flash_attention_kernel(
     """Raw kernel entry: Sq % bq == 0 and Sk % bk == 0 required.
 
     q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] -> [B, Hq, Sq, D].
-    ``sk_valid`` masks key positions >= it (padding tail).
+    ``sk_valid`` masks key positions >= it (static padding tail);
+    ``kv_valid_len`` is its *traced* counterpart — a scalar that varies per
+    dispatch without recompiling (continuous-batching prefill chunks attend
+    to a fixed-shape cache view whose valid length grows per chunk).
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
@@ -116,6 +125,9 @@ def flash_attention_kernel(
     assert hq == hkv * g, (hq, hkv)
     n_q, n_k = cdiv(sq, bq), cdiv(sk, bk)
     sk_valid = sk if sk_valid is None else sk_valid
+    if kv_valid_len is None:
+        kv_valid_len = jnp.int32(sk)
+    kvl = jnp.reshape(jnp.asarray(kv_valid_len, jnp.int32), (1, 1))
     grid = (b, hq, n_q, n_k)
 
     kern = functools.partial(
@@ -130,6 +142,9 @@ def flash_attention_kernel(
             pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
             pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
             pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+            pl.BlockSpec(
+                (1, 1), lambda ib, ih, iq, ik: (0, 0), memory_space=pltpu.SMEM
+            ),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
@@ -139,4 +154,4 @@ def flash_attention_kernel(
             pltpu.VMEM((bq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(q, k, v, kvl)

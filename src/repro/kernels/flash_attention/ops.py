@@ -17,6 +17,7 @@ def flash_attention(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
+    kv_valid_len: Optional[jax.Array] = None,
     *,
     kind: str = "causal",
     window: Optional[int] = None,
@@ -25,7 +26,11 @@ def flash_attention(
     bk: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """See ref.py for the contract.  Arbitrary Sq/Sk; pads + slices back."""
+    """See ref.py for the contract.  Arbitrary Sq/Sk; pads + slices back.
+
+    ``kv_valid_len``: optional traced scalar — key positions >= it are
+    masked without recompiling (paged cache-view tail in engine prefill).
+    """
     b, hq, sq, d = q.shape
     sk = k.shape[2]
     interp = default_interpret(interpret)
@@ -35,7 +40,7 @@ def flash_attention(
     kp = pad_axis_to(k, 2, round_up(sk, bk_))
     vp = pad_axis_to(v, 2, round_up(sk, bk_))
     out = flash_attention_kernel(
-        qp, kp, vp,
+        qp, kp, vp, kv_valid_len,
         kind=kind, window=window, q_offset=q_offset,
         bq=bq_, bk=bk_, sk_valid=sk, interpret=interp,
     )

@@ -19,6 +19,7 @@ def flash_attention(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
+    kv_valid_len: Optional[jax.Array] = None,
     *,
     kind: str = "causal",
     window: Optional[int] = None,
@@ -40,6 +41,8 @@ def flash_attention(
         if kind == "swa":
             assert window is not None
             mask = jnp.logical_and(mask, kp > qp - window)
+    if kv_valid_len is not None:
+        mask = jnp.logical_and(mask, kp < kv_valid_len)
     scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))

@@ -1,0 +1,472 @@
+"""Continuous-batching CIM serving engine: paged KV + slot scheduler.
+
+Serves heterogeneous, streaming requests from one shared paged KV pool
+(``launch.paged_cache``) through shape-bucketed jitted dispatches:
+
+  * **Admission** — waiting requests enter freed decode slots mid-flight as
+    soon as a slot and enough KV blocks are available (FIFO).
+  * **Chunked prefill** — prompts are processed ``prefill_chunk`` tokens at
+    a time; ONE batched dispatch per cycle advances every prefilling slot a
+    chunk, so a long prompt never stalls decoding for more than one chunk
+    and admissions share dispatches.
+  * **Decode quantum** — all decoding slots advance several tokens in ONE
+    donated-pool ``lax.scan`` dispatch (``steps.make_paged_decode_loop``),
+    masked per-slot: every row has its own position, block-table row, PRNG
+    key, and greedy flag.  The quantum length is chosen per dispatch by
+    useful-tokens-per-cost from two compiled lengths.
+  * **Retirement** — EOS / max-new-tokens ends a request; its blocks return
+    to the free list and its slot admits the next queued request.
+
+Shape bucketing keeps the dispatch count compile-friendly: row counts and
+page counts are padded to powers of two (dummy rows write to the reserved
+dummy page), so the number of compiled variants is O(log(max_slots) *
+log(max_pages)) rather than one per ragged shape.
+
+Token parity: each request's stream is bit-identical to a solo
+``launch.serve.generate`` run with the same PRNG seed — all three
+materializations (dense / packed / planes_int8) flow through
+``models.layers.linear`` unchanged (pinned in tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.launch import steps
+from repro.launch.paged_cache import PagedCacheConfig, PagedKVCache
+from repro.models import api
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``arrival_time`` is seconds relative to
+    ``Engine.run`` start (0.0 = available immediately)."""
+
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int
+    greedy: bool = True
+    seed: int = 0
+    eos_id: Optional[int] = None
+    arrival_time: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        if self.prompt.size == 0:
+            raise ValueError("empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+
+
+@dataclasses.dataclass
+class RequestResult:
+    rid: int
+    tokens: list[int]
+    t_arrival: float
+    t_admitted: float
+    t_first_token: float
+    t_done: float
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first_token - self.t_arrival
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_slots: int = 8
+    page_size: int = 16
+    max_seq_len: int = 512  # upper bound on prompt + generated per request
+    prefill_chunk: int = 32  # max prompt tokens per prefill dispatch
+    decode_quantum: int = 8  # decode steps per dispatch
+    num_blocks: Optional[int] = None  # default: dummy + max_slots * max_pages
+
+
+_WAITING, _PREFILL, _DECODE = "waiting", "prefill", "decode"
+
+
+class _Slot:
+    """Host state of one occupied decode slot."""
+
+    def __init__(self, req: Request, t_admitted: float):
+        self.req = req
+        self.state = _PREFILL
+        self.prefill_done = 0  # prompt tokens already written to the pool
+        self.pos = 0  # next decode write position (= tokens in cache)
+        self.generated: list[int] = []
+        self.tok_next = -1  # last emitted token (next decode input)
+        self.pf_deferred = False  # lone-prefill batching: deferred one cycle
+        self.key = np.asarray(jax.random.PRNGKey(req.seed))
+        self.t_admitted = t_admitted
+        self.t_first_token = 0.0
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n, clamped to cap — the one bucketing rule
+    for dispatch rows AND page counts, so the prewarm grid generators below
+    can never drift from the shapes the scheduler actually dispatches."""
+    b = 1
+    while b < n and b < cap:
+        b *= 2
+    return min(b, cap)
+
+
+def _buckets_upto(cap: int) -> list[int]:
+    """Every value ``_bucket`` can return for caps up to ``cap``."""
+    out, b = [], 1
+    while b < cap:
+        out.append(b)
+        b *= 2
+    out.append(cap)
+    return out
+
+
+class Engine:
+    """Continuous-batching serving engine over a paged KV pool.
+
+    ``params`` may be any ``deploy_params`` materialization (or plain fp
+    weights); they are prepared once (``steps.prepare_serving_params``) so
+    non-TPU backends decompress packed operands a single time per deployment.
+    """
+
+    def __init__(self, cfg: ArchConfig, params: Any, ecfg: EngineConfig = EngineConfig()):
+        if not api.supports_paged(cfg):
+            raise NotImplementedError(
+                f"{cfg.name}: the paged engine serves pure-attention decoder stacks"
+            )
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.params = steps.prepare_serving_params(params)
+
+        # a slot's dispatches may address up to one decode quantum (decode
+        # overrun) or one padded prefill chunk past max_seq_len; writes
+        # beyond its allocation land in the dummy page, but the bucketed
+        # page view must be wide enough to address them
+        overhang = max(ecfg.decode_quantum, ecfg.prefill_chunk)
+        max_pages = -(-(ecfg.max_seq_len + overhang) // ecfg.page_size)
+        num_blocks = ecfg.num_blocks or 1 + ecfg.max_slots * max_pages
+        self.pcfg = PagedCacheConfig(
+            page_size=ecfg.page_size,
+            num_blocks=num_blocks,
+            max_slots=ecfg.max_slots,
+            max_pages=max_pages,
+        )
+        self.kv = PagedKVCache(self.pcfg)
+        self.pools = api.init_paged_pools(cfg, self.pcfg.num_tokens)
+
+        donate = steps.cache_donation()
+        # two compiled quantum lengths: the full quantum for steady decoding
+        # and a short one for when most live rows sit near retirement —
+        # heavy-tailed traffic would otherwise overrun every short request
+        # by most of a full quantum (or, with a min-remaining policy, drag
+        # every long row down to one-token dispatches)
+        self._quanta = sorted({max(2, ecfg.decode_quantum // 4), ecfg.decode_quantum})
+        self._decode_loops = {
+            q: jax.jit(
+                steps.make_paged_decode_loop(cfg, q, ecfg.page_size),
+                donate_argnums=donate,
+            )
+            for q in self._quanta
+        }
+        self._prefill_step = jax.jit(
+            steps.make_prefill_chunk_step(cfg, ecfg.page_size),
+            donate_argnums=donate,
+        )
+
+        self.waiting: deque[Request] = deque()
+        self.slots: list[Optional[_Slot]] = [None] * ecfg.max_slots
+        self.results: dict[int, RequestResult] = {}
+        self._shapes_seen: set[tuple] = set()
+        self.stats = {
+            "decode_dispatches": 0,
+            "prefill_dispatches": 0,
+            "decode_rows_live": 0,
+            "decode_rows_padded": 0,
+            "tokens_emitted": 0,
+            "tokens_overrun": 0,
+        }
+
+    # -- public API ---------------------------------------------------------
+
+    def _row_buckets(self) -> list[int]:
+        return _buckets_upto(self.ecfg.max_slots)
+
+    def _page_buckets(self) -> list[int]:
+        return _buckets_upto(self.pcfg.max_pages)
+
+    def prewarm(self) -> int:
+        """Compile every bucketed dispatch variant up front with dummy
+        dispatches aimed at the dummy page (slot state untouched; the pool
+        only absorbs garbage into block 0).  Without this, a bucket first
+        seen mid-serve pays its XLA compile inside a request's latency.
+        Returns the number of variants compiled."""
+        n = 0
+        for q, loop in self._decode_loops.items():
+            for rows in self._row_buckets():
+                for pages in self._page_buckets():
+                    _, self.pools, _ = loop(
+                        self.params, self.pools,
+                        np.zeros((rows, pages), np.int32),
+                        np.zeros((rows, 3), np.int32),
+                        np.zeros((rows, 2), np.uint32),
+                    )
+                    self._shapes_seen.add(("decode", q, rows, pages))
+                    n += 1
+        chunk = self.ecfg.prefill_chunk
+        min_pf_pages = -(-chunk // self.ecfg.page_size)  # view must fit a chunk
+        for rows in self._row_buckets():
+            for pages in self._page_buckets():
+                if pages < min_pf_pages:
+                    continue
+                meta = np.zeros((rows, 4), np.int32)
+                meta[:, 1] = 1
+                _, _, self.pools = self._prefill_step(
+                    self.params, self.pools,
+                    np.zeros((rows, pages), np.int32),
+                    np.zeros((rows, chunk), np.int32),
+                    meta,
+                    np.zeros((rows, 2), np.uint32),
+                )
+                self._shapes_seen.add(("prefill", rows, pages))
+                n += 1
+        jax.block_until_ready(jax.tree.leaves(self.pools))
+        return n
+
+    def submit(self, req: Request) -> None:
+        if req.prompt.size + req.max_new_tokens > self.ecfg.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new "
+                f"{req.prompt.size + req.max_new_tokens} > max_seq_len "
+                f"{self.ecfg.max_seq_len}"
+            )
+        self.waiting.append(req)
+
+    def step(self, now: float) -> bool:
+        """One scheduler cycle: admit, one prefill chunk per prefilling slot,
+        one decode quantum over all decoding slots.  Returns True if any
+        dispatch ran.
+
+        Advancing *every* prefilling slot one chunk per cycle fills decode
+        slots as fast as possible (denser decode batches) while still
+        bounding the decode stall to max_slots chunk dispatches — the
+        chunking exists so a long prompt can't monopolize the engine for
+        its whole prefill."""
+        self._admit(now)
+        did = self._prefill_round(now)
+        did = self._decode(now) or did
+        return did
+
+    def run(self, requests: list[Request]) -> list[RequestResult]:
+        """Serve ``requests`` to completion (wall-clock arrival times).
+
+        Admission is FIFO in *arrival* order — the queue is sorted by
+        ``arrival_time`` so a late-submitted early arrival can't wedge
+        behind a not-yet-arrived head (``_admit`` only inspects the head).
+        """
+        for r in sorted(requests, key=lambda r: r.arrival_time):
+            self.submit(r)
+        t0 = time.perf_counter()
+        while self.waiting or any(s is not None for s in self.slots):
+            now = time.perf_counter() - t0
+            if not self.step(now):
+                if any(s is not None for s in self.slots):
+                    continue  # admission blocked on blocks about to free
+                nxt = min(r.arrival_time for r in self.waiting)
+                if nxt <= now:
+                    raise RuntimeError(
+                        "scheduler stalled: request exceeds pool capacity"
+                    )
+                time.sleep(min(nxt - now, 0.05))
+        self.stats["compiled_variants"] = len(self._shapes_seen)
+        return [self.results[r.rid] for r in requests]
+
+    # -- scheduling ---------------------------------------------------------
+
+    def _admit(self, now: float) -> None:
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            if req.arrival_time > now:
+                break  # FIFO: later arrivals wait behind the head
+            cap = req.prompt.size + req.max_new_tokens + self.ecfg.decode_quantum
+            if not self.kv.ensure_capacity(i, cap):
+                break  # out of blocks until a retirement frees some
+            self.waiting.popleft()
+            self.slots[i] = _Slot(req, now)
+
+    def _retire(self, idx: int, now: float) -> None:
+        slot = self.slots[idx]
+        self.kv.release(idx)
+        self.slots[idx] = None
+        self.results[slot.req.rid] = RequestResult(
+            rid=slot.req.rid,
+            tokens=slot.generated,
+            t_arrival=slot.req.arrival_time,
+            t_admitted=slot.t_admitted,
+            t_first_token=slot.t_first_token,
+            t_done=now,
+        )
+        self.stats["tokens_emitted"] += len(slot.generated)
+
+    def _append_token(self, idx: int, tok: int, now: float) -> bool:
+        """Append one emitted token; True if the request retired."""
+        slot = self.slots[idx]
+        slot.generated.append(tok)
+        req = slot.req
+        if (req.eos_id is not None and tok == req.eos_id) or len(
+            slot.generated
+        ) >= req.max_new_tokens:
+            self._retire(idx, now)
+            return True
+        return False
+
+    # -- prefill ------------------------------------------------------------
+
+    def _prefill_round(self, now: float) -> bool:
+        """ONE batched dispatch advancing every prefilling slot by one chunk
+        (per-row start/kv_len/table — rows are independent requests).  A
+        row's final chunk also samples its first token in-graph."""
+        rows = [
+            i for i, s in enumerate(self.slots)
+            if s is not None and s.state == _PREFILL
+        ]
+        if not rows:
+            return False
+        # lone-prefill batching: with decode busy and more requests queued, a
+        # single fresh admission waits one cycle so the next retirement's
+        # admission can share its dispatch (single-row prefills dominate the
+        # prefill bill in steady state otherwise)
+        if (
+            len(rows) == 1
+            and self.waiting
+            and not self.slots[rows[0]].pf_deferred
+            and sum(
+                1 for s in self.slots if s is not None and s.state == _DECODE
+            ) >= max(2, self.ecfg.max_slots // 2)
+        ):
+            self.slots[rows[0]].pf_deferred = True
+            return False
+        c = self.ecfg.prefill_chunk
+        page = self.ecfg.page_size
+        nb = _bucket(len(rows), self.ecfg.max_slots)
+        c_trues = [
+            min(c, self.slots[i].req.prompt.size - self.slots[i].prefill_done)
+            for i in rows
+        ]
+        # the view must address the full PADDED chunk width [start, start+c):
+        # pad-column write-backs beyond a slot's allocation land in the dummy
+        # page via its dummy table entries, never clamp onto real cells
+        pages = _bucket(
+            max(-(-(self.slots[i].prefill_done + c) // page) for i in rows),
+            self.pcfg.max_pages,
+        )
+        self._shapes_seen.add(("prefill", nb, pages))
+
+        tokens = np.zeros((nb, c), np.int32)
+        table = np.zeros((nb, pages), np.int32)
+        meta = np.zeros((nb, 4), np.int32)
+        meta[:, 1] = 1  # pad rows: kv_len 1 (any valid value)
+        keys = np.zeros((nb, 2), np.uint32)
+        for r, (i, ct) in enumerate(zip(rows, c_trues)):
+            slot = self.slots[i]
+            start = slot.prefill_done
+            tokens[r, :ct] = slot.req.prompt[start : start + ct]
+            table[r] = self.kv.table_rows([i], pages)[0]
+            meta[r] = (start, start + ct, ct - 1, int(slot.req.greedy))
+            keys[r] = slot.key
+
+        toks, keys_out, self.pools = self._prefill_step(
+            self.params, self.pools, table, tokens, meta, keys
+        )
+        self.stats["prefill_dispatches"] += 1
+        done_rows = [
+            (r, i) for r, (i, ct) in enumerate(zip(rows, c_trues))
+            if self.slots[i].prefill_done + ct == self.slots[i].req.prompt.size
+        ]
+        toks_h = np.asarray(toks) if done_rows else None
+        keys_h = np.asarray(keys_out) if done_rows else None
+        for r, (i, ct) in enumerate(zip(rows, c_trues)):
+            slot = self.slots[i]
+            slot.prefill_done += ct
+            if slot.prefill_done < slot.req.prompt.size:
+                continue  # mid-prompt chunk: discard tok, keep the unsplit key
+            # prompt complete: the dispatch sampled the first token in-graph
+            # with the same pick path + PRNG schedule as serve.generate
+            slot.key = keys_h[r]
+            slot.state = _DECODE
+            slot.pos = slot.req.prompt.size
+            slot.tok_next = int(toks_h[r])
+            slot.t_first_token = now
+            self._append_token(i, slot.tok_next, now)
+        return True
+
+    # -- decode -------------------------------------------------------------
+
+    def _decode(self, now: float) -> bool:
+        rows = [i for i, s in enumerate(self.slots) if s is not None and s.state == _DECODE]
+        if not rows:
+            return False
+        # quantum: pick the compiled length with the best useful-tokens-per-
+        # cost.  A row contributes min(q, remaining) useful tokens; cost is
+        # q steps for every row plus a fixed per-dispatch overhead (~2.5
+        # step-equivalents: scheduling, gather/write-back, host sync).
+        # This retires clusters of near-done rows with the short quantum
+        # without dragging long rows down to one-token dispatches.
+        rem = [
+            self.slots[i].req.max_new_tokens - len(self.slots[i].generated)
+            for i in rows
+        ]
+        q = max(
+            self._quanta,
+            key=lambda qq: sum(min(qq, x) for x in rem) / (qq + 2.5),
+        )
+        page = self.ecfg.page_size
+        nb = _bucket(len(rows), self.ecfg.max_slots)
+        pages = _bucket(
+            max(-(-(self.slots[i].pos + q) // page) for i in rows), self.pcfg.max_pages
+        )
+        self._shapes_seen.add(("decode", q, nb, pages))
+
+        table = np.zeros((nb, pages), np.int32)  # pad rows -> dummy page
+        table[: len(rows)] = self.kv.table_rows(rows, pages)
+        state = np.zeros((nb, 3), np.int32)  # [tok, pos, greedy] per row
+        state[:, 2] = 1
+        keys = np.zeros((nb, 2), np.uint32)
+        for r, i in enumerate(rows):
+            s = self.slots[i]
+            state[r] = (s.tok_next, s.pos, int(s.req.greedy))
+            keys[r] = s.key
+
+        toks, self.pools, keys_out = self._decode_loops[q](
+            self.params, self.pools, table, state, keys
+        )
+        toks = np.asarray(toks)
+        keys_out = np.asarray(keys_out)
+        self.stats["decode_dispatches"] += 1
+        self.stats["decode_rows_live"] += len(rows)
+        self.stats["decode_rows_padded"] += nb - len(rows)
+
+        for r, i in enumerate(rows):
+            slot = self.slots[i]
+            retired = False
+            for j in range(q):
+                if self._append_token(i, int(toks[r, j]), now):
+                    retired = True
+                    self.stats["tokens_overrun"] += q - 1 - j
+                    break
+            if not retired:
+                slot.tok_next = int(toks[r, -1])
+                slot.key = keys_out[r]
+                slot.pos += q
+        return True

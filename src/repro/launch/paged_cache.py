@@ -1,0 +1,132 @@
+"""Paged KV cache: fixed-size blocks, per-slot block tables, free-list alloc.
+
+The physical cache is one token-major pool per model segment
+(``models.api.init_paged_pools``): k/v of shape (layers, T, Hkv, hd) with
+T = ``num_blocks * page_size``.  A *block* (page) is ``page_size``
+consecutive pool cells; a decode slot owns an ordered list of blocks — its
+block-table row — mapping logical positions to physical cells:
+
+    flat(pos) = table[slot, pos // page_size] * page_size + pos % page_size
+
+Allocation is a host-side free list.  Block 0 is reserved as the *dummy*
+page: padded dispatch rows and prompt-padding tokens route their writes
+there, so a bucketed dispatch never touches a live slot's cells.  Freeing a
+retired request returns its blocks for mid-flight admission of queued
+requests — the engine's continuous-batching lever.
+
+Everything here is host bookkeeping (numpy); the jitted dispatches receive
+plain int32 index arrays derived from the tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+DUMMY_BLOCK = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedCacheConfig:
+    """Shape policy for the paged pool.
+
+    ``num_blocks`` includes the reserved dummy block; a slot may own at most
+    ``max_pages`` blocks (ceil(max_seq_len / page_size) for the engine).
+    """
+
+    page_size: int = 16
+    num_blocks: int = 257
+    max_slots: int = 8
+    max_pages: int = 32
+
+    @property
+    def num_tokens(self) -> int:
+        return self.num_blocks * self.page_size
+
+    @property
+    def usable_blocks(self) -> int:
+        return self.num_blocks - 1  # block 0 is the dummy page
+
+
+class BlockAllocator:
+    """LIFO free list over physical blocks 1..num_blocks-1."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need at least one usable block beyond the dummy")
+        self._free = list(range(num_blocks - 1, 0, -1))  # pop() yields 1, 2, ...
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int] | None:
+        """n blocks, or None (allocation is all-or-nothing) if exhausted."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            if b == DUMMY_BLOCK:
+                raise ValueError("freeing the reserved dummy block")
+        self._free.extend(blocks)
+
+
+class PagedKVCache:
+    """Block tables + allocator for ``max_slots`` concurrent decode slots.
+
+    The device pools themselves are owned by the engine (they thread through
+    the donated dispatches); this class tracks which physical cells each
+    slot's logical sequence occupies.
+    """
+
+    def __init__(self, cfg: PagedCacheConfig):
+        self.cfg = cfg
+        self.allocator = BlockAllocator(cfg.num_blocks)
+        # rows padded with the dummy block: gathers from unallocated pages
+        # read garbage that the attention mask kills
+        self.tables = np.full((cfg.max_slots, cfg.max_pages), DUMMY_BLOCK, np.int32)
+        self.n_pages = np.zeros((cfg.max_slots,), np.int32)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def ensure_capacity(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot`` to hold ``n_tokens`` cells; False if out of blocks
+        (the caller keeps the request queued until a retirement frees some)."""
+        need = -(-n_tokens // self.cfg.page_size)
+        if need > self.cfg.max_pages:
+            raise ValueError(
+                f"request needs {need} pages > max_pages={self.cfg.max_pages}"
+            )
+        have = int(self.n_pages[slot])
+        if need <= have:
+            return True
+        got = self.allocator.alloc(need - have)
+        if got is None:
+            return False
+        self.tables[slot, have:need] = got
+        self.n_pages[slot] = need
+        return True
+
+    def release(self, slot: int) -> None:
+        """Return a retired slot's blocks to the free list."""
+        n = int(self.n_pages[slot])
+        if n:
+            self.allocator.free(self.tables[slot, :n].tolist())
+        self.tables[slot, :] = DUMMY_BLOCK
+        self.n_pages[slot] = 0
+
+    # -- index derivation for dispatches -----------------------------------
+
+    def table_rows(self, slots: list[int], n_pages: int) -> np.ndarray:
+        """(len(slots), n_pages) block-table slice for a bucketed dispatch;
+        unallocated entries are the dummy block."""
+        return self.tables[np.asarray(slots, np.int64), :n_pages].astype(np.int32)
+
+    def flat_idx(self, slot: int, pos: int) -> int:
+        """Physical pool cell of logical position ``pos`` in ``slot``
+        (debug/test helper; dispatches derive cells from the table rows)."""
+        page = self.cfg.page_size
+        blk = int(self.tables[slot, pos // page])
+        return blk * page + pos % page

@@ -69,6 +69,22 @@ def _serving_params(params):
     return params if on_tpu() else simulator.densify_packed(params)
 
 
+def prepare_serving_params(params):
+    """Once-per-deployment host-side materialization of serving params.
+
+    Same backend policy as ``_serving_params``, but executed *eagerly before
+    any dispatch is built*: on non-TPU backends every packed operand dict is
+    decompressed to dense achieved weights exactly once, and the resulting
+    pytree is reused by every jitted variant (warmup + timed runs, every
+    engine bucket).  Without this hoist the densify ops are traced into each
+    dispatch and re-executed on device per call.  ``_serving_params`` stays
+    inside the step functions as the TPU packed-flow policy (it is a cheap
+    trace-time no-op on an already-prepared tree), so step makers remain
+    correct for callers that skip preparation.
+    """
+    return _serving_params(params)
+
+
 def make_prefill_step(cfg: ArchConfig):
     def prefill_step(params, batch):
         return api.prefill(_serving_params(params), cfg, batch)
@@ -128,3 +144,85 @@ def make_decode_loop(cfg: ArchConfig, n_steps: int, *, greedy: bool = True):
         return jnp.swapaxes(toks[..., 0], 0, 1), cache
 
     return decode_loop
+
+
+def make_paged_decode_loop(cfg: ArchConfig, n_steps: int, page_size: int):
+    """Ragged continuous-batching decode quantum as ONE ``lax.scan`` dispatch.
+
+    Returns decode_loop(params, pools, table (B, P) i32, state (B, 3) i32
+    rows = [tok, pos, greedy], keys (B, 2) u32) ->
+    (tokens (B, n_steps) i32, pools, keys (B, 2)).
+
+    Same donated-cache scan structure as :func:`make_decode_loop`, but every
+    slot carries its own position, PRNG key, and greedy flag: the KV write
+    and attention mask are per-slot (paged pool + block table), and sampling
+    splits each slot's key independently — so each row's token stream is
+    bit-identical to a solo ``launch.serve.generate`` run of that request
+    (rows are padded/retired independently; the host discards post-EOS
+    tokens).  The block ``table`` must already cover positions up to
+    ``pos + n_steps`` for every live row; padded rows point at the dummy
+    page.
+    """
+
+    def decode_loop(params, pools, table, state, keys):
+        params = _serving_params(params)  # hoisted above the token scan
+        tok0 = state[:, 0:1]
+        pos0 = state[:, 1]
+        greedy = state[:, 2].astype(bool)
+        # gather every slot's pages ONCE; the scan then runs the ordinary
+        # contiguous-cache decode step (vector positions) against the view
+        caches = api.paged_view(cfg, pools, table, page_size)
+
+        def body(carry, _):
+            caches, tok, keys, pos = carry
+            logits, caches = api.decode_step(params, cfg, caches, tok, pos)
+            greedy_tok = jnp.argmax(logits[:, -1], axis=-1)
+            split = jax.vmap(jax.random.split)(keys)  # (B, 2, 2)
+            keys_new, subs = split[:, 0], split[:, 1]
+            sampled = jax.vmap(jax.random.categorical)(subs, logits[:, -1])
+            nxt = jnp.where(greedy, greedy_tok, sampled).astype(jnp.int32)[:, None]
+            # greedy rows never consume randomness (matching the solo loop's
+            # schedule); their key lane is dead state either way
+            keys_new = jnp.where(greedy[:, None], keys, keys_new)
+            return (caches, nxt, keys_new, pos + 1), nxt[:, 0]
+
+        (caches, _, keys, _), toks = jax.lax.scan(
+            body, (caches, tok0, keys, pos0), None, length=n_steps
+        )
+        # write back only the quantum's new cells, one scatter per dispatch
+        pools = api.paged_writeback(cfg, pools, caches, table, pos0, n_steps, page_size)
+        return jnp.swapaxes(toks, 0, 1), pools, keys
+
+    return decode_loop
+
+
+def make_prefill_chunk_step(cfg: ArchConfig, page_size: int):
+    """One chunked-prefill dispatch, B requests wide, first-token sampling
+    fused in.
+
+    (params, pools, table (B, P), tokens (B, C), meta (B, 4) i32 rows =
+    [start, kv_len, last_idx, greedy], keys (B, 2) u32) ->
+    (tok (B,) i32, keys_out (B, 2), pools).
+
+    ``meta`` is traced, so one compiled variant serves every chunk of a
+    given (B, C, P) bucket; ``tok[r]`` is only meaningful on row r's final
+    chunk (earlier chunks sample from a mid-prompt position and the caller
+    ignores them — a row's key is only adopted when the caller accepts the
+    token, keeping the PRNG schedule identical to the solo pick)."""
+
+    def chunk_step(params, pools, table, tokens, meta, keys):
+        params = _serving_params(params)
+        start, kv_len, last_idx = meta[:, 0], meta[:, 1], meta[:, 2]
+        greedy = meta[:, 3].astype(bool)
+        logits, pools = api.prefill_chunk(
+            params, cfg, pools, table, tokens, start, kv_len, last_idx, page_size
+        )
+        greedy_tok = jnp.argmax(logits[:, -1], axis=-1)
+        split = jax.vmap(jax.random.split)(keys)
+        keys_new, subs = split[:, 0], split[:, 1]
+        sampled = jax.vmap(jax.random.categorical)(subs, logits[:, -1])
+        tok = jnp.where(greedy, greedy_tok, sampled).astype(jnp.int32)
+        keys_out = jnp.where(greedy[:, None], keys, keys_new)
+        return tok, keys_out, pools
+
+    return chunk_step

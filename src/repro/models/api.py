@@ -37,6 +37,42 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=None, *, src_len
     return transformer.init_cache(cfg, batch, seq_len + cfg.n_meta_tokens, dtype)
 
 
+# --- paged KV serving (continuous-batching engine) -------------------------
+
+def supports_paged(cfg: ArchConfig) -> bool:
+    """True iff the arch can serve through the paged-KV engine."""
+    return not cfg.encdec and transformer.supports_paged(cfg)
+
+
+def init_paged_pools(cfg: ArchConfig, num_tokens: int, dtype=None):
+    """Token-major physical KV pools (``num_tokens`` = num_blocks * page)."""
+    if cfg.encdec:
+        raise NotImplementedError("paged KV serving: decoder-only models")
+    return transformer.init_paged_pools(cfg, num_tokens, dtype)
+
+
+def paged_view(cfg: ArchConfig, pools, table, page_size: int):
+    """Contiguous per-slot cache views gathered from the paged pools."""
+    return transformer.paged_view(cfg, pools, table, page_size)
+
+
+def paged_writeback(cfg: ArchConfig, pools, caches, table, pos0, n_tokens: int, page_size: int):
+    """Scatter a dispatch's newly written cache cells back into the pools."""
+    return transformer.paged_writeback(cfg, pools, caches, table, pos0, n_tokens, page_size)
+
+
+def decode_step_paged(params, cfg: ArchConfig, pools, table, token, pos, page_size):
+    """Ragged decode: one token per slot at per-slot positions ``pos`` (B,)."""
+    return transformer.decode_step_paged(params, cfg, pools, table, token, pos, page_size)
+
+
+def prefill_chunk(params, cfg: ArchConfig, pools, table, tokens, start, kv_len, last_idx, page_size):
+    """One prompt-chunk dispatch (B requests wide) through the paged pools."""
+    return transformer.prefill_chunk(
+        params, cfg, pools, table, tokens, start, kv_len, last_idx, page_size
+    )
+
+
 def merge_prefill_cache(cfg: ArchConfig, full_cache, pf_cache):
     """Write prefill caches (prompt length) into a zero full-length cache.
 

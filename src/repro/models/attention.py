@@ -60,11 +60,12 @@ def attention(
 def _block_mask(
     q_pos: jax.Array, k_pos: jax.Array, kind: str, window: Optional[int]
 ) -> jax.Array:
-    """(Sq, bk) boolean visibility mask from absolute positions."""
-    qp = q_pos[:, None]
-    kp = k_pos[None, :]
+    """(..., Sq, bk) boolean visibility mask from absolute positions;
+    ``q_pos`` is (Sq,) or (B, Sq) for per-row offsets."""
+    qp = q_pos[..., None]
+    kp = k_pos
     if kind == "bidir":
-        return jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=jnp.bool_)
+        return jnp.ones(q_pos.shape + (k_pos.shape[0],), dtype=jnp.bool_)
     mask = kp <= qp
     if kind == "swa":
         assert window is not None
@@ -158,8 +159,11 @@ def blockwise_attention(
     """Online-softmax attention.
 
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0.
-    q_offset: absolute position of q[0] (prefill continuation / decode).
-    kv_valid_len: optional scalar — positions >= this are masked (cache tail).
+    q_offset: absolute position of q[0] (prefill continuation / decode);
+      scalar, or a (B,) vector of per-row offsets (batched ragged prefill
+      chunks — every row of the batch sits at its own prompt position).
+    kv_valid_len: optional scalar or (B,) vector — positions >= it are
+      masked (cache tail / per-slot valid lengths).
     skip_masked_blocks: when True, fully-masked key blocks contribute via a
       zero multiplier (their matmuls still run under scan; the *compile-time
       skip* variant is a hillclimb lever — see EXPERIMENTS.md §Perf).
@@ -179,7 +183,11 @@ def blockwise_attention(
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
     qg = q.reshape(b, hkv, g, sq, d)
-    q_pos = jnp.asarray(q_offset) + jnp.arange(sq)
+    # (Sq,) shared positions, or (B, Sq) per-row; masks broadcast over the
+    # batch axis either way (the scalar path is bit-identical to before)
+    off = jnp.asarray(q_offset)
+    q_pos = (off[..., None] + jnp.arange(sq)) if off.ndim else off + jnp.arange(sq)
+    vl = None if kv_valid_len is None else jnp.reshape(jnp.asarray(kv_valid_len), (-1, 1))
 
     def step(carry, kj):
         m, l, acc = carry
@@ -189,12 +197,14 @@ def blockwise_attention(
             "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), kb.astype(jnp.float32)
         ) * scale
         k_pos = kj * block_k + jnp.arange(block_k)
-        mask = _block_mask(q_pos, k_pos, kind, window)
+        mask = _block_mask(q_pos, k_pos, kind, window)  # (Sq, bk) or (B, Sq, bk)
         valid = k_pos < sk if not pad else k_pos < (sk)
-        if kv_valid_len is not None:
-            valid = jnp.logical_and(valid, k_pos < kv_valid_len)
-        mask = jnp.logical_and(mask, valid[None, :])
-        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        if vl is not None:
+            valid = jnp.logical_and(valid, k_pos[None, :] < vl)  # (1|B, bk)
+        mask = jnp.logical_and(mask, valid[..., None, :])
+        if mask.ndim == 2:
+            mask = mask[None]
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.exp(s - m_new[..., None])
@@ -224,7 +234,9 @@ def decode_attention(
     """Single-step attention against a (possibly partially filled) KV cache.
 
     q: (B, Hq, 1, D); caches: (B, Hkv, S, D); valid_len: scalar int — number
-    of valid cache positions (the new token's KV must already be written).
+    of valid cache positions (the new token's KV must already be written) —
+    or a (B,) vector of per-row lengths (ragged continuous-batching decode:
+    every slot sits at its own position in its own sequence).
     """
     b, hq, _, d = q.shape
     _, hkv, s, _ = k_cache.shape
@@ -235,10 +247,13 @@ def decode_attention(
         "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k_cache.astype(jnp.float32)
     ) * scale
     pos = jnp.arange(s)
-    mask = pos < valid_len
+    # scalar valid_len -> (1, S) mask shared by the batch (bit-identical to
+    # the historical path); vector -> (B, S) per-slot mask
+    vl = jnp.reshape(jnp.asarray(valid_len), (-1, 1))
+    mask = pos[None, :] < vl
     if window is not None:
-        mask = jnp.logical_and(mask, pos >= valid_len - window)
-    scores = jnp.where(mask[None, None, None, None, :], scores, NEG_INF)
+        mask = jnp.logical_and(mask, pos[None, :] >= vl - window)
+    scores = jnp.where(mask[:, None, None, None, :], scores, NEG_INF)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v_cache.astype(jnp.float32))
     return out.reshape(b, hq, 1, d).astype(q.dtype)

@@ -218,6 +218,144 @@ def init_cache(cfg: ArchConfig, batch: int, seq_len: int, dtype=None) -> list:
     return caches
 
 
+# ---------------------------------------------------------------------------
+# Paged decode / chunked prefill (continuous-batching engine)
+# ---------------------------------------------------------------------------
+
+def supports_paged(cfg: ArchConfig) -> bool:
+    """Paged KV serving covers pure-attention decoder stacks: every layer
+    kind must keep plain (B, Hkv, S, hd) KV state.  SSM/hybrid recurrent
+    state is O(1) per slot and needs no paging; encdec keeps a cross cache."""
+    kinds = {k for k, _ in segments_of(cfg)}
+    return (
+        kinds <= {"attn", "swa"}
+        and not cfg.encdec
+        and cfg.n_meta_tokens == 0
+        and cfg.stub_prefix_len == 0
+    )
+
+
+def _check_paged(cfg: ArchConfig) -> None:
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged KV serving supports pure-attention decoder stacks; "
+            f"{cfg.name} has kinds {[k for k, _ in segments_of(cfg)]}"
+        )
+
+
+def init_paged_pools(cfg: ArchConfig, num_tokens: int, dtype=None) -> list:
+    """Token-major physical KV pools, one stacked pool per segment:
+    k/v (count, T, Hkv, hd) with T = num_blocks * page_size."""
+    _check_paged(cfg)
+    dtype = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    pools = []
+    for kind, count in segments_of(cfg):
+        one = blocks.init_attn_pool(cfg, num_tokens, dtype)
+        pools.append(jax.tree.map(lambda a: jnp.broadcast_to(a[None], (count, *a.shape)), one))
+    return pools
+
+
+def paged_view(cfg: ArchConfig, pools: list, table: jax.Array, page_size: int) -> list:
+    """Gather each slot's pages into contiguous per-slot caches — the same
+    (count, B, Hkv, L, hd) layout ``init_cache`` builds, so the ordinary
+    ``decode_step`` runs against it unchanged."""
+    return [
+        jax.tree.map(lambda a: blocks.gather_pool_view(a, table, page_size), pool)
+        for pool in pools
+    ]
+
+
+def paged_writeback(
+    cfg: ArchConfig, pools: list, caches: list, table: jax.Array,
+    pos0: jax.Array, n_tokens: int, page_size: int,
+) -> list:
+    """Scatter the cells a dispatch wrote — view positions [pos0_r, pos0_r +
+    n_tokens) per row — back into the physical pools."""
+    return [
+        jax.tree.map(
+            lambda pa, va: blocks.scatter_pool_view(
+                pa, va, table, pos0, n_tokens, page_size
+            ),
+            pool, cache,
+        )
+        for pool, cache in zip(pools, caches)
+    ]
+
+
+def decode_step_paged(
+    params: Params,
+    cfg: ArchConfig,
+    pools: list,
+    table: jax.Array,
+    token: jax.Array,
+    pos: jax.Array,
+    page_size: int,
+) -> tuple[jax.Array, list]:
+    """token: (B, 1) i32; pos: (B,) per-slot absolute positions; table
+    (B, P) block-table rows.
+
+    Gather view -> ordinary ``decode_step`` (vector positions) -> write the
+    one new cell per row back.  Row-independent everywhere, so each slot's
+    logits are bit-identical to a solo contiguous-cache decode at the same
+    position.  Multi-step callers (the engine's decode quantum) should call
+    ``paged_view`` once, scan ``decode_step``, then ``paged_writeback`` —
+    paying the gather per dispatch, not per token.
+
+    Returns (logits (B, 1, V), new pools).
+    """
+    caches = paged_view(cfg, pools, table, page_size)
+    logits, caches = decode_step(params, cfg, caches, token, pos)
+    pools = paged_writeback(cfg, pools, caches, table, pos, 1, page_size)
+    return logits, pools
+
+
+def prefill_chunk(
+    params: Params,
+    cfg: ArchConfig,
+    pools: list,
+    table: jax.Array,
+    tokens: jax.Array,
+    start: jax.Array,
+    kv_len: jax.Array,
+    last_idx: jax.Array,
+    page_size: int,
+) -> tuple[jax.Array, list]:
+    """One prompt-chunk dispatch, B requests wide: tokens (B, C), row r at
+    positions [start_r, start_r + C) (columns past a row's true chunk length
+    are padding — masked by causality + ``kv_len``, and written back into
+    cells the row's own future tokens overwrite before any masked-visible
+    read); kv_len: (B,) valid cache lengths after the writes; last_idx:
+    (B,) chunk column to emit logits for (the prompt's final token on a
+    row's last chunk; other rows' logits are discarded by the caller).
+    start/kv_len/last_idx also accept scalars (single-request callers).
+
+    Returns (logits (B, 1, V), new pools).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = layers.embed(params["embed"], tokens, dtype)
+    if getattr(cfg, "embed_scale", False):
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+    b, c = tokens.shape
+    start_b = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(start)), (b,))
+
+    caches = paged_view(cfg, pools, table, page_size)
+    new_caches = []
+    for (kind, _), p_stack, cache_stack in zip(segments_of(cfg), params["segments"], caches):
+        kw = _fwd_kwargs(cfg, kind)
+
+        def body(x_c, pc, _kw=kw):
+            p_layer, c_layer = pc
+            return blocks.attn_block_chunk_step(
+                p_layer, cfg, x_c, c_layer, start, kv_len, **_kw
+            )
+
+        x, seg_cache = jax.lax.scan(body, x, (p_stack, cache_stack))
+        new_caches.append(seg_cache)
+    pools = paged_writeback(cfg, pools, new_caches, table, start_b, c, page_size)
+    x_last = jnp.take_along_axis(x, jnp.reshape(last_idx, (-1, 1, 1)), axis=1)
+    return _logits(params, cfg, x_last), pools
+
+
 def decode_step(
     params: Params, cfg: ArchConfig, caches: list, token: jax.Array, pos: jax.Array
 ) -> tuple[jax.Array, list]:

@@ -116,6 +116,28 @@ def test_flash_attention_vs_ref(b, hq, hkv, sq, sk, d, kind, window, q_offset):
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
 
+def test_flash_attention_traced_kv_valid_len(key):
+    """The traced cache-tail mask (paged engine prefill) agrees with the ref
+    and with the blockwise path's kv_valid_len, without recompiling per
+    length — the valid length is an SMEM operand, not a static arg."""
+    from repro.models.attention import blockwise_attention
+
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 4, 24, 16))
+    k = jax.random.normal(ks[1], (1, 2, 64, 16))
+    v = jax.random.normal(ks[2], (1, 2, 64, 16))
+    for kvl in (7, 23, 40, 64):
+        got = fa_ops.flash_attention(
+            q, k, v, jnp.int32(kvl), kind="causal", q_offset=16, bq=8, bk=8
+        )
+        want = fa_ref.flash_attention(q, k, v, jnp.int32(kvl), kind="causal", q_offset=16)
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+        bw = blockwise_attention(
+            q, k, v, kind="causal", q_offset=16, block_k=8, kv_valid_len=jnp.int32(kvl)
+        )
+        np.testing.assert_allclose(got, bw, rtol=2e-5, atol=2e-5)
+
+
 def test_flash_attention_matches_blockwise_module(key):
     """The pure-JAX blockwise attention (model default) and the Pallas kernel
     implement the same contract."""
