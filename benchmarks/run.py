@@ -143,26 +143,34 @@ def main() -> None:
         "token_agreement_vs_dense": rserve["token_agreement_vs_dense"],
     }
 
-    banner("Engine throughput — continuous batching vs static lockstep")
+    banner("Engine throughput — fused vs split vs static lockstep")
     reng = engine_throughput.run(
         n_requests=32 if not args.full else 64,
         passes=2 if not args.full else 3,
     )
-    print(f"  {'':10s} {'tok/s':>10s} {'p50 ms':>9s} {'p95 ms':>9s}")
-    for name in ("static", "engine"):
+    print(f"  {'':12s} {'tok/s':>10s} {'p50 ms':>9s} {'p95 ms':>9s}")
+    for name in ("static", "engine_split", "engine"):
         r = reng[name]
-        print(f"  {name:10s} {r['tok_s']:10.1f} {r['p50_latency_ms']:9.1f} "
+        print(f"  {name:12s} {r['tok_s']:10.1f} {r['p50_latency_ms']:9.1f} "
               f"{r['p95_latency_ms']:9.1f}")
     print(f"  continuous batching: {reng['speedup_tok_s']:.2f}x tok/s, "
-          f"{reng['p50_latency_ratio']:.2f}x lower p50 latency "
+          f"{reng['p50_latency_ratio']:.2f}x lower p50 latency; "
+          f"fused vs split {reng['fused_vs_split_tok_s']:.2f}x "
           f"({reng['trace']['n_requests']} requests, "
           f"{reng['engine']['compiled_variants']} compiled variants)")
+    oc = reng["overcommit"]
+    print(f"  overcommit: {oc['completed']}/{oc['n_requests']} completed on "
+          f"{oc['usable_blocks']} blocks, {oc['preemptions']} preemptions")
     save_json("BENCH_engine", reng)
     summary["engine"] = {
         "static_tok_s": reng["static"]["tok_s"],
+        "engine_split_tok_s": reng["engine_split"]["tok_s"],
         "engine_tok_s": reng["engine"]["tok_s"],
         "speedup_tok_s": reng["speedup_tok_s"],
+        "fused_vs_split_tok_s": reng["fused_vs_split_tok_s"],
         "p50_latency_ratio": reng["p50_latency_ratio"],
+        "overcommit_completed": oc["completed"],
+        "overcommit_preemptions": oc["preemptions"],
     }
 
     banner("Redeploy delta (training-time integration, beyond-paper)")

@@ -87,6 +87,12 @@ class PoolProgramReport:
 
 @dataclasses.dataclass(frozen=True)
 class PoolStats:
+    """Lifetime wear summary of a pool: how many physical writes its cells
+    absorbed across every tensor programmed so far.  ``exhaustion_horizon``
+    converts the worst cell into "how many such histories until the
+    endurance budget dies" — the paper's motivating quantity made
+    measurable (see docs/paper_map.md, endurance accounting)."""
+
     n_crossbars: int
     cells: int  # L * rows * cols physical memristors
     tensors_seen: int

@@ -13,6 +13,12 @@ size (the reason GQA helps the memory roofline term at 32k).
 Causal/SWA tiles that are fully masked are skipped with ``pl.when`` on the
 *block* indices — the compile-time analogue of FlashAttention's block
 skipping, worth ~2x on causal prefill (half the tiles are dead).
+
+Ragged serving support: ``q_offsets`` and ``kv_valid_len`` are *traced
+per-row* scalars living in SMEM, indexed by the batch grid axis — one
+compiled kernel serves every mix of per-request prompt positions and cache
+valid lengths (the fused prefill+decode dispatch batches rows at different
+absolute positions with different live-cache extents).
 """
 from __future__ import annotations
 
@@ -30,8 +36,8 @@ NEG_INF = -1e30
 
 
 def _kernel(
-    q_ref, k_ref, v_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref,
-    *, kind: str, window: Optional[int], q_offset: int, bq: int, bk: int,
+    q_ref, k_ref, v_ref, qoff_ref, kvl_ref, o_ref, m_ref, l_ref, acc_ref,
+    *, kind: str, window: Optional[int], bq: int, bk: int,
     n_k: int, sk_valid: int, scale: float,
 ):
     iq = pl.program_id(2)
@@ -43,8 +49,11 @@ def _kernel(
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q_lo = q_offset + iq * bq  # absolute position of this q tile's first row
+    # per-row traced scalars (SMEM, indexed by the batch grid axis):
+    # absolute position of this row's q[0], and its live cache extent
+    q_lo = qoff_ref[0, 0] + iq * bq  # absolute position of this q tile's 1st row
     k_lo = ik * bk
+    kvl = kvl_ref[0, 0]
 
     def body():
         q = q_ref[0, 0].astype(jnp.float32) * scale  # (bq, d)
@@ -54,9 +63,9 @@ def _kernel(
 
         q_pos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
         k_pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        # static padding tail AND the traced per-dispatch valid length (paged
+        # static padding tail AND the traced per-row valid length (paged
         # serving: the gathered cache view's tail holds stale pool bytes)
-        mask = jnp.logical_and(k_pos < sk_valid, k_pos < kvl_ref[0, 0])
+        mask = jnp.logical_and(k_pos < sk_valid, k_pos < kvl)
         if kind != "bidir":
             mask = jnp.logical_and(mask, k_pos <= q_pos)
             if kind == "swa":
@@ -82,7 +91,7 @@ def _kernel(
         live = k_lo <= q_lo + bq - 1
         # tiles entirely past the traced valid length are dead too (the cache
         # view's unwritten tail in paged serving)
-        live = jnp.logical_and(live, k_lo < kvl_ref[0, 0])
+        live = jnp.logical_and(live, k_lo < kvl)
         if kind == "swa":
             live = jnp.logical_and(live, k_lo + bk - 1 > q_lo - window)
         pl.when(live)(body)
@@ -95,17 +104,17 @@ def _kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("kind", "window", "q_offset", "bq", "bk", "sk_valid", "interpret"),
+    static_argnames=("kind", "window", "bq", "bk", "sk_valid", "interpret"),
 )
 def flash_attention_kernel(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
-    kv_valid_len: Optional[jax.Array] = None,
+    q_offsets: jax.Array,
+    kv_valid_len: jax.Array,
     *,
     kind: str = "causal",
     window: Optional[int] = None,
-    q_offset: int = 0,
     bq: int = 128,
     bk: int = 128,
     sk_valid: Optional[int] = None,
@@ -114,10 +123,14 @@ def flash_attention_kernel(
     """Raw kernel entry: Sq % bq == 0 and Sk % bk == 0 required.
 
     q: [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] -> [B, Hq, Sq, D].
-    ``sk_valid`` masks key positions >= it (static padding tail);
-    ``kv_valid_len`` is its *traced* counterpart — a scalar that varies per
-    dispatch without recompiling (continuous-batching prefill chunks attend
-    to a fixed-shape cache view whose valid length grows per chunk).
+    ``q_offsets``: (B,) i32 traced per-row absolute position of each row's
+    q[0] — rows of a ragged dispatch sit at their own prompt positions.
+    ``kv_valid_len``: (B,) i32 traced per-row live cache extents — key
+    positions >= a row's extent are masked without recompiling (continuous-
+    batching rows attend to a fixed-shape view whose valid length differs
+    per slot and grows per chunk).  ``sk_valid`` masks the *static* padding
+    tail.  Callers wanting the historical scalar behaviour broadcast one
+    value (ops.py does).
     """
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
@@ -125,14 +138,13 @@ def flash_attention_kernel(
     assert hq == hkv * g, (hq, hkv)
     n_q, n_k = cdiv(sq, bq), cdiv(sk, bk)
     sk_valid = sk if sk_valid is None else sk_valid
-    if kv_valid_len is None:
-        kv_valid_len = jnp.int32(sk)
-    kvl = jnp.reshape(jnp.asarray(kv_valid_len, jnp.int32), (1, 1))
+    qoff = jnp.reshape(jnp.asarray(q_offsets, jnp.int32), (b, 1))
+    kvl = jnp.reshape(jnp.asarray(kv_valid_len, jnp.int32), (b, 1))
     grid = (b, hq, n_q, n_k)
 
     kern = functools.partial(
         _kernel,
-        kind=kind, window=window, q_offset=q_offset,
+        kind=kind, window=window,
         bq=bq, bk=bk, n_k=n_k, sk_valid=sk_valid, scale=d**-0.5,
     )
     return pl.pallas_call(
@@ -143,7 +155,10 @@ def flash_attention_kernel(
             pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
             pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
             pl.BlockSpec(
-                (1, 1), lambda ib, ih, iq, ik: (0, 0), memory_space=pltpu.SMEM
+                (1, 1), lambda ib, ih, iq, ik: (ib, 0), memory_space=pltpu.SMEM
+            ),
+            pl.BlockSpec(
+                (1, 1), lambda ib, ih, iq, ik: (ib, 0), memory_space=pltpu.SMEM
             ),
         ],
         out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
@@ -154,4 +169,4 @@ def flash_attention_kernel(
             pltpu.VMEM((bq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v, kvl)
+    )(q, k, v, qoff, kvl)

@@ -2,16 +2,17 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels._util import default_interpret, pad_axis_to, round_up
 from repro.kernels.flash_attention.kernel import flash_attention_kernel
 
 
 @functools.partial(
-    jax.jit, static_argnames=("kind", "window", "q_offset", "bq", "bk", "interpret")
+    jax.jit, static_argnames=("kind", "window", "bq", "bk", "interpret")
 )
 def flash_attention(
     q: jax.Array,
@@ -21,15 +22,20 @@ def flash_attention(
     *,
     kind: str = "causal",
     window: Optional[int] = None,
-    q_offset: int = 0,
+    q_offset: Union[int, jax.Array] = 0,
     bq: int = 128,
     bk: int = 128,
     interpret: bool | None = None,
 ) -> jax.Array:
     """See ref.py for the contract.  Arbitrary Sq/Sk; pads + slices back.
 
-    ``kv_valid_len``: optional traced scalar — key positions >= it are
-    masked without recompiling (paged cache-view tail in engine prefill).
+    ``q_offset``: absolute position of q[0] — a scalar shared by the batch,
+    or a (B,) vector of *traced per-row* offsets (ragged fused dispatches:
+    every row of the batch sits at its own prompt position).
+    ``kv_valid_len``: optional traced scalar or (B,) per-row vector — key
+    positions >= it are masked without recompiling (per-slot cache-view
+    tails in engine prefill/fused dispatches).  Both land in SMEM, so one
+    compiled kernel serves every per-row combination.
     """
     b, hq, sq, d = q.shape
     sk = k.shape[2]
@@ -39,9 +45,13 @@ def flash_attention(
     qp = pad_axis_to(q, 2, round_up(sq, bq_))
     kp = pad_axis_to(k, 2, round_up(sk, bk_))
     vp = pad_axis_to(v, 2, round_up(sk, bk_))
+    qoff = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    kvl = jnp.broadcast_to(
+        jnp.asarray(sk if kv_valid_len is None else kv_valid_len, jnp.int32), (b,)
+    )
     out = flash_attention_kernel(
-        qp, kp, vp, kv_valid_len,
-        kind=kind, window=window, q_offset=q_offset,
+        qp, kp, vp, qoff, kvl,
+        kind=kind, window=window,
         bq=bq_, bk=bk_, sk_valid=sk, interpret=interp,
     )
     return out[:, :, :sq]

@@ -3,13 +3,16 @@
 Contract (shared with kernel.py / ops.py):
   q: f32/bf16 [B, Hq, Sq, D]; k, v: [B, Hkv, Sk, D] with Hq % Hkv == 0
   kind: "causal" | "bidir" | "swa" (causal sliding window of `window`)
-  q_offset: absolute position of q[0] (continuation chunks / decode)
+  q_offset: absolute position of q[0] (continuation chunks / decode);
+    scalar shared by the batch, or (B,) per-row (ragged fused dispatches)
+  kv_valid_len: optional scalar or (B,) per-row — key positions >= it are
+    masked (live cache extent of each slot's view)
 
   out[b,h,i] = sum_j softmax_j(q_i . k_j / sqrt(D) + mask) v_j
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +26,7 @@ def flash_attention(
     *,
     kind: str = "causal",
     window: Optional[int] = None,
-    q_offset: int = 0,
+    q_offset: Union[int, jax.Array] = 0,
 ) -> jax.Array:
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
@@ -32,18 +35,26 @@ def flash_attention(
     scores = jnp.einsum(
         "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
     ) * (d**-0.5)
-    qp = q_offset + jnp.arange(sq)[:, None]
-    kp = jnp.arange(sk)[None, :]
+    # (B, Sq, Sk) masks when offsets/extents are per-row; (Sq, Sk) otherwise
+    off = jnp.asarray(q_offset)
+    qp = (off[:, None, None] + jnp.arange(sq)[None, :, None]) if off.ndim else (
+        off + jnp.arange(sq)[:, None]
+    )
+    kp = jnp.arange(sk)
     if kind == "bidir":
-        mask = jnp.ones((sq, sk), jnp.bool_)
+        mask = jnp.ones_like(qp + kp, dtype=jnp.bool_)
     else:
         mask = kp <= qp
         if kind == "swa":
             assert window is not None
             mask = jnp.logical_and(mask, kp > qp - window)
     if kv_valid_len is not None:
-        mask = jnp.logical_and(mask, kp < kv_valid_len)
-    scores = jnp.where(mask[None, None, None], scores, -jnp.inf)
+        vl = jnp.asarray(kv_valid_len)
+        vl = vl[:, None, None] if vl.ndim else vl
+        mask = jnp.logical_and(mask, kp < vl)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, -jnp.inf)
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
     return out.reshape(b, hq, sq, d).astype(q.dtype)

@@ -4,41 +4,64 @@ Serves heterogeneous, streaming requests from one shared paged KV pool
 (``launch.paged_cache``) through shape-bucketed jitted dispatches:
 
   * **Admission** — waiting requests enter freed decode slots mid-flight as
-    soon as a slot and enough KV blocks are available (FIFO).
-  * **Chunked prefill** — prompts are processed ``prefill_chunk`` tokens at
-    a time; ONE batched dispatch per cycle advances every prefilling slot a
-    chunk, so a long prompt never stalls decoding for more than one chunk
-    and admissions share dispatches.
-  * **Decode quantum** — all decoding slots advance several tokens in ONE
-    donated-pool ``lax.scan`` dispatch (``steps.make_paged_decode_loop``),
-    masked per-slot: every row has its own position, block-table row, PRNG
-    key, and greedy flag.  The quantum length is chosen per dispatch by
-    useful-tokens-per-cost from two compiled lengths.
+    soon as a slot and enough KV blocks for their first prefill chunk are
+    available (FIFO in arrival order).  Blocks are allocated *lazily* as a
+    request grows — admission never reserves the worst-case
+    prompt+max_new_tokens footprint up front.
+  * **Fused prefill+decode** (default, ``EngineConfig.fused``) — each cycle
+    runs ONE bucketed dispatch (``steps.make_fused_step``) in which prefill
+    rows advance a chunk (query extent = chunk length) and decode rows
+    advance a full quantum (query extent 1) *in the same batch*: the view
+    gather, the mixed-extent chunk step, a ``lax.scan`` decode quantum, and
+    the write-back scatter all happen in one XLA computation, one host
+    round-trip.  A row that finishes its prompt mid-batch samples its first
+    token in-graph and decodes the rest of the quantum inside the same
+    dispatch — no cycle of dead time between prefill and decode.  With
+    ``fused=False`` the engine keeps the split discipline (one chunked
+    prefill dispatch + one decode-quantum dispatch per cycle) — the
+    benchmark baseline.
+  * **Preemption** (``EngineConfig.preempt``) — when the free list cannot
+    serve a growing request, the lowest-priority (latest-arrival) slot is
+    preempted: ``"swap"`` snapshots its live KV cells to host memory
+    (``paged_cache.swap_out``) and restores them byte-identical on
+    re-admission; ``"recompute"`` drops the cells and re-prefills
+    prompt+generated on re-admission (teacher-forced — already-emitted
+    tokens are never re-sampled).  Preempted requests re-enter the waiting
+    queue in arrival order (FIFO) and re-admit as soon as a slot and blocks
+    free up.  Decode slots are preferred as victims; the highest-priority
+    request can always evict every later arrival, so the engine admits
+    over-committed traces (more concurrent demand than blocks) instead of
+    stalling.
   * **Retirement** — EOS / max-new-tokens ends a request; its blocks return
     to the free list and its slot admits the next queued request.
 
 Shape bucketing keeps the dispatch count compile-friendly: row counts and
 page counts are padded to powers of two (dummy rows write to the reserved
 dummy page), so the number of compiled variants is O(log(max_slots) *
-log(max_pages)) rather than one per ragged shape.
+log(max_pages)) per dispatch kind rather than one per ragged shape.
 
 Token parity: each request's stream is bit-identical to a solo
-``launch.serve.generate`` run with the same PRNG seed — all three
-materializations (dense / packed / planes_int8) flow through
-``models.layers.linear`` unchanged (pinned in tests/test_engine.py).
+``launch.serve.generate`` run with the same PRNG seed — through fused and
+split dispatches, mid-flight admission, and preemption/re-admission, for
+all three materializations (dense / packed / planes_int8), pinned in
+tests/test_engine.py.
+
+See docs/architecture.md for how the engine sits on the planner → pool →
+packed-serving stack, and docs/benchmarks.md for the BENCH_engine.json
+fields the throughput benchmark derives from ``Engine.stats``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Optional
+from typing import Any, Optional, Union
 
 import jax
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.launch import steps
+from repro.launch import paged_cache, steps
 from repro.launch.paged_cache import PagedCacheConfig, PagedKVCache
 from repro.models import api
 
@@ -66,6 +89,9 @@ class Request:
 
 @dataclasses.dataclass
 class RequestResult:
+    """Outcome of one request: its token stream plus the latency breakdown
+    (all times seconds relative to ``Engine.run`` start)."""
+
     rid: int
     tokens: list[int]
     t_arrival: float
@@ -84,12 +110,26 @@ class RequestResult:
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
+    """Shape + scheduling policy for the engine.
+
+    ``max_seq_len`` bounds prompt+generated per request; ``num_blocks``
+    sizes the shared pool (default: enough for every slot's worst case —
+    shrink it to exercise preemption / serve over-committed traffic).
+    ``fused`` selects the fused prefill+decode dispatch (one batched
+    dispatch per cycle) vs the split prefill-then-decode discipline;
+    ``preempt`` selects what happens to a victim's KV under block pressure:
+    ``"swap"`` (host snapshot, byte-identical restore) or ``"recompute"``
+    (drop + teacher-forced re-prefill on re-admission).
+    """
+
     max_slots: int = 8
     page_size: int = 16
     max_seq_len: int = 512  # upper bound on prompt + generated per request
     prefill_chunk: int = 32  # max prompt tokens per prefill dispatch
     decode_quantum: int = 8  # decode steps per dispatch
     num_blocks: Optional[int] = None  # default: dummy + max_slots * max_pages
+    fused: bool = True  # fused prefill+decode dispatch per cycle
+    preempt: str = "swap"  # "swap" | "recompute"
 
 
 _WAITING, _PREFILL, _DECODE = "waiting", "prefill", "decode"
@@ -101,7 +141,7 @@ class _Slot:
     def __init__(self, req: Request, t_admitted: float):
         self.req = req
         self.state = _PREFILL
-        self.prefill_done = 0  # prompt tokens already written to the pool
+        self.prefill_done = 0  # target tokens already written to the pool
         self.pos = 0  # next decode write position (= tokens in cache)
         self.generated: list[int] = []
         self.tok_next = -1  # last emitted token (next decode input)
@@ -109,6 +149,50 @@ class _Slot:
         self.key = np.asarray(jax.random.PRNGKey(req.seed))
         self.t_admitted = t_admitted
         self.t_first_token = 0.0
+        # recompute re-admission: the sequence being re-prefilled
+        # (prompt + already-generated tokens) and the pending token that was
+        # emitted before preemption — adopted instead of a fresh sample when
+        # the replay completes (its sampling already happened once)
+        self.replay: Optional[np.ndarray] = None
+        self.saved_tok = -1
+
+    @property
+    def target(self) -> np.ndarray:
+        """The token sequence prefill is walking: the prompt, or the
+        teacher-forced prompt+generated replay after a recompute preemption."""
+        return self.replay if self.replay is not None else self.req.prompt
+
+    @property
+    def priority(self) -> tuple[float, int]:
+        """FCFS priority key — smaller is higher priority (preempted last)."""
+        return (self.req.arrival_time, self.req.rid)
+
+
+@dataclasses.dataclass
+class _Preempted:
+    """A request evicted under block pressure, waiting to re-admit FIFO.
+
+    ``n_live`` live cells ([0, n_live)) were either snapshotted to host
+    (``snapshot`` pytree, swap mode) or dropped (recompute mode).
+    Re-admission derives everything else from the *prefix* the cache must
+    hold — prompt + generated[:-1] — so every eviction point (mid-prompt,
+    mid-replay, steady decode) readmits through one rule: restore what was
+    snapshotted, then prefill the rest of the prefix teacher-forced, then
+    resume decode with ``tok_next`` (already emitted — never re-sampled).
+    """
+
+    req: Request
+    n_live: int
+    generated: list[int]
+    tok_next: int
+    key: np.ndarray
+    snapshot: Any  # host pytree (swap) or None (recompute)
+    t_admitted: float
+    t_first_token: float
+
+    @property
+    def arrival_time(self) -> float:
+        return self.req.arrival_time
 
 
 def _bucket(n: int, cap: int) -> int:
@@ -137,6 +221,12 @@ class Engine:
     ``params`` may be any ``deploy_params`` materialization (or plain fp
     weights); they are prepared once (``steps.prepare_serving_params``) so
     non-TPU backends decompress packed operands a single time per deployment.
+
+    Public surface: :meth:`submit` / :meth:`step` for external event loops,
+    :meth:`run` for a self-clocked trace, :meth:`prewarm` to compile every
+    bucketed dispatch variant up front; ``stats`` accumulates dispatch and
+    preemption counters across the engine's lifetime (the throughput
+    benchmark reads per-pass deltas from it).
     """
 
     def __init__(self, cfg: ArchConfig, params: Any, ecfg: EngineConfig = EngineConfig()):
@@ -144,15 +234,17 @@ class Engine:
             raise NotImplementedError(
                 f"{cfg.name}: the paged engine serves pure-attention decoder stacks"
             )
+        if ecfg.preempt not in ("swap", "recompute"):
+            raise ValueError(f"unknown preemption mode {ecfg.preempt!r}")
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = steps.prepare_serving_params(params)
 
-        # a slot's dispatches may address up to one decode quantum (decode
-        # overrun) or one padded prefill chunk past max_seq_len; writes
-        # beyond its allocation land in the dummy page, but the bucketed
-        # page view must be wide enough to address them
-        overhang = max(ecfg.decode_quantum, ecfg.prefill_chunk)
+        # a slot's dispatches may address up to a fused window (one padded
+        # prefill chunk + one decode quantum) past max_seq_len; writes beyond
+        # its allocation land in the dummy page, but the bucketed page view
+        # must be wide enough to address them
+        overhang = ecfg.prefill_chunk + ecfg.decode_quantum
         max_pages = -(-(ecfg.max_seq_len + overhang) // ecfg.page_size)
         num_blocks = ecfg.num_blocks or 1 + ecfg.max_slots * max_pages
         self.pcfg = PagedCacheConfig(
@@ -182,18 +274,31 @@ class Engine:
             steps.make_prefill_chunk_step(cfg, ecfg.page_size),
             donate_argnums=donate,
         )
+        self._fused_steps = {
+            q: jax.jit(
+                steps.make_fused_step(cfg, q, ecfg.page_size),
+                donate_argnums=donate,
+            )
+            for q in self._quanta
+        } if ecfg.fused else {}
 
-        self.waiting: deque[Request] = deque()
+        self.waiting: deque[Union[Request, _Preempted]] = deque()
         self.slots: list[Optional[_Slot]] = [None] * ecfg.max_slots
         self.results: dict[int, RequestResult] = {}
         self._shapes_seen: set[tuple] = set()
         self.stats = {
             "decode_dispatches": 0,
             "prefill_dispatches": 0,
+            "fused_dispatches": 0,
             "decode_rows_live": 0,
             "decode_rows_padded": 0,
             "tokens_emitted": 0,
             "tokens_overrun": 0,
+            "preemptions": 0,
+            "preempt_swap": 0,
+            "preempt_recompute": 0,
+            "swap_ins": 0,
+            "readmissions": 0,
         }
 
     # -- public API ---------------------------------------------------------
@@ -205,12 +310,16 @@ class Engine:
         return _buckets_upto(self.pcfg.max_pages)
 
     def prewarm(self) -> int:
-        """Compile every bucketed dispatch variant up front with dummy
-        dispatches aimed at the dummy page (slot state untouched; the pool
-        only absorbs garbage into block 0).  Without this, a bucket first
-        seen mid-serve pays its XLA compile inside a request's latency.
-        Returns the number of variants compiled."""
+        """Compile bucketed dispatch variants up front with dummy dispatches
+        aimed at the dummy page (slot state untouched; the pool only absorbs
+        garbage into block 0).  Without this, a bucket first seen mid-serve
+        pays its XLA compile inside a request's latency.  The decode and
+        prefill grids are covered exhaustively; fused variants cover the
+        dominant sub-batch combinations (see the inline note).  Returns the
+        number of variants compiled."""
         n = 0
+        chunk = self.ecfg.prefill_chunk
+        page = self.ecfg.page_size
         for q, loop in self._decode_loops.items():
             for rows in self._row_buckets():
                 for pages in self._page_buckets():
@@ -222,8 +331,7 @@ class Engine:
                     )
                     self._shapes_seen.add(("decode", q, rows, pages))
                     n += 1
-        chunk = self.ecfg.prefill_chunk
-        min_pf_pages = -(-chunk // self.ecfg.page_size)  # view must fit a chunk
+        min_pf_pages = -(-chunk // page)  # view must fit a chunk
         for rows in self._row_buckets():
             for pages in self._page_buckets():
                 if pages < min_pf_pages:
@@ -239,29 +347,77 @@ class Engine:
                 )
                 self._shapes_seen.add(("prefill", rows, pages))
                 n += 1
+        # fused variants: the chunk and scan sub-batches bucket
+        # independently, so the full (q, c, bp, rows, pages) product is too
+        # large to compile eagerly.  Warm the dominant combinations — full
+        # chunk width with a lone-admission chunk row (bp=1, the steady-state
+        # shape) and an all-prefill chunk (bp=rows, the cold-start shape);
+        # rarer widths compile on first use and best-of-N measurement passes
+        # absorb them.
+        for q, step in self._fused_steps.items():
+            for rows in self._row_buckets():
+                for pages in self._page_buckets():
+                    if pages < min_pf_pages:
+                        continue
+                    for bp in {1, rows}:
+                        pf_meta = np.zeros((bp, 5), np.int32)
+                        pf_meta[:, 1] = 1  # pad rows: kv_len 1
+                        state = np.zeros((rows, 5), np.int32)
+                        state[:, 2] = 1  # greedy: no PRNG consumption
+                        _, _, _, self.pools = step(
+                            self.params, self.pools,
+                            np.zeros((bp, pages), np.int32),
+                            np.zeros((bp, chunk), np.int32),
+                            pf_meta,
+                            np.zeros((bp, 2), np.uint32),
+                            np.zeros((rows, pages), np.int32),
+                            state,
+                            np.zeros((rows, 2), np.uint32),
+                            np.full((rows,), -1, np.int32),
+                        )
+                        self._shapes_seen.add(("fused", q, chunk, bp, rows, pages))
+                        n += 1
         jax.block_until_ready(jax.tree.leaves(self.pools))
         return n
 
+    def _cap_tokens(self, req: Request) -> int:
+        """Deepest cell a request ever reads: positions [0, prompt +
+        max_new - 1).  Dispatch overrun past this lands in allocated page
+        tails or the dummy page and is never read — so allocation requests
+        clamp here, and this is the footprint ``submit`` checks against the
+        pool."""
+        return req.prompt.size + req.max_new_tokens - 1
+
     def submit(self, req: Request) -> None:
+        """Queue a request.  Rejects requests that could never complete:
+        longer than ``max_seq_len``, or needing more KV blocks than the
+        whole pool holds even with every other request preempted."""
         if req.prompt.size + req.max_new_tokens > self.ecfg.max_seq_len:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new "
                 f"{req.prompt.size + req.max_new_tokens} > max_seq_len "
                 f"{self.ecfg.max_seq_len}"
             )
+        need = -(-self._cap_tokens(req) // self.ecfg.page_size)
+        if need > self.pcfg.usable_blocks:
+            raise ValueError(
+                f"request {req.rid}: needs {need} KV blocks > pool's "
+                f"{self.pcfg.usable_blocks} usable blocks"
+            )
         self.waiting.append(req)
 
     def step(self, now: float) -> bool:
-        """One scheduler cycle: admit, one prefill chunk per prefilling slot,
-        one decode quantum over all decoding slots.  Returns True if any
-        dispatch ran.
+        """One scheduler cycle.  Returns True if any dispatch ran.
 
-        Advancing *every* prefilling slot one chunk per cycle fills decode
-        slots as fast as possible (denser decode batches) while still
-        bounding the decode stall to max_slots chunk dispatches — the
-        chunking exists so a long prompt can't monopolize the engine for
-        its whole prefill."""
+        Fused mode: admit, then ONE dispatch advancing every occupied slot —
+        prefill rows one chunk, decode rows one quantum, rows finishing
+        their prompt rolling straight into decode in-graph.  Split mode:
+        admit, one chunked-prefill dispatch over prefilling slots, one
+        decode-quantum dispatch over decoding slots (the PR4 discipline,
+        kept as the fused path's benchmark baseline)."""
         self._admit(now)
+        if self.ecfg.fused:
+            return self._fused_round(now)
         did = self._prefill_round(now)
         did = self._decode(now) or did
         return did
@@ -290,20 +446,164 @@ class Engine:
         self.stats["compiled_variants"] = len(self._shapes_seen)
         return [self.results[r.rid] for r in requests]
 
-    # -- scheduling ---------------------------------------------------------
+    # -- admission / preemption ---------------------------------------------
 
     def _admit(self, now: float) -> None:
+        """FIFO admission of the waiting head into free slots.  Fresh
+        requests only need blocks for their first prefill chunk (growth is
+        lazy); preempted requests restore their snapshot (swap) or start a
+        teacher-forced replay (recompute).  Admission itself never preempts
+        — new arrivals are the lowest-priority work in the system."""
         for i, slot in enumerate(self.slots):
             if slot is not None or not self.waiting:
                 continue
-            req = self.waiting[0]
-            if req.arrival_time > now:
+            head = self.waiting[0]
+            if head.arrival_time > now:
                 break  # FIFO: later arrivals wait behind the head
-            cap = req.prompt.size + req.max_new_tokens + self.ecfg.decode_quantum
-            if not self.kv.ensure_capacity(i, cap):
-                break  # out of blocks until a retirement frees some
+            if isinstance(head, _Preempted):
+                if not self._readmit(i, head):
+                    break  # out of blocks until a retirement frees some
+            else:
+                first = min(self.ecfg.prefill_chunk, head.prompt.size)
+                if not self.kv.ensure_capacity(i, first):
+                    break
+                self.slots[i] = _Slot(head, now)
             self.waiting.popleft()
-            self.slots[i] = _Slot(req, now)
+
+    def _readmit(self, idx: int, rec: _Preempted) -> bool:
+        """Seat a preempted request back into slot ``idx``; False if the
+        free list can't yet hold its live cells plus its next prefill chunk.
+        The whole block need is secured *before* the device-side snapshot
+        restore, so a failed attempt allocates and restores nothing — the
+        record stays at the queue head and retries on the next admission
+        pass."""
+        gen = rec.generated
+        prefix = (
+            np.concatenate([rec.req.prompt, np.asarray(gen[:-1], np.int32)])
+            if gen else rec.req.prompt
+        )
+        restored = rec.n_live if rec.snapshot is not None else 0
+        decode_ready = bool(gen) and restored == prefix.size
+        need = restored if decode_ready else (
+            restored + min(self.ecfg.prefill_chunk, prefix.size - restored)
+        )
+        if not self.kv.ensure_capacity(idx, need):
+            return False
+        if rec.snapshot is not None:
+            self.pools = paged_cache.swap_in(self.pools, self.kv, idx, rec.snapshot)
+            self.stats["swap_ins"] += 1
+        slot = _Slot(rec.req, rec.t_admitted)
+        slot.key = rec.key
+        slot.generated = gen
+        slot.t_first_token = rec.t_first_token
+        if decode_ready:
+            # the whole prefix is back in the cache: resume steady decode
+            slot.state = _DECODE
+            slot.pos = restored
+            slot.tok_next = rec.tok_next
+        else:
+            # (re-)prefill the rest of the prefix; a request with emitted
+            # tokens replays teacher-forced and adopts its pending token
+            # instead of sampling when the replay completes
+            slot.prefill_done = restored
+            if gen:
+                slot.replay = prefix
+                slot.saved_tok = rec.tok_next
+        self.slots[idx] = slot
+        self.stats["readmissions"] += 1
+        return True
+
+    def _wkey(self, item: Union[Request, _Preempted]) -> tuple[float, int]:
+        r = item if isinstance(item, Request) else item.req
+        return (r.arrival_time, r.rid)
+
+    def _reinsert(self, rec: _Preempted) -> None:
+        """Put a preempted request back into the waiting queue in arrival
+        order (every waiting request arrived at or after any running one, so
+        this lands at/near the front — FIFO re-admission)."""
+        key = self._wkey(rec)
+        at = len(self.waiting)
+        for j, w in enumerate(self.waiting):
+            if self._wkey(w) > key:
+                at = j
+                break
+        self.waiting.insert(at, rec)
+
+    def _pick_victim(self, exclude: int, than: tuple[float, int]) -> Optional[int]:
+        """Lowest-priority slot strictly below priority ``than`` (decode
+        slots preferred — a mid-prompt victim wastes its partial prefill),
+        or None."""
+        best, best_key = None, None
+        for i, s in enumerate(self.slots):
+            if s is None or i == exclude or s.priority <= than:
+                continue
+            key = (s.state == _DECODE, s.priority)  # decode first, then latest
+            if best_key is None or key > best_key:
+                best, best_key = i, key
+        return best
+
+    def _preempt(self, idx: int) -> None:
+        """Evict slot ``idx`` under block pressure: snapshot (swap) or drop
+        (recompute) its live cells, free its blocks, and requeue it FIFO."""
+        slot = self.slots[idx]
+        n_live = slot.pos if slot.state == _DECODE else slot.prefill_done
+        snapshot = None
+        if self.ecfg.preempt == "swap":
+            # counted per policy even when there is nothing to snapshot yet
+            # (a just-admitted victim) — the stats split swap/recompute by
+            # the configured mode, not by whether cells happened to exist
+            if n_live:
+                snapshot = paged_cache.swap_out(self.pools, self.kv, idx, n_live)
+            self.stats["preempt_swap"] += 1
+        else:
+            n_live = 0  # recompute: drop the cells, replay on re-admission
+            self.stats["preempt_recompute"] += 1
+        self.stats["preemptions"] += 1
+        self.kv.release(idx)
+        self.slots[idx] = None
+        self._reinsert(_Preempted(
+            req=slot.req,
+            n_live=n_live,
+            generated=slot.generated,
+            # a mid-replay victim's pending token is its saved one — either
+            # way this is the token decode resumes with after the prefix
+            tok_next=slot.saved_tok if slot.replay is not None else slot.tok_next,
+            key=slot.key,
+            snapshot=snapshot,
+            t_admitted=slot.t_admitted,
+            t_first_token=slot.t_first_token,
+        ))
+
+    def _ensure_blocks(self, idx: int, n_tokens: int) -> bool:
+        """Grow slot ``idx`` to ``n_tokens`` cells, preempting lower-priority
+        slots while the free list is short.  False if the slot must skip this
+        cycle (it is itself among the lowest-priority work)."""
+        slot = self.slots[idx]
+        while not self.kv.ensure_capacity(idx, n_tokens):
+            victim = self._pick_victim(exclude=idx, than=slot.priority)
+            if victim is None:
+                return False
+            self._preempt(victim)
+        return True
+
+    def _secure_rows(self, rows: list[int], need_fn) -> list[int]:
+        """Secure each row's block need in priority order (so a starving
+        high-priority row evicts low-priority ones, never the reverse) and
+        return the sorted survivors.  A row may be preempted out from under
+        us by an earlier (higher-priority) row's ensure — its slot is None
+        by the time we reach it — or skip the cycle if it cannot get blocks.
+        Shared by the fused, prefill, and decode rounds so all three
+        dispatch kinds apply one securing policy."""
+        kept = []
+        for i in sorted(rows, key=lambda i: self.slots[i].priority):
+            s = self.slots[i]
+            if s is None:
+                continue
+            if self._ensure_blocks(i, need_fn(s)):
+                kept.append(i)
+        return sorted(kept)
+
+    # -- retirement ---------------------------------------------------------
 
     def _retire(self, idx: int, now: float) -> None:
         slot = self.slots[idx]
@@ -331,12 +631,195 @@ class Engine:
             return True
         return False
 
-    # -- prefill ------------------------------------------------------------
+    def _choose_quantum(self, remaining: list[int]) -> int:
+        """Pick the compiled quantum with the best useful-tokens-per-cost.
+        A row contributes min(q, remaining) useful tokens; cost is q steps
+        for every row plus a fixed per-dispatch overhead (~2.5
+        step-equivalents: scheduling, gather/write-back, host sync).  This
+        retires clusters of near-done rows with the short quantum without
+        dragging long rows down to one-token dispatches."""
+        return max(
+            self._quanta,
+            key=lambda qq: sum(min(qq, x) for x in remaining) / (qq + 2.5),
+        )
+
+    # -- fused dispatch ------------------------------------------------------
+
+    def _fused_round(self, now: float) -> bool:
+        """ONE dispatch advancing every occupied slot: prefill rows a chunk,
+        decode rows a quantum, prompt-finishing rows both (first token
+        sampled in-graph, then a full decode quantum inside the same
+        dispatch).  The dispatch holds two sub-batches — the chunk stage
+        bucketed to the prefill rows only, the decode scan to decode +
+        finishing rows — so neither side pays for the other's width.
+        Degenerate mixes route to the dedicated dispatches: all-decode uses
+        the pure decode loop (no dead chunk stage), all-mid-prompt the pure
+        chunk step (no dead scan)."""
+        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        if not occupied:
+            return False
+
+        def c_true(s: _Slot) -> int:
+            return min(self.ecfg.prefill_chunk, s.target.size - s.prefill_done)
+
+        def finishing(s: _Slot) -> bool:
+            return s.prefill_done + c_true(s) == s.target.size
+
+        dec = [i for i in occupied if self.slots[i].state == _DECODE]
+        pf = [i for i in occupied if self.slots[i].state == _PREFILL]
+        if not pf:
+            return self._decode(now)
+        active0 = dec + [i for i in pf if finishing(self.slots[i])]
+        if not active0:
+            return self._prefill_round(now)
+        # lone-prefill batching (same lever as the split path's deferral): a
+        # single fresh admission still pays a whole chunk stage; with more
+        # requests queued, waiting one cycle lets the next retirement's
+        # admission share it, halving the chunk-stage bill when short
+        # requests churn through the slots
+        if (
+            len(pf) == 1
+            and self.waiting
+            and not self.slots[pf[0]].pf_deferred
+            and len(dec) >= max(2, self.ecfg.max_slots // 2)
+        ):
+            self.slots[pf[0]].pf_deferred = True
+            return self._decode(now)
+
+        # quantum from the decoding rows' remaining budgets
+        rem = [
+            self.slots[i].req.max_new_tokens - len(self.slots[i].generated)
+            for i in active0
+        ]
+        q = self._choose_quantum(rem)
+
+        def fused_need(s: _Slot) -> int:
+            cap = self._cap_tokens(s.req)
+            if s.state == _DECODE:
+                return min(s.pos + q, cap)
+            if finishing(s):
+                return min(s.target.size + q, cap)
+            return s.prefill_done + c_true(s)
+
+        rows = self._secure_rows(occupied, fused_need)
+        pf_rows = [i for i in rows if self.slots[i].state == _PREFILL]
+        scan_rows = [
+            i for i in rows
+            if self.slots[i].state == _DECODE or finishing(self.slots[i])
+        ]
+        if not pf_rows:
+            return self._decode(now) if scan_rows else False
+        if not scan_rows:
+            return self._prefill_round(now)
+
+        page = self.ecfg.page_size
+        c = _bucket(max(c_true(self.slots[i]) for i in pf_rows), self.ecfg.prefill_chunk)
+        bp = _bucket(len(pf_rows), self.ecfg.max_slots)
+        nb = _bucket(len(scan_rows), self.ecfg.max_slots)
+
+        def scan_pos0(s: _Slot) -> int:
+            return s.pos if s.state == _DECODE else s.target.size
+
+        pages = _bucket(
+            max(
+                max(-(-(self.slots[i].prefill_done + c) // page) for i in pf_rows),
+                max(-(-(scan_pos0(self.slots[i]) + q) // page) for i in scan_rows),
+            ),
+            self.pcfg.max_pages,
+        )
+        self._shapes_seen.add(("fused", q, c, bp, nb, pages))
+
+        pf_tokens = np.zeros((bp, c), np.int32)
+        pf_table = np.zeros((bp, pages), np.int32)
+        pf_meta = np.zeros((bp, 5), np.int32)
+        pf_meta[:, 1] = 1  # pad rows: kv_len 1 (any valid value)
+        pf_keys = np.zeros((bp, 2), np.uint32)
+        for m, i in enumerate(pf_rows):
+            s = self.slots[i]
+            ct = c_true(s)
+            start = s.prefill_done
+            pf_tokens[m, :ct] = s.target[start : start + ct]
+            pf_table[m] = self.kv.table_rows([i], pages)[0]
+            pf_keys[m] = s.key
+            consume = finishing(s) and s.replay is None  # replays never re-sample
+            pf_meta[m] = (start, start + ct, ct - 1, int(s.req.greedy), int(consume))
+
+        table = np.zeros((nb, pages), np.int32)
+        state = np.zeros((nb, 5), np.int32)
+        state[:, 2] = 1  # pad rows: greedy (no PRNG consumption)
+        keys = np.zeros((nb, 2), np.uint32)
+        join = np.full((nb,), -1, np.int32)
+        for r, i in enumerate(scan_rows):
+            s = self.slots[i]
+            table[r] = self.kv.table_rows([i], pages)[0]
+            keys[r] = s.key
+            if s.state == _DECODE:
+                state[r] = (s.tok_next, s.pos, int(s.req.greedy), 0, 0)
+            else:
+                replay = s.replay is not None
+                join[r] = pf_rows.index(i)
+                state[r] = (
+                    0, s.target.size, int(s.req.greedy),
+                    s.saved_tok if replay else 0, int(replay),
+                )
+
+        pf_tok, toks, keys_out, self.pools = self._fused_steps[q](
+            self.params, self.pools, pf_table, pf_tokens, pf_meta, pf_keys,
+            table, state, keys, join,
+        )
+        pf_tok = np.asarray(pf_tok)
+        toks = np.asarray(toks)
+        keys_out = np.asarray(keys_out)
+        self.stats["fused_dispatches"] += 1
+        self.stats["decode_rows_live"] += len(
+            [i for i in scan_rows if self.slots[i].state == _DECODE]
+        )
+        self.stats["decode_rows_padded"] += nb - len(scan_rows)
+
+        for m, i in enumerate(pf_rows):
+            self.slots[i].prefill_done += c_true(self.slots[i])
+        for r, i in enumerate(scan_rows):
+            s = self.slots[i]
+            s.key = keys_out[r]
+            if s.state == _DECODE:
+                self._consume_quantum(i, toks[r, :q], s.pos + q, now)
+                continue
+            end_pos = s.target.size + q
+            s.state = _DECODE
+            if s.replay is not None:
+                s.replay = None  # the first token was emitted pre-preemption
+                self._consume_quantum(i, toks[r, :q], end_pos, now)
+                continue
+            s.t_first_token = now
+            if self._append_token(i, int(pf_tok[join[r]]), now):
+                self.stats["tokens_overrun"] += q  # retired on its 1st token
+                continue
+            self._consume_quantum(i, toks[r, :q], end_pos, now)
+        return True
+
+    def _consume_quantum(
+        self, idx: int, emitted: np.ndarray, end_pos: int, now: float
+    ) -> None:
+        """Fold a dispatch's emitted tokens for one row into its slot:
+        append until EOS/max-new retirement (counting the overrun), else
+        adopt the last token as the next decode input and advance ``pos``
+        to the dispatch's final write position."""
+        slot = self.slots[idx]
+        for j, tok in enumerate(emitted):
+            if self._append_token(idx, int(tok), now):
+                self.stats["tokens_overrun"] += len(emitted) - 1 - j
+                return
+        slot.tok_next = int(emitted[-1])
+        slot.pos = end_pos
+
+    # -- split prefill ------------------------------------------------------
 
     def _prefill_round(self, now: float) -> bool:
         """ONE batched dispatch advancing every prefilling slot by one chunk
         (per-row start/kv_len/table — rows are independent requests).  A
-        row's final chunk also samples its first token in-graph."""
+        row's final chunk also samples its first token in-graph (adopted
+        unless the row is a recompute replay, whose first token was emitted
+        before its preemption)."""
         rows = [
             i for i, s in enumerate(self.slots)
             if s is not None and s.state == _PREFILL
@@ -346,9 +829,11 @@ class Engine:
         # lone-prefill batching: with decode busy and more requests queued, a
         # single fresh admission waits one cycle so the next retirement's
         # admission can share its dispatch (single-row prefills dominate the
-        # prefill bill in steady state otherwise)
+        # prefill bill in steady state otherwise).  Only relevant in split
+        # mode — the fused path batches a lone prefill with decode anyway.
         if (
-            len(rows) == 1
+            not self.ecfg.fused
+            and len(rows) == 1
             and self.waiting
             and not self.slots[rows[0]].pf_deferred
             and sum(
@@ -359,11 +844,18 @@ class Engine:
             return False
         c = self.ecfg.prefill_chunk
         page = self.ecfg.page_size
-        nb = _bucket(len(rows), self.ecfg.max_slots)
+
+        rows = self._secure_rows(
+            rows,
+            lambda s: s.prefill_done + min(c, s.target.size - s.prefill_done),
+        )
+        if not rows:
+            return False
         c_trues = [
-            min(c, self.slots[i].req.prompt.size - self.slots[i].prefill_done)
+            min(c, self.slots[i].target.size - self.slots[i].prefill_done)
             for i in rows
         ]
+        nb = _bucket(len(rows), self.ecfg.max_slots)
         # the view must address the full PADDED chunk width [start, start+c):
         # pad-column write-backs beyond a slot's allocation land in the dummy
         # page via its dummy table entries, never clamp onto real cells
@@ -381,7 +873,7 @@ class Engine:
         for r, (i, ct) in enumerate(zip(rows, c_trues)):
             slot = self.slots[i]
             start = slot.prefill_done
-            tokens[r, :ct] = slot.req.prompt[start : start + ct]
+            tokens[r, :ct] = slot.target[start : start + ct]
             table[r] = self.kv.table_rows([i], pages)[0]
             meta[r] = (start, start + ct, ct - 1, int(slot.req.greedy))
             keys[r] = slot.key
@@ -392,15 +884,23 @@ class Engine:
         self.stats["prefill_dispatches"] += 1
         done_rows = [
             (r, i) for r, (i, ct) in enumerate(zip(rows, c_trues))
-            if self.slots[i].prefill_done + ct == self.slots[i].req.prompt.size
+            if self.slots[i].prefill_done + ct == self.slots[i].target.size
         ]
         toks_h = np.asarray(toks) if done_rows else None
         keys_h = np.asarray(keys_out) if done_rows else None
         for r, (i, ct) in enumerate(zip(rows, c_trues)):
             slot = self.slots[i]
             slot.prefill_done += ct
-            if slot.prefill_done < slot.req.prompt.size:
+            if slot.prefill_done < slot.target.size:
                 continue  # mid-prompt chunk: discard tok, keep the unsplit key
+            if slot.replay is not None:
+                # recompute replay complete: resume decode with the token
+                # emitted before preemption — never re-sample it
+                slot.pos = slot.replay.size
+                slot.tok_next = slot.saved_tok
+                slot.replay = None
+                slot.state = _DECODE
+                continue
             # prompt complete: the dispatch sampled the first token in-graph
             # with the same pick path + PRNG schedule as serve.generate
             slot.key = keys_h[r]
@@ -411,26 +911,26 @@ class Engine:
             self._append_token(i, slot.tok_next, now)
         return True
 
-    # -- decode -------------------------------------------------------------
+    # -- split decode -------------------------------------------------------
 
     def _decode(self, now: float) -> bool:
+        """One decode-quantum dispatch over every decoding slot (the pure
+        path — also the fused round's degenerate all-decode case)."""
         rows = [i for i, s in enumerate(self.slots) if s is not None and s.state == _DECODE]
         if not rows:
             return False
-        # quantum: pick the compiled length with the best useful-tokens-per-
-        # cost.  A row contributes min(q, remaining) useful tokens; cost is
-        # q steps for every row plus a fixed per-dispatch overhead (~2.5
-        # step-equivalents: scheduling, gather/write-back, host sync).
-        # This retires clusters of near-done rows with the short quantum
-        # without dragging long rows down to one-token dispatches.
         rem = [
             self.slots[i].req.max_new_tokens - len(self.slots[i].generated)
             for i in rows
         ]
-        q = max(
-            self._quanta,
-            key=lambda qq: sum(min(qq, x) for x in rem) / (qq + 2.5),
+        q = self._choose_quantum(rem)
+
+        rows = self._secure_rows(
+            rows, lambda s: min(s.pos + q, self._cap_tokens(s.req))
         )
+        if not rows:
+            return False
+
         page = self.ecfg.page_size
         nb = _bucket(len(rows), self.ecfg.max_slots)
         pages = _bucket(
@@ -459,14 +959,6 @@ class Engine:
 
         for r, i in enumerate(rows):
             slot = self.slots[i]
-            retired = False
-            for j in range(q):
-                if self._append_token(i, int(toks[r, j]), now):
-                    retired = True
-                    self.stats["tokens_overrun"] += q - 1 - j
-                    break
-            if not retired:
-                slot.tok_next = int(toks[r, -1])
-                slot.key = keys_out[r]
-                slot.pos += q
+            slot.key = keys_out[r]
+            self._consume_quantum(i, toks[r, :q], slot.pos + q, now)
         return True

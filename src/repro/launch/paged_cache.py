@@ -14,13 +14,24 @@ there, so a bucketed dispatch never touches a live slot's cells.  Freeing a
 retired request returns its blocks for mid-flight admission of queued
 requests — the engine's continuous-batching lever.
 
-Everything here is host bookkeeping (numpy); the jitted dispatches receive
+Under block pressure the engine *preempts*: :func:`swap_out` snapshots a
+victim slot's live cells to host memory so its blocks can be freed, and
+:func:`swap_in` restores the snapshot into freshly allocated (generally
+different) blocks on re-admission — byte-identical contents, because the
+snapshot is keyed by *logical* position and the block table re-maps it.
+The dummy block is never part of a snapshot (a slot's live cells live in
+its own blocks by construction; ``slot_cells`` asserts it).
+
+Everything here is host bookkeeping (numpy) except the two swap helpers,
+which gather/scatter pool cells on device; the jitted dispatches receive
 plain int32 index arrays derived from the tables.
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 DUMMY_BLOCK = 0
@@ -130,3 +141,77 @@ class PagedKVCache:
         page = self.cfg.page_size
         blk = int(self.tables[slot, pos // page])
         return blk * page + pos % page
+
+    def slot_cells(self, slot: int, n_tokens: int) -> np.ndarray:
+        """(n_tokens,) physical pool cells of logical positions
+        [0, n_tokens) in ``slot``, in logical order — the index array the
+        swap helpers gather/scatter through.  Every position must be inside
+        the slot's allocation; the dummy block is never a live cell."""
+        page = self.cfg.page_size
+        need = -(-n_tokens // page)
+        if need > int(self.n_pages[slot]):
+            raise ValueError(
+                f"slot {slot}: {n_tokens} tokens exceed its "
+                f"{int(self.n_pages[slot])}-page allocation"
+            )
+        pos = np.arange(n_tokens)
+        blocks = self.tables[slot, pos // page]
+        assert not np.any(blocks == DUMMY_BLOCK), "live cell in the dummy block"
+        return (blocks.astype(np.int64) * page + pos % page).astype(np.int32)
+
+
+# -- preemption: host-side block snapshots ----------------------------------
+
+def swap_out(pools, kv: "PagedKVCache", slot: int, n_tokens: int):
+    """Snapshot ``slot``'s live cells — logical positions [0, n_tokens) —
+    to host memory (numpy), so the caller can ``release`` the slot's blocks.
+
+    ``pools`` is the engine-owned device pool pytree (one token-major leaf
+    per segment, cell axis second: (layers, T, ...)); the snapshot pytree
+    mirrors it with the cell axis re-indexed to logical order.  The
+    transfer is forced synchronously (``np.asarray``) so later donated
+    dispatches cannot invalidate the buffers mid-read.
+    """
+    cells = kv.slot_cells(slot, n_tokens)
+    return jax.tree.map(lambda a: np.asarray(a[:, cells]), pools)
+
+
+_swap_scatter = None  # lazily jitted so the backend is known at first use
+
+
+def swap_in(pools, kv: "PagedKVCache", slot: int, snapshot):
+    """Restore a :func:`swap_out` snapshot into ``slot``'s current blocks.
+
+    The caller re-allocates first (``ensure_capacity`` for at least the
+    snapshot's token count); blocks will generally differ from the ones
+    snapshotted — contents land byte-identical anyway because both sides
+    index by logical position.  Returns the updated pools pytree; the input
+    pools are donated where the backend supports it (the scatter updates
+    the pool buffers in place instead of copying every leaf per swap-in),
+    so callers must rebind — exactly the engine's ``self.pools = ...``
+    discipline for its donated dispatches.  Cell counts are bucketed to
+    powers of two to bound retraces; pad cells point at the dummy page,
+    which absorbs their zero writes like every other bucketed dispatch's
+    padding.
+    """
+    global _swap_scatter
+    if _swap_scatter is None:
+        donate = (0,) if jax.default_backend() != "cpu" else ()
+        _swap_scatter = jax.jit(
+            lambda p, cells, s: jax.tree.map(
+                lambda a, sl: a.at[:, cells].set(sl), p, s
+            ),
+            donate_argnums=donate,
+        )
+    n_tokens = next(iter(jax.tree.leaves(snapshot))).shape[1]
+    cells = kv.slot_cells(slot, n_tokens)
+    nb = 1 << max(0, n_tokens - 1).bit_length()
+    if pad := nb - n_tokens:
+        cells = np.concatenate([cells, np.zeros(pad, np.int32)])  # dummy cells
+        snapshot = jax.tree.map(
+            lambda s: np.concatenate(
+                [s, np.zeros((s.shape[0], pad) + s.shape[2:], s.dtype)], axis=1
+            ),
+            snapshot,
+        )
+    return _swap_scatter(pools, jnp.asarray(cells), snapshot)

@@ -24,6 +24,11 @@ loop (cache still donated per step where the backend supports it).
 Throughput accounting: one full prefill+decode step runs *before* the timer
 starts, so jit compilation never pollutes the reported tok/s.
 
+This driver serves ONE fixed-shape lockstep batch; ``launch.engine`` serves
+streaming heterogeneous traffic (paged KV cache, fused prefill+decode,
+preemption) with per-request token streams bit-identical to this module's
+``generate`` — see docs/architecture.md for how the two relate.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch gemma-2b --reduced \
       --batch 4 --prompt-len 32 --gen 16 \
@@ -160,6 +165,11 @@ def generate(
 
 
 def main() -> None:
+    """CLI entry: serve a (reduced) arch with fp weights, then optionally
+    re-serve it crossbar-deployed (``--cim``) and report tok/s, token
+    agreement, reprogramming speedups, pool wear, and the endurance
+    horizon.  For streaming heterogeneous traffic use ``launch.engine``
+    (continuous batching) instead; this driver serves one lockstep batch."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")

@@ -146,6 +146,43 @@ def make_decode_loop(cfg: ArchConfig, n_steps: int, *, greedy: bool = True):
     return decode_loop
 
 
+def _row_pick(logits, keys, greedy, consume=None):
+    """Per-row token pick — THE sampling path and PRNG split schedule shared
+    by every ragged dispatch (decode loop, prefill chunk, fused step), so
+    their streams stay bit-identical to the solo ``serve.generate`` pick.
+
+    logits (B, S, V) — the last position samples; keys (B, 2); greedy (B,)
+    bool — greedy rows take argmax and never consume randomness (matching
+    the solo loop's schedule); ``consume`` optionally masks which sampled
+    rows' keys really advance (rows whose pick the caller will discard —
+    mid-prompt chunks, replayed tokens — must not burn a split).
+    Returns (tok (B,) i32, keys_out (B, 2)).
+    """
+    greedy_tok = jnp.argmax(logits[:, -1], axis=-1)
+    split = jax.vmap(jax.random.split)(keys)  # (B, 2, 2)
+    keys_new, subs = split[:, 0], split[:, 1]
+    sampled = jax.vmap(jax.random.categorical)(subs, logits[:, -1])
+    tok = jnp.where(greedy, greedy_tok, sampled).astype(jnp.int32)
+    advance = ~greedy if consume is None else (consume & ~greedy)
+    keys_out = jnp.where(advance[:, None], keys_new, keys)
+    return tok, keys_out
+
+
+def _ragged_scan_body(params, cfg: ArchConfig, greedy):
+    """The one decode-quantum scan body: ``make_paged_decode_loop`` and the
+    fused step's decode sub-batch run this exact closure, so fused-vs-split
+    is purely a scheduling difference.  Carry: (caches, tok (B, 1), keys,
+    pos (B,)); emits each step's (B,) tokens."""
+
+    def body(carry, _):
+        caches, tok, keys, pos = carry
+        logits, caches = api.decode_step(params, cfg, caches, tok, pos)
+        nxt, keys = _row_pick(logits, keys, greedy)
+        return (caches, nxt[:, None], keys, pos + 1), nxt
+
+    return body
+
+
 def make_paged_decode_loop(cfg: ArchConfig, n_steps: int, page_size: int):
     """Ragged continuous-batching decode quantum as ONE ``lax.scan`` dispatch.
 
@@ -172,28 +209,94 @@ def make_paged_decode_loop(cfg: ArchConfig, n_steps: int, page_size: int):
         # gather every slot's pages ONCE; the scan then runs the ordinary
         # contiguous-cache decode step (vector positions) against the view
         caches = api.paged_view(cfg, pools, table, page_size)
-
-        def body(carry, _):
-            caches, tok, keys, pos = carry
-            logits, caches = api.decode_step(params, cfg, caches, tok, pos)
-            greedy_tok = jnp.argmax(logits[:, -1], axis=-1)
-            split = jax.vmap(jax.random.split)(keys)  # (B, 2, 2)
-            keys_new, subs = split[:, 0], split[:, 1]
-            sampled = jax.vmap(jax.random.categorical)(subs, logits[:, -1])
-            nxt = jnp.where(greedy, greedy_tok, sampled).astype(jnp.int32)[:, None]
-            # greedy rows never consume randomness (matching the solo loop's
-            # schedule); their key lane is dead state either way
-            keys_new = jnp.where(greedy[:, None], keys, keys_new)
-            return (caches, nxt, keys_new, pos + 1), nxt[:, 0]
-
         (caches, _, keys, _), toks = jax.lax.scan(
-            body, (caches, tok0, keys, pos0), None, length=n_steps
+            _ragged_scan_body(params, cfg, greedy),
+            (caches, tok0, keys, pos0), None, length=n_steps,
         )
         # write back only the quantum's new cells, one scatter per dispatch
         pools = api.paged_writeback(cfg, pools, caches, table, pos0, n_steps, page_size)
         return jnp.swapaxes(toks, 0, 1), pools, keys
 
     return decode_loop
+
+
+def make_fused_step(cfg: ArchConfig, n_steps: int, page_size: int):
+    """Fused prefill+decode dispatch: ONE bucketed dispatch per engine cycle
+    in which some rows are prefill chunks and others are decode quanta.
+
+    Returns fused_step(params, pools,
+        pf_table (Bp, P) i32, pf_tokens (Bp, C) i32, pf_meta (Bp, 5) i32,
+        pf_keys (Bp, 2) u32,
+        table (B, P) i32, state (B, 5) i32, keys (B, 2) u32, join (B,) i32)
+    -> (pf_tok (Bp,) i32, toks (B, n_steps) i32, keys_out (B, 2), pools).
+
+    Two sub-batches, one XLA computation, one host round trip:
+
+      * **Chunk sub-batch** (prefill rows only, width C bucketed to the
+        widest live chunk): exactly the ``make_prefill_chunk_step`` compute —
+        ``pf_meta`` rows are [start, kv_len, last_idx, greedy, consume];
+        ``pf_tok`` samples each row's next token in-graph (``consume``
+        marks rows whose PRNG key this pick really advances: final-chunk
+        rows that are not replaying an already-emitted token).
+      * **Decode sub-batch** (decode rows + rows whose prompt finishes in
+        this very dispatch): exactly the ``make_paged_decode_loop`` scan —
+        ``state`` rows are [tok, pos, greedy, tok_override, use_override].
+        ``join`` maps each scan row to its chunk row (-1 for plain decode
+        rows): a finishing row's scan seeds from its in-graph first token
+        ``pf_tok[join]`` and continuation key — it rolls straight from
+        prefill into an ``n_steps``-token decode quantum *inside the same
+        dispatch*, no dead cycle between phases.  ``use_override`` rows
+        (recompute re-admissions replaying prompt+generated) seed from
+        ``tok_override`` — the token they emitted before preemption —
+        without consuming PRNG: its sampling already happened once.
+
+    Keeping the two sub-batches separate (rather than widening every row to
+    the chunk width) means decode rows pay exactly the decode-loop compute,
+    the chunk stage runs at its own (usually much smaller) row bucket, and
+    both stages are literally the same code the split dispatches run —
+    ``_row_pick`` and ``_ragged_scan_body`` are shared with
+    :func:`make_paged_decode_loop` / :func:`make_prefill_chunk_step` — so
+    fused-vs-split is purely a scheduling difference and every row's token
+    stream stays bit-identical to a solo ``launch.serve.generate`` run
+    (pinned in tests/test_engine.py).  The scan's view is gathered after the
+    chunk write-back, so a finishing row's prompt KV is visible to its own
+    decode steps.
+    """
+
+    def fused_step(params, pools, pf_table, pf_tokens, pf_meta, pf_keys,
+                   table, state, keys, join):
+        params = _serving_params(params)
+
+        # ---- chunk sub-batch: one prefill chunk per prefilling row --------
+        start, kv_len, last_idx = pf_meta[:, 0], pf_meta[:, 1], pf_meta[:, 2]
+        pf_greedy = pf_meta[:, 3].astype(bool)
+        pf_consume = pf_meta[:, 4].astype(bool)
+        caches = api.paged_view(cfg, pools, pf_table, page_size)
+        logits, caches = api.chunk_on_views(
+            params, cfg, caches, pf_tokens, start, kv_len, last_idx
+        )
+        pf_tok, pf_keys_out = _row_pick(logits, pf_keys, pf_greedy, consume=pf_consume)
+        bp, c = pf_tokens.shape
+        start_b = jnp.broadcast_to(jnp.atleast_1d(start), (bp,))
+        pools = api.paged_writeback(cfg, pools, caches, pf_table, start_b, c, page_size)
+
+        # ---- decode quantum: decode rows + just-finished prefill rows -----
+        use_join = join >= 0
+        jidx = jnp.clip(join, 0)
+        tok0 = jnp.where(use_join, pf_tok[jidx], state[:, 0])
+        tok0 = jnp.where(state[:, 4].astype(bool), state[:, 3], tok0)[:, None]
+        keys0 = jnp.where(use_join[:, None], pf_keys_out[jidx], keys)
+        pos0 = state[:, 1]
+        greedy = state[:, 2].astype(bool)
+        caches = api.paged_view(cfg, pools, table, page_size)
+        (caches, _, keys_out, _), toks = jax.lax.scan(
+            _ragged_scan_body(params, cfg, greedy),
+            (caches, tok0, keys0, pos0), None, length=n_steps,
+        )
+        pools = api.paged_writeback(cfg, pools, caches, table, pos0, n_steps, page_size)
+        return pf_tok, jnp.swapaxes(toks, 0, 1), keys_out, pools
+
+    return fused_step
 
 
 def make_prefill_chunk_step(cfg: ArchConfig, page_size: int):
@@ -217,12 +320,7 @@ def make_prefill_chunk_step(cfg: ArchConfig, page_size: int):
         logits, pools = api.prefill_chunk(
             params, cfg, pools, table, tokens, start, kv_len, last_idx, page_size
         )
-        greedy_tok = jnp.argmax(logits[:, -1], axis=-1)
-        split = jax.vmap(jax.random.split)(keys)
-        keys_new, subs = split[:, 0], split[:, 1]
-        sampled = jax.vmap(jax.random.categorical)(subs, logits[:, -1])
-        tok = jnp.where(greedy, greedy_tok, sampled).astype(jnp.int32)
-        keys_out = jnp.where(greedy[:, None], keys, keys_new)
+        tok, keys_out = _row_pick(logits, keys, greedy)
         return tok, keys_out, pools
 
     return chunk_step

@@ -73,6 +73,14 @@ def prefill_chunk(params, cfg: ArchConfig, pools, table, tokens, start, kv_len, 
     )
 
 
+def chunk_on_views(params, cfg: ArchConfig, caches, tokens, start, kv_len, last_idx):
+    """Chunk step against gathered cache views (fused dispatch): the caller
+    owns the ``paged_view`` gather and the ``paged_writeback`` scatter."""
+    return transformer.chunk_on_views(
+        params, cfg, caches, tokens, start, kv_len, last_idx
+    )
+
+
 def merge_prefill_cache(cfg: ArchConfig, full_cache, pf_cache):
     """Write prefill caches (prompt length) into a zero full-length cache.
 

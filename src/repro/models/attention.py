@@ -161,9 +161,12 @@ def blockwise_attention(
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D) with Hq % Hkv == 0.
     q_offset: absolute position of q[0] (prefill continuation / decode);
       scalar, or a (B,) vector of per-row offsets (batched ragged prefill
-      chunks — every row of the batch sits at its own prompt position).
+      chunks — every row of the batch sits at its own prompt position, as
+      in the engine's fused prefill+decode dispatches).
     kv_valid_len: optional scalar or (B,) vector — positions >= it are
-      masked (cache tail / per-slot valid lengths).
+      masked (cache tail / per-slot valid lengths).  The Pallas flash
+      kernel (repro.kernels.flash_attention) implements the same per-row
+      contract with both values traced in SMEM.
     skip_masked_blocks: when True, fully-masked key blocks contribute via a
       zero multiplier (their matmuls still run under scan; the *compile-time
       skip* variant is a hillclimb lever — see EXPERIMENTS.md §Perf).

@@ -197,7 +197,10 @@ def attention_chunk_step(
     chunked prefill equal full prefill; the shared blockwise-attention
     kernel with traced per-row ``q_offset`` keeps each row bit-identical to
     its solo prefill (key blocks partition the same way — padding only
-    appends masked columns).
+    appends masked columns).  Extent-1 decode rows do NOT ride this path:
+    the engine's fused dispatch runs them through the decode-quantum scan
+    sub-batch (``launch.steps._ragged_scan_body``), whose single-step
+    ``decode_attention`` normalization is the one solo decode uses.
     """
     b, c, _ = x.shape
     start = jnp.asarray(start)

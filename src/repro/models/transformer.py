@@ -18,7 +18,7 @@ Interface (used by launch/, runtime/, examples/):
 from __future__ import annotations
 
 import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -309,6 +309,59 @@ def decode_step_paged(
     return logits, pools
 
 
+def chunk_on_views(
+    params: Params,
+    cfg: ArchConfig,
+    caches: list,
+    tokens: jax.Array,
+    start: jax.Array,
+    kv_len: jax.Array,
+    last_idx: jax.Array,
+) -> tuple[jax.Array, list]:
+    """Chunk continuation against contiguous cache views.
+
+    The views-level core of :func:`prefill_chunk`, reusable by the fused
+    prefill+decode dispatch (``launch.steps.make_fused_step``): the caller
+    owns the ``paged_view`` gather and the ``paged_writeback`` scatter, so a
+    fused dispatch can run this chunk step *and* a decode-quantum scan as
+    one XLA computation.
+
+    Args:
+      caches: per-segment contiguous cache views (the ``init_cache`` layout,
+        i.e. what ``paged_view`` returns).
+      tokens: (B, C) int32 — row r holds chunk positions
+        [start_r, start_r + C) of its own request; columns past a row's true
+        extent are padding (masked by causality + ``kv_len``; the written-
+        back pad cells are overwritten by the row's own future tokens before
+        any masked-visible read).
+      start / kv_len / last_idx: (B,) int32 (scalars also accepted) — chunk
+        start position, valid cache length after the writes, and the chunk
+        column whose logits each row emits.
+
+    Returns (logits (B, 1, V) — row r's column ``last_idx_r`` — and the
+    updated cache views, same layout as ``caches``).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = layers.embed(params["embed"], tokens, dtype)
+    if getattr(cfg, "embed_scale", False):
+        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
+
+    new_caches = []
+    for (kind, _), p_stack, cache_stack in zip(segments_of(cfg), params["segments"], caches):
+        kw = _fwd_kwargs(cfg, kind)
+
+        def body(x_c, pc, _kw=kw):
+            p_layer, c_layer = pc
+            return blocks.attn_block_chunk_step(
+                p_layer, cfg, x_c, c_layer, start, kv_len, **_kw
+            )
+
+        x, seg_cache = jax.lax.scan(body, x, (p_stack, cache_stack))
+        new_caches.append(seg_cache)
+    x_last = jnp.take_along_axis(x, jnp.reshape(last_idx, (-1, 1, 1)), axis=1)
+    return _logits(params, cfg, x_last), new_caches
+
+
 def prefill_chunk(
     params: Params,
     cfg: ArchConfig,
@@ -331,29 +384,14 @@ def prefill_chunk(
 
     Returns (logits (B, 1, V), new pools).
     """
-    dtype = jnp.dtype(cfg.dtype)
-    x = layers.embed(params["embed"], tokens, dtype)
-    if getattr(cfg, "embed_scale", False):
-        x = x * jnp.asarray(cfg.d_model**0.5, dtype)
     b, c = tokens.shape
     start_b = jnp.broadcast_to(jnp.atleast_1d(jnp.asarray(start)), (b,))
-
     caches = paged_view(cfg, pools, table, page_size)
-    new_caches = []
-    for (kind, _), p_stack, cache_stack in zip(segments_of(cfg), params["segments"], caches):
-        kw = _fwd_kwargs(cfg, kind)
-
-        def body(x_c, pc, _kw=kw):
-            p_layer, c_layer = pc
-            return blocks.attn_block_chunk_step(
-                p_layer, cfg, x_c, c_layer, start, kv_len, **_kw
-            )
-
-        x, seg_cache = jax.lax.scan(body, x, (p_stack, cache_stack))
-        new_caches.append(seg_cache)
+    logits, new_caches = chunk_on_views(
+        params, cfg, caches, tokens, start, kv_len, last_idx
+    )
     pools = paged_writeback(cfg, pools, new_caches, table, start_b, c, page_size)
-    x_last = jnp.take_along_axis(x, jnp.reshape(last_idx, (-1, 1, 1)), axis=1)
-    return _logits(params, cfg, x_last), pools
+    return logits, pools
 
 
 def decode_step(

@@ -2,9 +2,11 @@
 
 The acceptance contract: every request served by the engine — mixed prompt
 lengths, EOS at different steps, mid-flight admission into freed slots,
-chunked prefill, greedy and sampled — emits a token stream bit-identical to
-running that request alone through ``launch.serve.generate`` with the same
-PRNG seed, for all three serving materializations.
+chunked prefill, fused prefill+decode dispatches, preemption and
+re-admission under block pressure, greedy and sampled — emits a token
+stream bit-identical to running that request alone through
+``launch.serve.generate`` with the same PRNG seed, for all three serving
+materializations.
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import pytest
 
 from repro.configs import get_arch
 from repro.core.planner import CrossbarSpec, PlannerConfig, build_deployment, deploy_params
-from repro.launch import steps
+from repro.launch import paged_cache, steps
 from repro.launch.engine import Engine, EngineConfig, Request
 from repro.launch.paged_cache import DUMMY_BLOCK, BlockAllocator, PagedCacheConfig, PagedKVCache
 from repro.launch.serve import generate
@@ -220,7 +222,7 @@ def test_engine_parity_mixed_ragged_requests(gemma):
     for req, res in zip(reqs, results):
         assert res.tokens == _solo(cfg, params, req), f"rid {req.rid}"
     # 4 requests through 2 slots: continuous batching actually reused slots
-    assert eng.stats["decode_dispatches"] >= 2
+    assert eng.stats["decode_dispatches"] + eng.stats["fused_dispatches"] >= 2
     assert eng.stats["tokens_emitted"] == sum(g for _, g, _, _ in specs)
     assert eng.stats["compiled_variants"] <= 8  # bucketing bounds variants
 
@@ -307,6 +309,191 @@ def test_engine_parity_all_materializations(deployed, materialize):
     )
     for req, res in zip(reqs, eng.run(reqs)):
         assert res.tokens == _solo(cfg, p_hat, req), f"rid {req.rid} ({materialize})"
+
+
+# ---------------------------------------------------------------------------
+# Fused prefill+decode dispatch
+# ---------------------------------------------------------------------------
+
+def test_fused_and_split_engines_emit_identical_streams(gemma):
+    """The fused dispatch is a scheduling change, not a numerics change:
+    the same trace served fused and split produces identical per-request
+    token streams (and the fused engine actually used fused dispatches)."""
+    cfg, params = gemma
+    specs = [(11, 6, True, 0), (7, 7, False, 3), (14, 4, True, 1), (5, 5, False, 2)]
+    kw = dict(max_slots=2, page_size=8, max_seq_len=64, prefill_chunk=8,
+              decode_quantum=4)
+    fused = Engine(cfg, params, EngineConfig(fused=True, **kw))
+    rf = fused.run(_mk_requests(cfg, specs))
+    split = Engine(cfg, params, EngineConfig(fused=False, **kw))
+    rs = split.run(_mk_requests(cfg, specs))
+    for a, b in zip(rf, rs):
+        assert a.tokens == b.tokens, f"rid {a.rid}"
+    assert fused.stats["fused_dispatches"] >= 1
+    assert split.stats["fused_dispatches"] == 0
+    assert split.stats["decode_dispatches"] >= 1
+
+
+def test_fused_mid_batch_prompt_finish_rolls_into_decode(gemma):
+    """A row whose prompt finishes inside a fused dispatch samples its first
+    token in-graph and decodes the rest of the quantum in the same dispatch
+    — stream still bit-identical to solo, with fewer total dispatches than
+    one-per-phase scheduling would need."""
+    cfg, params = gemma
+    # one long decoder occupying the batch + one late arrival whose prefill
+    # finishes mid-flight while the other row decodes
+    specs = [(6, 12, False, 7), (9, 6, True, 0)]
+    reqs = _mk_requests(cfg, specs)
+    reqs[1].arrival_time = 0.01
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=2, page_size=8, max_seq_len=64, prefill_chunk=16,
+                     decode_quantum=4, fused=True),
+    )
+    results = eng.run(reqs)
+    for req, res in zip(reqs, results):
+        assert res.tokens == _solo(cfg, params, req), f"rid {req.rid}"
+    assert eng.stats["fused_dispatches"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# Preemption under block pressure
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preempt", ["swap", "recompute"])
+@pytest.mark.parametrize("fused", [True, False])
+def test_preemption_parity_under_block_pressure(gemma, preempt, fused):
+    """A pool too small for the concurrent working set forces preemption;
+    every stream — including the preempted + re-admitted request — stays
+    bit-identical to solo generation for both victim-KV policies."""
+    cfg, params = gemma
+    specs = [(9, 8, True, 0), (11, 10, False, 3), (8, 12, True, 1)]
+    reqs = _mk_requests(cfg, specs)
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=3, page_size=4, max_seq_len=32, prefill_chunk=4,
+                     decode_quantum=4, num_blocks=9, fused=fused, preempt=preempt),
+    )
+    # 8 usable blocks vs ceil(16/4)+ceil(20/4)+ceil(19/4) = 14 blocks of
+    # concurrent worst-case demand
+    results = eng.run(reqs)
+    for req, res in zip(reqs, results):
+        assert res.tokens == _solo(cfg, params, req), f"rid {req.rid} ({preempt})"
+    assert eng.stats["preemptions"] >= 1
+    assert eng.stats["readmissions"] == eng.stats["preemptions"]
+    if preempt == "swap":
+        assert eng.stats["swap_ins"] >= 1
+    else:
+        assert eng.stats["swap_ins"] == 0
+
+
+def test_free_list_exhaustion_mid_prefill_preempts_decode(gemma):
+    """A higher-priority prompt running out of blocks *mid-prefill* swaps
+    out the lowest-priority decode slot rather than stalling; both streams
+    stay exact."""
+    cfg, params = gemma
+    # rid 0 (higher priority): long prompt prefilling in small chunks;
+    # rid 1: short prompt, long generation — decodes ahead, eats blocks
+    specs = [(24, 2, True, 0), (4, 16, True, 1)]
+    reqs = _mk_requests(cfg, specs)
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=2, page_size=4, max_seq_len=32, prefill_chunk=4,
+                     decode_quantum=4, num_blocks=9, fused=True, preempt="swap"),
+    )
+    results = eng.run(reqs)
+    for req, res in zip(reqs, results):
+        assert res.tokens == _solo(cfg, params, req), f"rid {req.rid}"
+    assert eng.stats["preemptions"] >= 1
+
+
+def test_overcommitted_trace_completes(gemma):
+    """More concurrent requests than the pool has blocks for: lazy
+    allocation admits them all and preemption keeps every stream exact —
+    the reserve-up-front policy could not even have admitted this mix."""
+    cfg, params = gemma
+    specs = [(6, 10, True, s) for s in range(5)]
+    specs[2] = (6, 10, False, 2)  # one sampled row rides along
+    reqs = _mk_requests(cfg, specs)
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=4, page_size=4, max_seq_len=32, prefill_chunk=4,
+                     decode_quantum=4, num_blocks=7, fused=True, preempt="swap"),
+    )
+    # 6 usable blocks; each request's footprint is ceil(15/4) = 4 blocks, so
+    # even two concurrent requests over-commit the pool
+    results = eng.run(reqs)
+    for req, res in zip(reqs, results):
+        assert res.tokens == _solo(cfg, params, req), f"rid {req.rid}"
+    assert len(results) == len(reqs)
+    assert eng.stats["preemptions"] >= 1
+
+
+def test_submit_rejects_requests_larger_than_pool():
+    cfg = get_arch("gemma-2b", reduced=True)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=1, page_size=4, max_seq_len=32, num_blocks=3),
+    )
+    with pytest.raises(ValueError, match="usable blocks"):
+        eng.submit(Request(rid=0, prompt=np.arange(6), max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# Swap-out / swap-in at the paged-cache level
+# ---------------------------------------------------------------------------
+
+def test_swap_roundtrip_restores_bytes_into_different_blocks():
+    """swap_out -> release -> re-allocate -> swap_in restores every live
+    cell byte-identical even though the physical blocks differ; the dummy
+    block is never allocated, snapshotted, or written by the restore."""
+    kv = PagedKVCache(PagedCacheConfig(page_size=4, num_blocks=9, max_slots=2, max_pages=6))
+    # two pools mimicking one segment's k/v: distinct cell fingerprints
+    t = kv.cfg.num_tokens
+    pools = {
+        "k": jnp.arange(2 * t * 3, dtype=jnp.float32).reshape(2, t, 3),
+        "v": -jnp.arange(2 * t * 3, dtype=jnp.float32).reshape(2, t, 3),
+    }
+    assert kv.ensure_capacity(0, 11)  # 3 pages
+    assert kv.ensure_capacity(1, 5)  # 2 pages (forces slot 0 to move later)
+    cells_before = kv.slot_cells(0, 11)
+    want = {k: np.asarray(v[:, cells_before]) for k, v in pools.items()}
+
+    snap = paged_cache.swap_out(pools, kv, 0, 11)
+    for leaf in jax.tree.leaves(snap):
+        assert isinstance(leaf, np.ndarray) and leaf.shape[1] == 11
+    kv.release(0)
+    # churn the free list so slot 0 lands on different physical blocks
+    assert kv.ensure_capacity(1, 17)  # slot 1 grabs freed blocks
+    assert kv.ensure_capacity(0, 11)
+    cells_after = kv.slot_cells(0, 11)
+    assert set(cells_after.tolist()) != set(cells_before.tolist())
+    assert not np.any(cells_after // 4 == DUMMY_BLOCK)
+
+    cells_other = kv.slot_cells(1, 17)
+    other_before = np.asarray(pools["k"][:, cells_other])
+    pools = paged_cache.swap_in(pools, kv, 0, snap)
+    got = {k: np.asarray(v[:, cells_after]) for k, v in pools.items()}
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+    # the other slot's live cells are untouched by the restore (pad cells of
+    # the bucketed scatter land in the dummy page, never in live blocks)
+    np.testing.assert_array_equal(np.asarray(pools["k"][:, cells_other]), other_before)
+
+
+def test_slot_cells_rejects_unallocated_range():
+    kv = PagedKVCache(PagedCacheConfig(page_size=4, num_blocks=4, max_slots=1, max_pages=3))
+    assert kv.ensure_capacity(0, 4)
+    with pytest.raises(ValueError, match="allocation"):
+        kv.slot_cells(0, 9)
+
+
+def test_allocator_never_hands_out_dummy_block():
+    a = BlockAllocator(num_blocks=6)
+    got = a.alloc(5)
+    assert DUMMY_BLOCK not in got and sorted(got) == [1, 2, 3, 4, 5]
+    assert a.alloc(1) is None  # exhausted without ever touching block 0
 
 
 def test_prepare_serving_params_densifies_once_off_tpu(deployed):

@@ -138,6 +138,36 @@ def test_flash_attention_traced_kv_valid_len(key):
         np.testing.assert_allclose(got, bw, rtol=2e-5, atol=2e-5)
 
 
+def test_flash_attention_per_row_offsets_and_valid_lens(key):
+    """Per-row traced q_offset + kv_valid_len (fused prefill+decode rows at
+    different prompt positions / live cache extents) equal per-row scalar
+    calls and the ref — one compiled kernel, SMEM-indexed per batch row."""
+    from repro.models.attention import blockwise_attention
+
+    ks = jax.random.split(key, 3)
+    b = 3
+    q = jax.random.normal(ks[0], (b, 4, 16, 16))
+    k = jax.random.normal(ks[1], (b, 2, 64, 16))
+    v = jax.random.normal(ks[2], (b, 2, 64, 16))
+    offs = jnp.asarray([0, 17, 40], jnp.int32)
+    kvls = jnp.asarray([16, 33, 56], jnp.int32)
+    got = fa_ops.flash_attention(
+        q, k, v, kvls, kind="causal", q_offset=offs, bq=8, bk=8
+    )
+    want = fa_ref.flash_attention(q, k, v, kvls, kind="causal", q_offset=offs)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    bw = blockwise_attention(
+        q, k, v, kind="causal", q_offset=offs, block_k=8, kv_valid_len=kvls
+    )
+    np.testing.assert_allclose(got, bw, rtol=2e-5, atol=2e-5)
+    for r in range(b):
+        solo = fa_ops.flash_attention(
+            q[r : r + 1], k[r : r + 1], v[r : r + 1], kvls[r],
+            kind="causal", q_offset=int(offs[r]), bq=8, bk=8,
+        )
+        np.testing.assert_array_equal(np.asarray(got[r : r + 1]), np.asarray(solo))
+
+
 def test_flash_attention_matches_blockwise_module(key):
     """The pure-JAX blockwise attention (model default) and the Pallas kernel
     implement the same contract."""

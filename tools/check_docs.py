@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Docs reference checker: fail on dead links so the paper→code map can't rot.
+
+Scans README.md and docs/*.md for three kinds of references and verifies
+each against the working tree (no network, stdlib only):
+
+  1. Markdown links ``[text](target)``: ``#anchor`` targets must match a
+     heading in the same file; relative-path targets (optionally with an
+     ``#anchor``) must exist, and the anchor must match a heading in the
+     target file.  ``http(s)://`` targets are skipped.
+  2. Backticked repo paths (`` `src/repro/core/pool.py` ``, `` `docs/...` ``):
+     any backticked token containing a ``/`` and a known file suffix must
+     exist relative to the repo root (glob patterns like ``BENCH_*.json``
+     are matched as globs).
+  3. Backticked dotted module references (`` `repro.launch.engine` ``,
+     `` `benchmarks.roofline` ``): the longest module prefix must resolve
+     to a real ``.py`` file or package under ``src/`` or the repo root —
+     trailing attribute names (``repro.core.pool.CrossbarPool``) are
+     allowed as long as the module part resolves.
+
+Exit status: 0 when the docs are sound, 1 when any reference is dead (each
+one printed to stderr).  Run as ``python tools/check_docs.py`` from the
+repo root; CI runs it as its own job and tier-1 wraps it in
+``tests/test_docs.py``.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+PATH_SUFFIXES = (".py", ".md", ".json", ".yml", ".yaml", ".txt", ".ini")
+MODULE_ROOTS = {"repro": REPO / "src" / "repro", "benchmarks": REPO / "benchmarks"}
+
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`([^`\n]+)`")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*?)\s*$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip formatting, lowercase, spaces -> dashes,
+    drop everything that isn't alphanumeric, dash, or underscore."""
+    text = re.sub(r"[*`]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # [text](url) -> text
+    text = text.strip().lower().replace(" ", "-")
+    return re.sub(r"[^\wÀ-￿-]", "", text)
+
+
+def anchors_of(path: Path, cache: dict) -> set[str]:
+    if path not in cache:
+        cache[path] = {github_slug(h) for h in HEADING_RE.findall(path.read_text())}
+    return cache[path]
+
+
+def check_link(md: Path, target: str, cache: dict) -> str | None:
+    """None if the link resolves, else a human-readable complaint."""
+    if target.startswith(("http://", "https://", "mailto:")):
+        return None
+    path_part, _, anchor = target.partition("#")
+    dest = md if not path_part else (md.parent / path_part).resolve()
+    if not dest.exists():
+        return f"missing file {path_part!r}"
+    if anchor and dest.suffix == ".md":
+        if anchor not in anchors_of(dest, cache):
+            return f"missing anchor #{anchor} in {dest.relative_to(REPO)}"
+    return None
+
+
+def check_repo_path(token: str) -> str | None:
+    """Backticked path-looking token: must exist (globs allowed)."""
+    if any(ch in token for ch in "*?["):
+        return None if list(REPO.glob(token)) else f"no files match glob {token!r}"
+    return None if (REPO / token).exists() else f"missing path {token!r}"
+
+
+def check_module_ref(token: str) -> str | None:
+    """Dotted `repro...` / `benchmarks...` reference: the module part must
+    resolve to a .py file or package.  Attributes are only tolerated AFTER
+    a component resolved to a module file — a name that follows a package
+    directory must itself be a module or sub-package, so renaming e.g.
+    launch/paged_cache.py flags every doc still saying
+    `repro.launch.paged_cache`."""
+    parts = token.split(".")
+    root = MODULE_ROOTS[parts[0]]
+    node = root
+    for part in parts[1:]:
+        if (node / part).is_dir():
+            node = node / part
+            continue
+        if (node / f"{part}.py").is_file():
+            return None  # module resolves; the rest are attributes
+        return (
+            f"{token!r}: no module/package {part!r} under "
+            f"{node.relative_to(REPO)}"
+        )
+    return None  # pure package reference
+
+
+def scan(md: Path, cache: dict) -> list[str]:
+    text = md.read_text()
+    problems = []
+    for m in LINK_RE.finditer(text):
+        err = check_link(md, m.group(1), cache)
+        if err:
+            problems.append(f"{md.relative_to(REPO)}: link ({m.group(1)}): {err}")
+    for m in CODE_RE.finditer(text):
+        token = m.group(0).strip("`").strip()
+        if "/" in token and token.endswith(PATH_SUFFIXES) and " " not in token:
+            err = check_repo_path(token)
+            if err:
+                problems.append(f"{md.relative_to(REPO)}: `{token}`: {err}")
+        elif re.fullmatch(r"(repro|benchmarks)\.[\w.]+", token):
+            err = check_module_ref(token)
+            if err:
+                problems.append(f"{md.relative_to(REPO)}: `{token}`: {err}")
+    return problems
+
+
+def main() -> int:
+    cache: dict = {}
+    problems = []
+    for md in DOC_FILES:
+        if md.exists():
+            problems.extend(scan(md, cache))
+    for p in problems:
+        print(f"DEAD REF: {p}", file=sys.stderr)
+    if not problems:
+        n_files = sum(1 for f in DOC_FILES if f.exists())
+        print(f"docs check OK ({n_files} files)")
+    return 1 if problems else 0  # a plain count would wrap mod 256 in exit()
+
+
+if __name__ == "__main__":
+    sys.exit(main())
