@@ -14,6 +14,7 @@ import time
 from benchmarks import (
     accuracy_e2e,
     engine_throughput,
+    fault_tolerance,
     fig5_sws_single,
     fig6_strides,
     fig7_greedy,
@@ -171,6 +172,26 @@ def main() -> None:
         "p50_latency_ratio": reng["p50_latency_ratio"],
         "overcommit_completed": oc["completed"],
         "overcommit_preemptions": oc["preemptions"],
+    }
+
+    banner("Fault tolerance — stuck cells, fault-aware remap, hot redeploy")
+    rft = fault_tolerance.run(
+        rates=(0.0, 2e-3) if not args.full else (0.0, 5e-4, 2e-3, 8e-3),
+        n_requests=4 if not args.full else 6,
+        n_deploys=2 if not args.full else 3,
+    )
+    rd_ft = rft["redeploy"]
+    print(f"  remapping recovery at rate {rft['ref_rate']}: "
+          f"{100 * rft['recovery_at_ref']:.1f}%")
+    print(f"  hot redeploy: {rd_ft['completed']}/{rd_ft['n_requests']} completed, "
+          f"parity {rd_ft['stream_parity']}, "
+          f"pause {rd_ft['swap_pause_s'] * 1e3:.0f} ms")
+    save_json("BENCH_fault", rft)
+    summary["fault"] = {
+        "recovery_at_ref": rft["recovery_at_ref"],
+        "redeploy_completed": rd_ft["completed"],
+        "stream_parity": rd_ft["stream_parity"],
+        "endurance_horizons": rft["endurance"]["horizons"],
     }
 
     banner("Redeploy delta (training-time integration, beyond-paper)")

@@ -1,0 +1,241 @@
+"""Device-realistic non-idealities: stuck-at faults, drift, IR drop, remapping.
+
+The paper's endurance accounting (and everything downstream of it in this
+repo) assumes ideal crossbars: a programmed cell reads back exactly the bit
+that was written.  Real memristive arrays do not behave this way — cells get
+stuck at 0/1 (forming faults, endurance wear-out), conductances drift between
+refresh cycles, and line resistance attenuates rows far from the driver
+(IR drop).  X-CHANGR (see PAPERS.md) shows most of the resulting accuracy
+loss is recoverable *without* repair hardware by remapping tensors across
+crossbars so that important bits avoid known-faulty cells.
+
+This module is the single home for those effects:
+
+* ``FaultModel`` — the (deterministic, PRNG-keyed) fault distribution:
+  stuck-at-0/1 rates, lognormal conductance drift sigma, IR-drop strength,
+  and a hotspot mixture (a fraction of crossbars with multiplied fault
+  rates — manufacturing variation, the setting where remapping pays).
+* ``inject`` — sample a per-crossbar ``FaultState`` (packed stuck masks in
+  the pool's canonical ``uint8[L, W, cols]`` layout).
+* ``read_packed`` — the non-ideal read: ``(planes & ~stuck0) | stuck1``.
+  At zero fault rate both masks are all-zero and the read is the identity,
+  byte for byte — the zero-fault parity contract pinned by
+  ``tests/test_nonideal.py``.
+* ``damage_matrix`` / ``fault_aware_assignment`` — X-CHANGR-style
+  chain→crossbar remapping: price the bit flips each chain would suffer on
+  each physical crossbar (weighted by bit significance 2**col) and greedily
+  steer the most damage-sensitive chains to the cleanest crossbars.
+  Exposed as pool leveling ``"fault"``; the remap is priced through the
+  ordinary ``price_pairs`` seam machinery, so it counts toward
+  reprogramming cost like any other assignment.
+* ``perturb_operands`` — the serving-side twin: perturb a packed operand
+  dict (``simulator.packed_operands`` layout) with stuck masks, per-plane
+  drift gains, and a deterministic IR-drop row attenuation, consumed by
+  ``simulator.cim_linear`` / ``densify_operands`` so faulted serving and
+  faulted pool reads share one arithmetic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:  # CrossbarSpec lives in planner; avoid the import cycle
+    from repro.core.planner import CrossbarSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """Fault distribution of a crossbar population (all rates per cell).
+
+    ``stuck0``/``stuck1`` are stuck-at rates for magnitude bit cells (sign
+    bits live in the digital periphery here, as in the paper's
+    sign-magnitude arrays).  ``drift_sigma`` is the sigma of a lognormal
+    per-bit-line conductance gain ``exp(sigma * N(0,1))``; ``ir_alpha``
+    scales a deterministic monotone row attenuation ``1/(1 + alpha*r/R)``
+    modelling line resistance.  ``hotspot_fraction`` of crossbars have
+    their stuck rates multiplied by ``hotspot_mult`` (clipped to 1) —
+    the heterogeneous-yield setting where fault-aware remapping wins.
+    """
+
+    stuck0: float = 0.0
+    stuck1: float = 0.0
+    drift_sigma: float = 0.0
+    ir_alpha: float = 0.0
+    hotspot_fraction: float = 0.0
+    hotspot_mult: float = 1.0
+
+    @property
+    def ideal(self) -> bool:
+        """True when every non-ideality is off (reads are exact)."""
+        return (
+            self.stuck0 == 0.0
+            and self.stuck1 == 0.0
+            and self.drift_sigma == 0.0
+            and self.ir_alpha == 0.0
+        )
+
+
+@dataclasses.dataclass
+class FaultState:
+    """Sampled fault realization for one pool of ``L`` crossbars."""
+
+    model: FaultModel
+    stuck0: jax.Array  # uint8[L, W, cols] packed mask: cell reads 0
+    stuck1: jax.Array  # uint8[L, W, cols] packed mask: cell reads 1
+    hot: np.ndarray  # bool[L] which crossbars drew the hotspot multiplier
+
+    def fault_cells(self) -> np.ndarray:
+        """Faulty cells per crossbar -> int64[L] (for reports/benchmarks)."""
+        both = jnp.unpackbits(self.stuck0 | self.stuck1, axis=1)
+        return np.asarray(jnp.sum(both.astype(jnp.int32), axis=(1, 2)), np.int64)
+
+
+def _pack_bits(bits: jax.Array) -> jax.Array:
+    """bool[..., R, cols] -> uint8[..., ceil(R/8), cols] (pool byte order)."""
+    return jnp.packbits(bits.astype(jnp.uint8), axis=-2)
+
+
+def inject(
+    spec: "CrossbarSpec", n_crossbars: int, model: FaultModel, key: jax.Array
+) -> FaultState:
+    """Sample a deterministic per-crossbar fault realization.
+
+    Masks come back packed exactly like ``CrossbarPool`` state
+    (``uint8[L, W, cols]``, rows MSB-first per byte); padding rows beyond
+    ``spec.rows`` are forced fault-free so packed-word identities hold.
+    Stuck-at-1 cells are made disjoint from stuck-at-0 (a cell has one
+    defect); hotspot crossbars multiply both rates.
+    """
+    rows, cols = spec.rows, spec.cols
+    words = -(-rows // 8)
+    kh, k0, k1 = jax.random.split(key, 3)
+    hot = jax.random.bernoulli(kh, float(model.hotspot_fraction), (n_crossbars,))
+    mult = jnp.where(hot, float(model.hotspot_mult), 1.0)
+    r0 = jnp.clip(float(model.stuck0) * mult, 0.0, 1.0)[:, None, None]
+    r1 = jnp.clip(float(model.stuck1) * mult, 0.0, 1.0)[:, None, None]
+    shape = (n_crossbars, words * 8, cols)
+    valid = (jnp.arange(words * 8) < rows)[None, :, None]
+    s0 = jax.random.bernoulli(k0, shape=shape, p=jnp.broadcast_to(r0, shape)) & valid
+    s1 = jax.random.bernoulli(k1, shape=shape, p=jnp.broadcast_to(r1, shape)) & valid
+    s1 = s1 & ~s0
+    return FaultState(
+        model=model, stuck0=_pack_bits(s0), stuck1=_pack_bits(s1),
+        hot=np.asarray(hot),
+    )
+
+
+def read_packed(planes: jax.Array, stuck0: jax.Array, stuck1: jax.Array) -> jax.Array:
+    """Non-ideal read of packed planes: stuck-at-0 clears, stuck-at-1 sets.
+
+    With all-zero masks this is the bitwise identity — the zero-fault
+    parity pin.  Shapes broadcast, so one mask can serve a batch of
+    sections or one section per crossbar.
+    """
+    return (planes & ~stuck0) | stuck1
+
+
+# ---------------------------------------------------------------------------
+# X-CHANGR-style fault-aware remapping
+# ---------------------------------------------------------------------------
+
+def damage_matrix(
+    packed: jax.Array,
+    chains: Sequence[np.ndarray],
+    state: FaultState,
+) -> np.ndarray:
+    """Significance-weighted bit-flip damage of every chain on every crossbar.
+
+    ``damage[j, l]`` = sum over the sections of chain ``j`` of the bits a
+    read from crossbar ``l`` would flip — stuck-at-0 cells holding a 1
+    (``packed & stuck0``) plus stuck-at-1 cells holding a 0
+    (``~packed & stuck1``) — each flip weighted ``2**col`` so high-order
+    bit columns dominate, exactly the quantity remapping should minimize.
+    Returns host ``int64[Lc, L]``.
+    """
+    s0, s1 = state.stuck0, state.stuck1
+    flips = (packed[:, None] & s0[None]) | (~packed[:, None] & s1[None])
+    pop = jax.lax.population_count(flips).astype(jnp.int32).sum(axis=2)  # [S, L, cols]
+    w = 2 ** jnp.arange(pop.shape[-1], dtype=jnp.int32)
+    per_sec = np.asarray(jnp.sum(pop * w, axis=-1), np.int64)  # [S, L]
+    return np.stack([per_sec[np.asarray(c)].sum(axis=0) for c in chains])
+
+
+def fault_aware_assignment(
+    damage: np.ndarray, wear: np.ndarray | None = None
+) -> np.ndarray:
+    """Greedy chain→crossbar assignment minimizing read damage.
+
+    Chains are seated in descending order of damage *spread* (the chain
+    with the most to lose from a bad crossbar chooses first); each takes
+    the free crossbar with minimum damage, ties broken toward least wear,
+    then lowest index.  With zero damage everywhere (no faults) and no
+    wear skew this degenerates to the identity assignment, so the
+    ``"fault"`` leveling is a strict superset of ``"none"``.
+    Returns ``int32[Lc]`` distinct crossbar ids.
+    """
+    lc, l = damage.shape
+    if lc > l:
+        raise ValueError(f"{lc} chains for {l} crossbars")
+    wear = np.zeros(l, np.int64) if wear is None else np.asarray(wear, np.int64)
+    spread = damage.max(axis=1) - damage.min(axis=1)
+    order = np.argsort(-spread, kind="stable")
+    free = np.ones(l, dtype=bool)
+    out = np.zeros(lc, np.int32)
+    for j in order:
+        cand = np.flatnonzero(free)
+        best = cand[np.lexsort((cand, wear[cand], damage[j, cand]))[0]]
+        out[j] = best
+        free[best] = False
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Serving-side perturbation (packed operand dicts)
+# ---------------------------------------------------------------------------
+
+def perturb_operands(
+    op: dict[str, jax.Array], model: FaultModel, key: jax.Array
+) -> dict[str, jax.Array]:
+    """Perturb a packed serving operand dict with the model's non-idealities.
+
+    Adds ``stuck0_packed``/``stuck1_packed`` masks in the serving plane
+    layout (``uint8[..., cols, ceil(K/8), N]``), a lognormal per-bit-line
+    ``plane_gain`` ``f32[..., cols, N]``, and a deterministic IR-drop
+    ``row_atten`` ``f32[..., K]`` — all consumed by ``simulator.cim_linear``
+    and ``simulator.densify_operands`` with identical arithmetic.  An
+    ``ideal`` model returns ``op`` unchanged (same object), so the
+    zero-fault serving graph is literally the clean graph.  Hotspot
+    mixture does not apply here: serving operands carry no crossbar
+    identity (that lives in the pool path).
+    """
+    if "planes_packed" not in op:
+        raise ValueError("perturb_operands expects packed serving operands")
+    if model.ideal:
+        return op
+    planes = op["planes_packed"]  # [..., cols, Wk, N]
+    lead = planes.shape[:-3]
+    cols, wk, n = planes.shape[-3:]
+    k = op["kdim"].shape[-2]
+    k0, k1, kg = jax.random.split(key, 3)
+    out = dict(op)
+    if model.stuck0 > 0.0 or model.stuck1 > 0.0:
+        shape = lead + (cols, wk * 8, n)
+        valid = (jnp.arange(wk * 8) < k)[:, None]
+        s0 = jax.random.bernoulli(k0, min(model.stuck0, 1.0), shape) & valid
+        s1 = jax.random.bernoulli(k1, min(model.stuck1, 1.0), shape) & valid & ~s0
+        out["stuck0_packed"] = _pack_bits(s0)
+        out["stuck1_packed"] = _pack_bits(s1)
+    if model.drift_sigma > 0.0:
+        out["plane_gain"] = jnp.exp(
+            float(model.drift_sigma) * jax.random.normal(kg, lead + (cols, n))
+        )
+    if model.ir_alpha > 0.0:
+        atten = 1.0 / (
+            1.0 + float(model.ir_alpha) * jnp.arange(k, dtype=jnp.float32) / max(k - 1, 1)
+        )
+        out["row_atten"] = jnp.broadcast_to(atten, lead + (k,))
+    return out

@@ -75,8 +75,9 @@ class PlannerConfig:
     exclude: tuple[str, ...] = ("embed", "embedding", "lm_head", "pos_emb")
     seed: int = 0
     impl: str = "packed"  # "packed" (jitted fast path) | "bool" (reference)
-    # chain->crossbar wear leveling when streaming through a CrossbarPool:
-    # "none" | "rotate" | "lpt"; None defers to the pool's own setting
+    # chain->crossbar leveling when streaming through a CrossbarPool:
+    # "none" | "rotate" | "lpt" | "fault" (fault-aware remap, core/nonideal);
+    # None defers to the pool's own setting
     pool_leveling: str | None = None
 
 
@@ -477,8 +478,11 @@ def _analyze_tensor_pool(
         name=name,
     )
 
+    # dequantize what the array *reads back* (== prep.achieved byte-for-byte
+    # unless the pool has injected faults — core/nonideal.py), so deployed
+    # weights and everything served from them see the non-ideal cells
     w_hat_slots = _dequant_slots(
-        prep.achieved, aux["sign_slots"], aux["scale"], aux["offset"], rows=spec.rows
+        prep.achieved_read, aux["sign_slots"], aux["scale"], aux["offset"], rows=spec.rows
     )
     w_hat_flat = w_hat_slots.reshape(-1)[aux["inv_perm"]][:n]
     w_hat = w_hat_flat.reshape(w.shape).astype(w.dtype)

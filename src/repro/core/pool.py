@@ -21,7 +21,15 @@ is won or lost, so the pool is a first-class stateful subsystem here:
   seeds the chain walk at the least-worn crossbar; ``"lpt"`` runs the
   longest-processing-time greedy of ``schedule.lpt_assignment`` with
   capacity 1, seeded by accumulated per-crossbar wear, so heavy chains land
-  on the least-worn crossbars.
+  on the least-worn crossbars; ``"fault"`` is the X-CHANGR-style remap of
+  ``core.nonideal`` — chains are steered away from crossbars whose stuck
+  cells would flip their high-order bits (falls back to ``"lpt"`` when no
+  faults are injected).
+* Non-ideal reads (``inject_faults``): a sampled ``nonideal.FaultState``
+  attaches stuck-at masks per crossbar; ``PoolProgramReport.achieved_read``
+  is what the array *reads back* through those masks — identical to
+  ``achieved`` byte-for-byte at zero fault rate (the parity pin), and the
+  planes the planner dequantizes into served weights.
 
 Parity invariants (pinned by ``tests/test_pool.py``):
 
@@ -59,7 +67,7 @@ if TYPE_CHECKING:  # CrossbarSpec lives in planner; avoid the import cycle
     from repro.core.planner import CrossbarSpec
 
 
-LEVELINGS = ("none", "rotate", "lpt")
+LEVELINGS = ("none", "rotate", "lpt", "fault")
 
 DEFAULT_ENDURANCE = 1e8  # typical ReRAM cell write endurance (order of magnitude)
 
@@ -83,6 +91,9 @@ class PoolProgramReport:
     wear_increment_total: int
     wear_increment_max: int
     achieved: jax.Array  # uint8[S, W, cols] resident state per section
+    # what a read returns through the pool's fault masks (== achieved when
+    # no faults are injected — zero-fault parity, tests/test_nonideal.py)
+    achieved_read: jax.Array  # uint8[S, W, cols]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -244,6 +255,10 @@ class CrossbarPool:
             raise ValueError(f"unknown pool leveling {leveling!r}; choose from {LEVELINGS}")
         if n_crossbars < 1:
             raise ValueError("pool needs at least one crossbar")
+        if spec.rows < 1 or spec.cols < 1:
+            raise ValueError(
+                f"crossbar geometry must be positive, got {spec.rows}x{spec.cols}"
+            )
         self.spec = spec
         self.n_crossbars = int(n_crossbars)
         self.leveling = leveling
@@ -253,6 +268,34 @@ class CrossbarPool:
         self.tensors_seen = 0
         self.programs = 0
         self.total_writes = 0
+        self.faults = None  # Optional[nonideal.FaultState]
+
+    # -- faults ------------------------------------------------------------
+
+    def inject_faults(self, model, key: jax.Array | None = None):
+        """Sample and attach a ``nonideal.FaultState`` for this pool.
+
+        Deterministic per (model, key).  Once attached, every
+        ``program()`` report's ``achieved_read`` passes through the stuck
+        masks and the ``"fault"`` leveling has damage information to remap
+        against.  Returns the state (also kept on ``self.faults``).
+        """
+        from repro.core import nonideal  # local: planner <-> pool cycle hygiene
+
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        self.faults = nonideal.inject(self.spec, self.n_crossbars, model, key)
+        return self.faults
+
+    def read_state(self) -> np.ndarray:
+        """Host copy of the pool content *as read* through any fault masks."""
+        if self.faults is None:
+            return self.state
+        from repro.core import nonideal
+
+        return np.asarray(
+            nonideal.read_packed(self._state, self.faults.stuck0, self.faults.stuck1)
+        )
 
     # -- introspection -----------------------------------------------------
 
@@ -293,7 +336,14 @@ class CrossbarPool:
 
     # -- chain -> crossbar assignment --------------------------------------
 
-    def _assign(self, chain_costs: np.ndarray, leveling: str) -> np.ndarray:
+    def _assign(
+        self,
+        chain_costs: np.ndarray,
+        leveling: str,
+        *,
+        packed: jax.Array | None = None,
+        chains: list[np.ndarray] | None = None,
+    ) -> np.ndarray:
         lc = chain_costs.shape[0]
         if leveling == "none":
             return np.arange(lc, dtype=np.int32)
@@ -301,9 +351,18 @@ class CrossbarPool:
             # seed the contiguous chain block at the least-worn crossbar
             start = int(np.argmin(self.wear_totals()))
             return ((start + np.arange(lc)) % self.n_crossbars).astype(np.int32)
-        # "lpt": heaviest chains to least-worn crossbars, one chain per
-        # crossbar (capacity 1 — chains program in parallel on distinct
-        # hardware), loads seeded with accumulated wear
+        if leveling == "fault" and self.faults is not None and packed is not None:
+            # X-CHANGR-style remap: steer damage-sensitive chains away from
+            # crossbars whose stuck cells would flip their high-order bits,
+            # ties broken toward least wear (core/nonideal.py)
+            from repro.core import nonideal
+
+            damage = nonideal.damage_matrix(packed, chains, self.faults)
+            return nonideal.fault_aware_assignment(damage, wear=self.wear_totals())
+        # "lpt" (and "fault" with no injected faults — nothing to avoid,
+        # wear-level instead): heaviest chains to least-worn crossbars, one
+        # chain per crossbar (capacity 1 — chains program in parallel on
+        # distinct hardware), loads seeded with accumulated wear
         tids, _ = schedule.lpt_assignment(
             chain_costs, self.n_crossbars,
             initial_loads=self.wear_totals(), capacity=1,
@@ -376,7 +435,7 @@ class CrossbarPool:
         chain_intra = np.array([x.sum() for x in intra_per_chain], np.int64)
 
         # --- chain -> crossbar assignment + seam pricing --------------------
-        assignment = self._assign(chain_intra, leveling)
+        assignment = self._assign(chain_intra, leveling, packed=packed, chains=chains)
         firsts = np.array([c[0] for c in chains], np.int32)
         assignment_dev = jnp.asarray(assignment)
         state_assigned = self._state[assignment_dev]
@@ -425,6 +484,20 @@ class CrossbarPool:
             new_states = bitslice.pack_rows(jnp.asarray(finals_b))
             achieved = bitslice.pack_rows(jnp.asarray(achieved_b))
 
+        # --- non-ideal readback ---------------------------------------------
+        if self.faults is None:
+            achieved_read = achieved
+        else:
+            from repro.core import nonideal
+
+            sec_xbar = np.zeros(s, np.int32)
+            for j, c in enumerate(chains):
+                sec_xbar[c] = assignment[j]
+            idx = jnp.asarray(sec_xbar)
+            achieved_read = nonideal.read_packed(
+                achieved, self.faults.stuck0[idx], self.faults.stuck1[idx]
+            )
+
         # --- commit ---------------------------------------------------------
         self._state = self._state.at[assignment_dev].set(new_states)
         self.wear[assignment] += wear_inc
@@ -445,4 +518,5 @@ class CrossbarPool:
             wear_increment_total=wear_total,
             wear_increment_max=int(wear_inc.max()),
             achieved=achieved,
+            achieved_read=achieved_read,
         )

@@ -122,15 +122,26 @@ def densify_operands(op: dict[str, jax.Array]) -> jax.Array:
     without the packed Pallas kernel (see ``launch.steps``): unpack, weight,
     sign, scale, offset — exactly ``bitslice.dequantize`` of the achieved
     planes, so serving tokens match the dense materialization.
+
+    Non-ideal operand dicts (``core.nonideal.perturb_operands``) densify to
+    the weights a *faulty read* yields: stuck masks applied to the packed
+    words, drift gains folded into the plane weighting, and the IR-drop row
+    attenuation folded into the rows — ``x @ (diag(a) W) == (x * a) @ W``,
+    so this matches ``cim_linear``'s activation-side fold exactly.
     """
     from repro.kernels.cim_matmul import ref as cim_ref
 
     planes = op["planes_packed"]
     if planes.ndim > 3:  # stacked layers / experts
         return jax.vmap(densify_operands)(op)
+    if "stuck0_packed" in op:
+        planes = (planes & ~op["stuck0_packed"]) | op["stuck1_packed"]
     k = op["kdim"].shape[-2]
-    w = cim_ref.unpack_weights(planes, op["sign_packed"], k)
-    return w * op["scale"] + op["offset"]
+    w = cim_ref.unpack_weights(planes, op["sign_packed"], k, op.get("plane_gain"))
+    w = w * op["scale"] + op["offset"]
+    if "row_atten" in op:
+        w = w * op["row_atten"][..., :, None]
+    return w
 
 
 def densify_packed(params):
@@ -182,14 +193,33 @@ def cim_linear(x: jax.Array, operands: dict[str, jax.Array], *, use_kernel: bool
     ``use_kernel=True`` runs the compiled Pallas kernel on TPU and the
     portable jnp reference elsewhere (dispatch policy above); packed operands
     take the bit-packed kernel/ref, int8 operands the plane einsum paths.
+
+    Non-ideal operand dicts (``core.nonideal.perturb_operands``) read
+    through the fault masks — ``(planes & ~stuck0) | stuck1`` — fold the
+    IR-drop ``row_atten`` into the activations (``x @ diag(a)W == (x*a)@W``,
+    so the rank-1 offset correction below stays consistent), and route
+    drift ``plane_gain`` through the portable ref: the Pallas kernel's
+    unpack loop carries exact power-of-two weights only, so drifted reads
+    always take the reference path (clean reads keep the kernel).
     """
     from repro.kernels.cim_matmul import ops as cim_ops
     from repro.kernels.cim_matmul import ref as cim_ref
 
     kernel = use_kernel and on_tpu()
     if "planes_packed" in operands:
-        fn = cim_ops.cim_matmul_packed if kernel else cim_ref.cim_matmul_packed
-        y = fn(x, operands["planes_packed"], operands["sign_packed"], operands["scale"])
+        planes = operands["planes_packed"]
+        if "stuck0_packed" in operands:
+            planes = (planes & ~operands["stuck0_packed"]) | operands["stuck1_packed"]
+        if "row_atten" in operands:
+            x = x * operands["row_atten"]
+        gain = operands.get("plane_gain")
+        if gain is not None:
+            y = cim_ref.cim_matmul_packed(
+                x, planes, operands["sign_packed"], operands["scale"], gain
+            )
+        else:
+            fn = cim_ops.cim_matmul_packed if kernel else cim_ref.cim_matmul_packed
+            y = fn(x, planes, operands["sign_packed"], operands["scale"])
     elif kernel or (use_kernel and "encoding" in operands):
         # explicit use_kernel on a legacy operand dict keeps the historical
         # behavior (interpret-mode Pallas off-TPU) for kernel parity tests

@@ -18,6 +18,8 @@ operates on the planner's canonical *packed* uint8 planes
 """
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -93,8 +95,14 @@ def stable_argsort(
     may mix them freely without changing any downstream result.  ``nonneg``
     asserts the keys are >= 0 (or NaN), unlocking a faster integer-keyed
     host sort with the same ordering (NaNs still sort last).
+
+    Single-CPU hosts take the device route even on the CPU backend: with
+    one execution thread, a pending host callback inside one dispatch can
+    deadlock against a blocking wait on another (observed as a futex hang
+    in the planner's pool path), and the callback's throughput advantage
+    needs a second core anyway.
     """
-    if jax.default_backend() == "cpu":
+    if jax.default_backend() == "cpu" and (os.cpu_count() or 1) > 1:
         out_shapes = (jax.ShapeDtypeStruct(keys.shape, jnp.int32),) * (
             2 if with_inverse else 1
         )

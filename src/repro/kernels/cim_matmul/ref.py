@@ -29,7 +29,10 @@ def cim_matmul(x: jax.Array, splanes: jax.Array, scale: jax.Array) -> jax.Array:
 
 
 def unpack_weights(
-    planes_packed: jax.Array, sign_packed: jax.Array, k: int
+    planes_packed: jax.Array,
+    sign_packed: jax.Array,
+    k: int,
+    plane_gain: jax.Array | None = None,
 ) -> jax.Array:
     """Packed serving operands -> dense unscaled weights f32[..., K, N].
 
@@ -37,11 +40,23 @@ def unpack_weights(
     MSB-first per byte (``bitslice.pack_linear_planes``); sign_packed:
     uint8[..., ceil(K/8), N] with bit 1 = negative.  Returns sign * magnitude,
     i.e. ``w_hat / scale``.
+
+    ``plane_gain`` f32[..., cols, N] models per-bit-line conductance drift
+    (``core.nonideal``): each bit plane's power-of-two weight is multiplied
+    by its gain before summation, exactly what a drifted analog column
+    contributes.  ``None`` keeps the exact power-of-two sum.
     """
     cols = planes_packed.shape[-3]
     bits = jnp.unpackbits(planes_packed, axis=-2, count=k)  # [..., cols, K, N]
     pow2 = (2.0 ** jnp.arange(cols, dtype=jnp.float32))
-    mag = jnp.einsum("...bkn,b->...kn", bits.astype(jnp.float32), pow2)
+    if plane_gain is None:
+        mag = jnp.einsum("...bkn,b->...kn", bits.astype(jnp.float32), pow2)
+    else:
+        mag = jnp.einsum(
+            "...bkn,...bn->...kn",
+            bits.astype(jnp.float32),
+            pow2[:, None] * plane_gain,
+        )
     sgn = 1.0 - 2.0 * jnp.unpackbits(sign_packed, axis=-2, count=k).astype(jnp.float32)
     return mag * sgn
 
@@ -51,6 +66,7 @@ def cim_matmul_packed(
     planes_packed: jax.Array,
     sign_packed: jax.Array,
     scale: jax.Array,
+    plane_gain: jax.Array | None = None,
 ) -> jax.Array:
     """Bit-packed oracle / portable fast path: y = scale * (x @ unpack(planes)).
 
@@ -60,5 +76,5 @@ def cim_matmul_packed(
     grid or the ``cols``-matmul einsum of the int8-plane oracle.
     """
     k = x.shape[-1]
-    w = unpack_weights(planes_packed, sign_packed, k)
+    w = unpack_weights(planes_packed, sign_packed, k, plane_gain)
     return (x.astype(jnp.float32) @ w) * scale

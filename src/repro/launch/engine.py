@@ -131,6 +131,22 @@ class EngineConfig:
     fused: bool = True  # fused prefill+decode dispatch per cycle
     preempt: str = "swap"  # "swap" | "recompute"
 
+    def __post_init__(self):
+        for field in ("max_slots", "page_size", "max_seq_len",
+                      "prefill_chunk", "decode_quantum"):
+            if getattr(self, field) < 1:
+                raise ValueError(f"{field} must be positive, got {getattr(self, field)}")
+        if self.num_blocks is not None and self.num_blocks < 2:
+            raise ValueError(
+                f"num_blocks must be >= 2 (dummy page + one usable block), "
+                f"got {self.num_blocks}"
+            )
+        if self.preempt not in ("swap", "recompute"):
+            raise ValueError(
+                f"unknown preemption mode {self.preempt!r}; "
+                f"choose 'swap' or 'recompute'"
+            )
+
 
 _WAITING, _PREFILL, _DECODE = "waiting", "prefill", "decode"
 
@@ -138,8 +154,9 @@ _WAITING, _PREFILL, _DECODE = "waiting", "prefill", "decode"
 class _Slot:
     """Host state of one occupied decode slot."""
 
-    def __init__(self, req: Request, t_admitted: float):
+    def __init__(self, req: Request, t_admitted: float, epoch: int = 0):
         self.req = req
+        self.epoch = epoch  # param epoch this request is pinned to (hot swap)
         self.state = _PREFILL
         self.prefill_done = 0  # target tokens already written to the pool
         self.pos = 0  # next decode write position (= tokens in cache)
@@ -189,6 +206,7 @@ class _Preempted:
     snapshot: Any  # host pytree (swap) or None (recompute)
     t_admitted: float
     t_first_token: float
+    epoch: int = 0  # param epoch the request stays pinned to across eviction
 
     @property
     def arrival_time(self) -> float:
@@ -234,11 +252,15 @@ class Engine:
             raise NotImplementedError(
                 f"{cfg.name}: the paged engine serves pure-attention decoder stacks"
             )
-        if ecfg.preempt not in ("swap", "recompute"):
-            raise ValueError(f"unknown preemption mode {ecfg.preempt!r}")
         self.cfg = cfg
         self.ecfg = ecfg
-        self.params = steps.prepare_serving_params(params)
+        # serving params are versioned by *epoch* so a hot redeploy
+        # (``hot_swap``) can swap in a new tree between dispatches while
+        # every in-flight request keeps computing on the tree it was
+        # admitted under — its whole token stream sees ONE param version,
+        # which is what makes streams bit-identical across a swap
+        self.params_epoch = 0
+        self._params: dict[int, Any] = {0: steps.prepare_serving_params(params)}
 
         # a slot's dispatches may address up to a fused window (one padded
         # prefill chunk + one decode quantum) past max_seq_len; writes beyond
@@ -299,9 +321,57 @@ class Engine:
             "preempt_recompute": 0,
             "swap_ins": 0,
             "readmissions": 0,
+            "hot_swaps": 0,
+            "swap_rollbacks": 0,
+            "epochs_retired": 0,
         }
 
     # -- public API ---------------------------------------------------------
+
+    @property
+    def params(self) -> Any:
+        """The current-epoch serving params (what new admissions use)."""
+        return self._params[self.params_epoch]
+
+    def hot_swap(self, params: Any, *, policy=None) -> bool:
+        """Atomically swap in new serving params between dispatches.
+
+        ``params`` is either a ready param tree (any ``deploy_params``
+        materialization) or a zero-argument callable producing one — e.g.
+        "program the next checkpoint into the pool's spare capacity" — run
+        under ``runtime.fault.run_with_retries`` with ``policy`` (default:
+        no retries).  On failure the swap **rolls back**: the old params
+        keep serving, ``stats["swap_rollbacks"]`` increments, and False is
+        returned.  On success requests admitted from now on use the new
+        epoch while in-flight requests finish on the epoch they started
+        under (bit-identical streams across the swap); old epochs are
+        garbage-collected once their last request drains.
+        """
+        from repro.runtime.fault import FaultPolicy, run_with_retries
+
+        if callable(params):
+            try:
+                params = run_with_retries(params, policy or FaultPolicy(max_retries=0))
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception:
+                self.stats["swap_rollbacks"] += 1
+                return False
+        self.params_epoch += 1
+        self._params[self.params_epoch] = steps.prepare_serving_params(params)
+        self.stats["hot_swaps"] += 1
+        return True
+
+    def _gc_params(self) -> None:
+        """Drop param epochs no live or queued-preempted request references."""
+        live = {self.params_epoch}
+        live.update(s.epoch for s in self.slots if s is not None)
+        live.update(
+            w.epoch for w in self.waiting if isinstance(w, _Preempted)
+        )
+        for ep in [e for e in self._params if e not in live]:
+            del self._params[ep]
+            self.stats["epochs_retired"] += 1
 
     def _row_buckets(self) -> list[int]:
         return _buckets_upto(self.ecfg.max_slots)
@@ -414,12 +484,22 @@ class Engine:
         their prompt rolling straight into decode in-graph.  Split mode:
         admit, one chunked-prefill dispatch over prefilling slots, one
         decode-quantum dispatch over decoding slots (the PR4 discipline,
-        kept as the fused path's benchmark baseline)."""
+        kept as the fused path's benchmark baseline).
+
+        After a hot swap the occupied slots may span several param epochs;
+        each epoch gets its own dispatch round (same compiled variants —
+        only the traced param argument differs), normally exactly one
+        extra round for the handful of cycles the old epoch drains."""
         self._admit(now)
-        if self.ecfg.fused:
-            return self._fused_round(now)
-        did = self._prefill_round(now)
-        did = self._decode(now) or did
+        epochs = sorted({s.epoch for s in self.slots if s is not None})
+        did = False
+        for ep in epochs:
+            if self.ecfg.fused:
+                did = self._fused_round(now, ep) or did
+            else:
+                did = self._prefill_round(now, ep) or did
+                did = self._decode(now, ep) or did
+        self._gc_params()
         return did
 
     def run(self, requests: list[Request]) -> list[RequestResult]:
@@ -467,7 +547,7 @@ class Engine:
                 first = min(self.ecfg.prefill_chunk, head.prompt.size)
                 if not self.kv.ensure_capacity(i, first):
                     break
-                self.slots[i] = _Slot(head, now)
+                self.slots[i] = _Slot(head, now, epoch=self.params_epoch)
             self.waiting.popleft()
 
     def _readmit(self, idx: int, rec: _Preempted) -> bool:
@@ -492,7 +572,7 @@ class Engine:
         if rec.snapshot is not None:
             self.pools = paged_cache.swap_in(self.pools, self.kv, idx, rec.snapshot)
             self.stats["swap_ins"] += 1
-        slot = _Slot(rec.req, rec.t_admitted)
+        slot = _Slot(rec.req, rec.t_admitted, epoch=rec.epoch)
         slot.key = rec.key
         slot.generated = gen
         slot.t_first_token = rec.t_first_token
@@ -572,6 +652,7 @@ class Engine:
             snapshot=snapshot,
             t_admitted=slot.t_admitted,
             t_first_token=slot.t_first_token,
+            epoch=slot.epoch,
         ))
 
     def _ensure_blocks(self, idx: int, n_tokens: int) -> bool:
@@ -645,8 +726,8 @@ class Engine:
 
     # -- fused dispatch ------------------------------------------------------
 
-    def _fused_round(self, now: float) -> bool:
-        """ONE dispatch advancing every occupied slot: prefill rows a chunk,
+    def _fused_round(self, now: float, epoch: int = 0) -> bool:
+        """ONE dispatch advancing every occupied slot of ``epoch``: prefill rows a chunk,
         decode rows a quantum, prompt-finishing rows both (first token
         sampled in-graph, then a full decode quantum inside the same
         dispatch).  The dispatch holds two sub-batches — the chunk stage
@@ -655,7 +736,10 @@ class Engine:
         Degenerate mixes route to the dedicated dispatches: all-decode uses
         the pure decode loop (no dead chunk stage), all-mid-prompt the pure
         chunk step (no dead scan)."""
-        occupied = [i for i, s in enumerate(self.slots) if s is not None]
+        occupied = [
+            i for i, s in enumerate(self.slots)
+            if s is not None and s.epoch == epoch
+        ]
         if not occupied:
             return False
 
@@ -668,10 +752,10 @@ class Engine:
         dec = [i for i in occupied if self.slots[i].state == _DECODE]
         pf = [i for i in occupied if self.slots[i].state == _PREFILL]
         if not pf:
-            return self._decode(now)
+            return self._decode(now, epoch)
         active0 = dec + [i for i in pf if finishing(self.slots[i])]
         if not active0:
-            return self._prefill_round(now)
+            return self._prefill_round(now, epoch)
         # lone-prefill batching (same lever as the split path's deferral): a
         # single fresh admission still pays a whole chunk stage; with more
         # requests queued, waiting one cycle lets the next retirement's
@@ -684,7 +768,7 @@ class Engine:
             and len(dec) >= max(2, self.ecfg.max_slots // 2)
         ):
             self.slots[pf[0]].pf_deferred = True
-            return self._decode(now)
+            return self._decode(now, epoch)
 
         # quantum from the decoding rows' remaining budgets
         rem = [
@@ -708,9 +792,9 @@ class Engine:
             if self.slots[i].state == _DECODE or finishing(self.slots[i])
         ]
         if not pf_rows:
-            return self._decode(now) if scan_rows else False
+            return self._decode(now, epoch) if scan_rows else False
         if not scan_rows:
-            return self._prefill_round(now)
+            return self._prefill_round(now, epoch)
 
         page = self.ecfg.page_size
         c = _bucket(max(c_true(self.slots[i]) for i in pf_rows), self.ecfg.prefill_chunk)
@@ -764,8 +848,8 @@ class Engine:
                 )
 
         pf_tok, toks, keys_out, self.pools = self._fused_steps[q](
-            self.params, self.pools, pf_table, pf_tokens, pf_meta, pf_keys,
-            table, state, keys, join,
+            self._params[epoch], self.pools, pf_table, pf_tokens, pf_meta,
+            pf_keys, table, state, keys, join,
         )
         pf_tok = np.asarray(pf_tok)
         toks = np.asarray(toks)
@@ -814,15 +898,16 @@ class Engine:
 
     # -- split prefill ------------------------------------------------------
 
-    def _prefill_round(self, now: float) -> bool:
-        """ONE batched dispatch advancing every prefilling slot by one chunk
+    def _prefill_round(self, now: float, epoch: int = 0) -> bool:
+        """ONE batched dispatch advancing every prefilling slot of
+        ``epoch`` by one chunk
         (per-row start/kv_len/table — rows are independent requests).  A
         row's final chunk also samples its first token in-graph (adopted
         unless the row is a recompute replay, whose first token was emitted
         before its preemption)."""
         rows = [
             i for i, s in enumerate(self.slots)
-            if s is not None and s.state == _PREFILL
+            if s is not None and s.state == _PREFILL and s.epoch == epoch
         ]
         if not rows:
             return False
@@ -879,7 +964,7 @@ class Engine:
             keys[r] = slot.key
 
         toks, keys_out, self.pools = self._prefill_step(
-            self.params, self.pools, table, tokens, meta, keys
+            self._params[epoch], self.pools, table, tokens, meta, keys
         )
         self.stats["prefill_dispatches"] += 1
         done_rows = [
@@ -913,10 +998,13 @@ class Engine:
 
     # -- split decode -------------------------------------------------------
 
-    def _decode(self, now: float) -> bool:
-        """One decode-quantum dispatch over every decoding slot (the pure
-        path — also the fused round's degenerate all-decode case)."""
-        rows = [i for i, s in enumerate(self.slots) if s is not None and s.state == _DECODE]
+    def _decode(self, now: float, epoch: int = 0) -> bool:
+        """One decode-quantum dispatch over every decoding slot of ``epoch``
+        (the pure path — also the fused round's degenerate all-decode case)."""
+        rows = [
+            i for i, s in enumerate(self.slots)
+            if s is not None and s.state == _DECODE and s.epoch == epoch
+        ]
         if not rows:
             return False
         rem = [
@@ -949,7 +1037,7 @@ class Engine:
             keys[r] = s.key
 
         toks, self.pools, keys_out = self._decode_loops[q](
-            self.params, self.pools, table, state, keys
+            self._params[epoch], self.pools, table, state, keys
         )
         toks = np.asarray(toks)
         keys_out = np.asarray(keys_out)
@@ -962,3 +1050,71 @@ class Engine:
             slot.key = keys_out[r]
             self._consume_quantum(i, toks[r, :q], slot.pos + q, now)
         return True
+
+
+# ---------------------------------------------------------------------------
+# Health monitoring: degradation-triggered hot redeploy
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class HealthConfig:
+    """Trigger thresholds for :class:`HealthMonitor`.
+
+    ``kl_threshold`` bounds the shadow-batch logit KL of the serving params
+    against a clean reference (``simulator.logit_kl`` — the same probe
+    ``deploy_and_probe`` reports); ``min_horizon`` bounds the pool's
+    ``PoolStats.exhaustion_horizon`` in units of "repeats of the observed
+    programming history" under ``endurance`` writes per cell.  Crossing
+    either recommends programming the next checkpoint into spare pool
+    capacity and ``Engine.hot_swap``-ing it in.
+    """
+
+    kl_threshold: float = 0.05
+    min_horizon: float = 1.0
+    endurance: float = 1e8  # pool.DEFAULT_ENDURANCE (kept literal: no import cycle)
+
+
+class HealthMonitor:
+    """Samples serving health against a clean reference on a shadow batch.
+
+    The production loop (see docs/architecture.md, hot-redeploy state
+    machine): ``check()`` every N cycles → on trigger, prepare replacement
+    params (typically: program the next checkpoint through the wear-leveled
+    pool) → ``Engine.hot_swap(prepare_fn)`` → in-flight requests drain on
+    the old epoch, new admissions serve the new one; a failed prepare rolls
+    back and the monitor keeps watching.
+    """
+
+    def __init__(self, cfg: ArchConfig, ref_params: Any, shadow_batch: Any,
+                 hcfg: HealthConfig = HealthConfig()):
+        self.cfg = cfg
+        self.ref_params = ref_params
+        self.shadow_batch = shadow_batch
+        self.hcfg = hcfg
+        self.history: list[dict] = []
+
+    def probe(self, params: Any) -> float:
+        """Shadow-batch logit KL(reference || params) — degradation signal."""
+        from repro.core import simulator  # local: engine has no core deps otherwise
+
+        f = lambda p, b: api.forward(p, self.cfg, b)[0]  # noqa: E731
+        return float(simulator.logit_kl(f, self.ref_params, params, self.shadow_batch))
+
+    def check(self, params: Any, pool: Any = None) -> tuple[bool, dict]:
+        """One health sample; returns (should_redeploy, record).
+
+        ``pool`` (a ``core.pool.CrossbarPool``) adds the wear-endurance
+        signal: a redeploy is recommended when logit KL exceeds the
+        threshold **or** the pool's exhaustion horizon has dropped below
+        ``min_horizon`` — the latter fires even while accuracy is still
+        fine, which is the point (move off the worn cells *before* they
+        die).
+        """
+        kl = self.probe(params)
+        horizon = float("inf")
+        if pool is not None:
+            horizon = pool.stats().exhaustion_horizon(self.hcfg.endurance)
+        trigger = kl > self.hcfg.kl_threshold or horizon < self.hcfg.min_horizon
+        rec = {"kl": kl, "horizon": horizon, "trigger": trigger}
+        self.history.append(rec)
+        return trigger, rec

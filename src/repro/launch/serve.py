@@ -200,6 +200,16 @@ def main() -> None:
         "--endurance", type=float, default=DEFAULT_ENDURANCE,
         help="per-cell write endurance budget for the exhaustion horizon",
     )
+    ap.add_argument(
+        "--fault-rate", type=float, default=0.0,
+        help="per-cell stuck-at rate (split evenly stuck-at-0/1) injected "
+             "into the pool before deployment; reads go through the masks",
+    )
+    ap.add_argument(
+        "--fault-hotspot", type=float, default=0.0,
+        help="fraction of crossbars with 8x the stuck-at rate (the "
+             "heterogeneous-yield setting 'fault' leveling remaps around)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -219,6 +229,20 @@ def main() -> None:
             pool_leveling=args.pool_leveling,
         )
         pool = CrossbarPool(spec, planner_cfg.crossbars, leveling=args.pool_leveling)
+        if args.fault_rate > 0.0:
+            from repro.core import nonideal
+
+            fstate = pool.inject_faults(
+                nonideal.FaultModel(
+                    stuck0=args.fault_rate / 2, stuck1=args.fault_rate / 2,
+                    hotspot_fraction=args.fault_hotspot, hotspot_mult=8.0,
+                ),
+                jax.random.PRNGKey(args.seed),
+            )
+            cells = fstate.fault_cells()
+            print(f"injected faults: {int(cells.sum())} stuck cells across "
+                  f"{pool.n_crossbars} crossbars (worst {int(cells.max())}; "
+                  f"{int(fstate.hot.sum())} hotspots)")
         plan = build_deployment(params, spec, planner_cfg, pool=pool)
         params_hat = deploy_params(params, plan, materialize=args.materialize)
         tokens_hat, tps_hat = generate(

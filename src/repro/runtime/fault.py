@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Tuple, Type
 
 
 @dataclasses.dataclass
@@ -35,16 +35,29 @@ def run_with_retries(
     policy: FaultPolicy,
     *,
     on_failure: Optional[Callable[[int, BaseException], None]] = None,
+    retry_on: Tuple[Type[BaseException], ...] = (Exception,),
 ) -> Any:
-    """Run ``fn`` with bounded retries; ``on_failure(attempt, err)`` between tries."""
+    """Run ``fn`` with bounded retries; ``on_failure(attempt, err)`` between tries.
+
+    ``KeyboardInterrupt``/``SystemExit`` always propagate immediately — a
+    retry boundary must never swallow a shutdown request.  ``retry_on``
+    narrows which exceptions are retried: anything outside it re-raises
+    unchanged on the first occurrence.  The backoff sleep only runs when
+    another attempt follows (never after the final failure), and the
+    terminal ``RuntimeError`` chains the last underlying exception.
+    """
     last: Optional[BaseException] = None
     for attempt in range(policy.max_retries + 1):
         try:
             return fn()
-        except Exception as e:  # noqa: BLE001 — deliberate catch-all boundary
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except BaseException as e:  # noqa: BLE001 — deliberate retry boundary
+            if not isinstance(e, retry_on):
+                raise
             last = e
             if attempt == policy.max_retries:
-                break
+                break  # no backoff after the final attempt
             if on_failure is not None:
                 on_failure(attempt, e)
             if policy.backoff_s:
@@ -65,6 +78,18 @@ class StragglerPolicy:
         self._seen = 0
         self.events: list[dict] = []
 
+    def reset_ewma(self) -> None:
+        """Forget the wall-time baseline (and any pending marks).
+
+        Called automatically after a swap is requested — the replacement
+        host's step time must not be judged against the dead host's EWMA —
+        and available to callers after any event that shifts the baseline
+        (hot param redeploy, topology change).  The next observed step
+        re-seeds the EWMA, exactly like the first post-warmup step.
+        """
+        self._ewma = None
+        self._marks = 0
+
     def observe(self, step: int, wall_s: float, *, swap_fn: Optional[Callable[[], None]] = None) -> bool:
         """Record a step time; returns True if this step was marked straggling."""
         self._seen += 1
@@ -81,8 +106,8 @@ class StragglerPolicy:
                 self.events.append({"step": step, "action": "request_spare_swap"})
                 if swap_fn is not None:
                     swap_fn()
-                self._marks = 0
+                self.reset_ewma()  # recalibrate against the replacement host
         else:
-            self._marks = 0
+            self._marks = 0  # marks must be *consecutive* to demote
             self._ewma = (1 - self.ewma_alpha) * self._ewma + self.ewma_alpha * wall_s
         return straggling

@@ -1,0 +1,268 @@
+"""Device-realistic fault layer (core/nonideal.py): deterministic injection,
+zero-fault parity pins, fault-aware remapping, and serving-side perturbation.
+
+The two contracts everything else leans on:
+
+(1) zero-fault parity — a ``FaultModel()`` with every rate at 0.0 yields
+    all-zero masks, so the non-ideal read is the bitwise identity: pool
+    ``achieved_read`` planes byte-identical to ``achieved``, deployed
+    params byte-identical to a fault-free deployment across all
+    materializations, and engine token streams bit-identical to the clean
+    path;
+(2) the serving perturbation (``perturb_operands``) and the dense fold
+    (``densify_operands``) describe the same faulty device: ``cim_linear``
+    on perturbed operands equals ``x @ densify(perturbed)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.core import bitslice, nonideal, schedule, simulator
+from repro.core.planner import (
+    MATERIALIZATIONS,
+    CrossbarSpec,
+    PlannerConfig,
+    build_deployment,
+    deploy_params,
+)
+from repro.core.pool import CrossbarPool
+from repro.launch.engine import Engine, EngineConfig, Request
+from repro.launch.serve import generate
+from repro.models import api
+
+SPEC = CrossbarSpec(rows=64, cols=8)
+
+
+def _random_packed(key, s: int):
+    q = jax.random.randint(key, (s * SPEC.rows,), 0, 2**SPEC.cols, dtype=jnp.int32)
+    return bitslice.section_planes_packed(q, SPEC.rows, SPEC.cols)
+
+
+# ---------------------------------------------------------------------------
+# injection + read
+# ---------------------------------------------------------------------------
+
+def test_read_packed_handcrafted():
+    planes = jnp.asarray([[0b10110000], [0b01010000]], jnp.uint8)[None]  # [1,2,1]
+    s0 = jnp.asarray([[0b10000000], [0b00000000]], jnp.uint8)[None]
+    s1 = jnp.asarray([[0b00000001], [0b00010000]], jnp.uint8)[None]
+    out = nonideal.read_packed(planes, s0, s1)
+    np.testing.assert_array_equal(
+        np.asarray(out), [[[0b00110001], [0b01010000]]]
+    )
+
+
+def test_inject_deterministic_and_disjoint():
+    m = nonideal.FaultModel(stuck0=0.05, stuck1=0.05, hotspot_fraction=0.25)
+    a = nonideal.inject(SPEC, 8, m, jax.random.PRNGKey(3))
+    b = nonideal.inject(SPEC, 8, m, jax.random.PRNGKey(3))
+    c = nonideal.inject(SPEC, 8, m, jax.random.PRNGKey(4))
+    np.testing.assert_array_equal(np.asarray(a.stuck0), np.asarray(b.stuck0))
+    np.testing.assert_array_equal(np.asarray(a.stuck1), np.asarray(b.stuck1))
+    assert not np.array_equal(np.asarray(a.stuck0), np.asarray(c.stuck0))
+    # a cell has one defect: stuck0 and stuck1 never overlap
+    assert int(jnp.sum(a.stuck0 & a.stuck1)) == 0
+    assert a.fault_cells().sum() > 0
+
+
+def test_inject_padding_rows_fault_free():
+    spec = CrossbarSpec(rows=12, cols=4)  # 12 rows pack into 2 bytes
+    m = nonideal.FaultModel(stuck0=0.5, stuck1=0.5)
+    st = nonideal.inject(spec, 4, m, jax.random.PRNGKey(0))
+    bits = np.asarray(jnp.unpackbits(st.stuck0 | st.stuck1, axis=1))
+    assert bits[:, 12:].sum() == 0  # padding rows carry no faults
+    assert bits[:, :12].sum() > 0
+
+
+def test_zero_rate_masks_zero_and_pool_read_identity():
+    st = nonideal.inject(SPEC, 4, nonideal.FaultModel(), jax.random.PRNGKey(0))
+    assert int(jnp.sum(st.stuck0)) == 0 and int(jnp.sum(st.stuck1)) == 0
+    pool = CrossbarPool(SPEC, 4)
+    pool.inject_faults(nonideal.FaultModel(), jax.random.PRNGKey(0))
+    packed = _random_packed(jax.random.PRNGKey(1), 8)
+    rep = pool.program(packed, schedule.make_chains(8, 4, "stride1"))
+    # byte-identical planes: the non-ideal read at rate 0 IS the clean read
+    np.testing.assert_array_equal(
+        np.asarray(rep.achieved_read), np.asarray(rep.achieved)
+    )
+    np.testing.assert_array_equal(pool.read_state(), pool.state)
+
+
+def test_hotspot_multiplier_concentrates_faults():
+    m = nonideal.FaultModel(
+        stuck0=0.005, stuck1=0.005, hotspot_fraction=0.5, hotspot_mult=16.0
+    )
+    st = nonideal.inject(SPEC, 16, m, jax.random.PRNGKey(9))
+    cells = st.fault_cells()
+    assert st.hot.any() and (~st.hot).any()
+    assert cells[st.hot].mean() > 4 * cells[~st.hot].mean()
+
+
+# ---------------------------------------------------------------------------
+# fault-aware remapping
+# ---------------------------------------------------------------------------
+
+def test_fault_assignment_identity_without_faults():
+    damage = np.zeros((4, 8), np.int64)
+    np.testing.assert_array_equal(
+        nonideal.fault_aware_assignment(damage), np.arange(4, dtype=np.int32)
+    )
+
+
+def test_fault_assignment_avoids_concentrated_faults():
+    packed = _random_packed(jax.random.PRNGKey(2), 12)
+    chains = schedule.make_chains(12, 3, "stride1")
+    words = -(-SPEC.rows // 8)
+    s0 = np.zeros((6, words, SPEC.cols), np.uint8)
+    s1 = np.zeros_like(s0)
+    s0[1] = 0xFF  # crossbar 1: every cell stuck at 0
+    s1[4] = 0xFF  # crossbar 4: every cell stuck at 1
+    st = nonideal.FaultState(
+        model=nonideal.FaultModel(stuck0=1.0),
+        stuck0=jnp.asarray(s0), stuck1=jnp.asarray(s1),
+        hot=np.zeros(6, bool),
+    )
+    damage = nonideal.damage_matrix(packed, chains, st)
+    assert damage.shape == (3, 6)
+    assign = nonideal.fault_aware_assignment(damage)
+    assert len(set(assign.tolist())) == 3  # distinct crossbars
+    assert 1 not in assign and 4 not in assign
+
+
+def test_fault_leveling_reduces_read_damage():
+    """With hotspot faults and spare capacity, 'fault' leveling reads back
+    strictly fewer flipped bits than the naive identity assignment."""
+    m = nonideal.FaultModel(
+        stuck0=0.02, stuck1=0.02, hotspot_fraction=0.4, hotspot_mult=16.0
+    )
+    packed = _random_packed(jax.random.PRNGKey(5), 16)
+    chains = schedule.make_chains(16, 4, "stride1")
+    flips = {}
+    for leveling in ("none", "fault"):
+        pool = CrossbarPool(SPEC, 8, leveling=leveling)
+        pool.inject_faults(m, jax.random.PRNGKey(11))
+        rep = pool.program(packed, chains)
+        diff = jnp.unpackbits(rep.achieved ^ rep.achieved_read, axis=1)
+        flips[leveling] = int(jnp.sum(diff.astype(jnp.int32)))
+    assert flips["fault"] < flips["none"]
+
+
+def test_fault_leveling_without_faults_falls_back_to_lpt():
+    packed = _random_packed(jax.random.PRNGKey(6), 8)
+    chains = schedule.make_chains(8, 4, "stride1")
+    rep_f = CrossbarPool(SPEC, 4, leveling="fault").program(packed, chains)
+    rep_l = CrossbarPool(SPEC, 4, leveling="lpt").program(packed, chains)
+    np.testing.assert_array_equal(rep_f.assignment, rep_l.assignment)
+
+
+def test_pool_spec_validation():
+    with pytest.raises(ValueError):
+        CrossbarPool(CrossbarSpec(rows=0, cols=8), 2)
+    with pytest.raises(ValueError):
+        CrossbarPool(CrossbarSpec(rows=64, cols=-1), 2)
+
+
+# ---------------------------------------------------------------------------
+# serving-side perturbation
+# ---------------------------------------------------------------------------
+
+def test_perturb_operands_ideal_is_same_object():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 12)) * 0.05
+    op = simulator.prepare_linear(w, CrossbarSpec(rows=16, cols=8), materialize="packed")
+    assert nonideal.perturb_operands(op, nonideal.FaultModel(), jax.random.PRNGKey(0)) is op
+
+
+@pytest.mark.parametrize(
+    "model",
+    [
+        nonideal.FaultModel(stuck0=0.03, stuck1=0.03),
+        nonideal.FaultModel(drift_sigma=0.08),
+        nonideal.FaultModel(ir_alpha=0.2),
+        nonideal.FaultModel(stuck0=0.02, stuck1=0.02, drift_sigma=0.05, ir_alpha=0.1),
+    ],
+)
+def test_perturbed_cim_linear_matches_densify(model):
+    w = jax.random.normal(jax.random.PRNGKey(0), (48, 20)) * 0.05
+    op = simulator.prepare_linear(w, CrossbarSpec(rows=16, cols=8), materialize="packed")
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 48))
+    pop = nonideal.perturb_operands(op, model, jax.random.PRNGKey(7))
+    y_cim = simulator.cim_linear(x, pop)
+    y_dense = x @ simulator.densify_operands(pop)
+    np.testing.assert_allclose(np.asarray(y_cim), np.asarray(y_dense), atol=1e-5)
+    # and the perturbation actually did something
+    y_clean = simulator.cim_linear(x, op)
+    assert float(jnp.max(jnp.abs(y_cim - y_clean))) > 0
+
+
+def test_perturb_operands_rejects_int8_dicts():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 12)) * 0.05
+    op = simulator.prepare_linear(w, CrossbarSpec(rows=16, cols=8), materialize="int8")
+    with pytest.raises(ValueError):
+        nonideal.perturb_operands(op, nonideal.FaultModel(stuck0=0.1), jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# zero-fault parity end to end (deployment + engine)
+# ---------------------------------------------------------------------------
+
+LM_SPEC = CrossbarSpec(rows=128, cols=10)
+LM_CFG = PlannerConfig(p_stuck=0.5, min_size=1024)
+
+
+@pytest.fixture(scope="module")
+def gemma():
+    cfg = get_arch("gemma-2b", reduced=True)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _deploy(params, *, faulted: bool, materialize: str):
+    pool = CrossbarPool(LM_SPEC, LM_CFG.crossbars)
+    if faulted:
+        pool.inject_faults(nonideal.FaultModel(), jax.random.PRNGKey(5))
+    plan = build_deployment(params, LM_SPEC, LM_CFG, pool=pool)
+    return deploy_params(params, plan, materialize=materialize)
+
+
+@pytest.mark.parametrize("materialize", MATERIALIZATIONS)
+def test_zero_fault_deployment_byte_identical(gemma, materialize):
+    """Fault rate 0.0 leaves every deployed leaf — packed planes included —
+    byte-identical to the clean deployment, for all materializations."""
+    cfg, params = gemma
+    clean = _deploy(params, faulted=False, materialize=materialize)
+    zero = _deploy(params, faulted=True, materialize=materialize)
+    la, lb = jax.tree.leaves(clean), jax.tree.leaves(zero)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_zero_fault_engine_stream_bit_identical(gemma):
+    """Engine token streams from a zero-fault-injected packed deployment are
+    bit-identical to solo generation on the clean deployment."""
+    cfg, params = gemma
+    clean = _deploy(params, faulted=False, materialize="packed")
+    zero = _deploy(params, faulted=True, materialize="packed")
+    specs = [(11, 5, True, 0), (7, 6, False, 3)]
+    reqs = []
+    for rid, (plen, gen, greedy, seed) in enumerate(specs):
+        prompt = np.asarray(
+            jax.random.randint(jax.random.PRNGKey(100 + rid), (plen,), 0, cfg.vocab_size)
+        )
+        reqs.append(Request(rid=rid, prompt=prompt, max_new_tokens=gen,
+                            greedy=greedy, seed=seed))
+    eng = Engine(
+        cfg, zero,
+        EngineConfig(max_slots=2, page_size=8, max_seq_len=64, prefill_chunk=8,
+                     decode_quantum=4),
+    )
+    results = eng.run(reqs)
+    for req, res in zip(reqs, results):
+        batch = {"tokens": jnp.asarray(req.prompt)[None]}
+        toks, _ = generate(cfg, clean, batch, gen_len=req.max_new_tokens,
+                           greedy=req.greedy, seed=req.seed)
+        assert res.tokens == [int(t) for t in np.asarray(toks[0])], f"rid {req.rid}"

@@ -13,6 +13,7 @@ from repro.launch.steps import make_train_step
 from repro.models import api
 from repro.optim import AdamWConfig, adamw_init
 from repro.runtime import FaultPolicy, StragglerPolicy, TrainLoop, TrainLoopConfig
+from repro.runtime.fault import run_with_retries
 
 
 # ---------------------------------------------------------------------------
@@ -131,6 +132,81 @@ def test_straggler_policy_marks_and_swaps():
     pol.observe(11, 5.0, swap_fn=lambda: swaps.append(11))
     assert swaps == [11]
     assert any(e.get("action") == "request_spare_swap" for e in pol.events)
+
+
+def test_retry_on_filter_passes_other_exceptions_through():
+    """Exceptions outside ``retry_on`` re-raise unchanged on first occurrence
+    — no retries burned, no RuntimeError wrapper."""
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        raise KeyError("not a transient fault")
+
+    with pytest.raises(KeyError):
+        run_with_retries(fn, FaultPolicy(max_retries=3), retry_on=(ValueError,))
+    assert calls["n"] == 1
+
+
+def test_keyboard_interrupt_never_retried():
+    """A shutdown request must cross the retry boundary untouched, even when
+    ``retry_on`` is (deliberately or accidentally) maximally broad."""
+    calls = {"n": 0}
+
+    def fn():
+        calls["n"] += 1
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        run_with_retries(fn, FaultPolicy(max_retries=3), retry_on=(BaseException,))
+    assert calls["n"] == 1
+
+
+def test_no_backoff_sleep_after_final_attempt(monkeypatch):
+    """Backoff only runs when another attempt follows: max_retries=2 means
+    3 attempts but only 2 sleeps."""
+    import repro.runtime.fault as fault_mod
+
+    sleeps: list[float] = []
+    monkeypatch.setattr(fault_mod.time, "sleep", sleeps.append)
+
+    def fn():
+        raise RuntimeError("down")
+
+    with pytest.raises(RuntimeError, match="failed after 3 attempts"):
+        run_with_retries(fn, FaultPolicy(max_retries=2, backoff_s=0.01))
+    assert sleeps == [0.01, 0.02]  # exponential, and none after the last try
+
+
+def test_straggler_marks_reset_on_fast_step():
+    """Marks must be *consecutive*: a fast step between two slow ones
+    prevents demotion."""
+    pol = StragglerPolicy(tolerance=2.0, demote_after=2, warmup_steps=0)
+    for step in range(5):
+        pol.observe(step, 1.0)
+    swaps = []
+    pol.observe(5, 5.0, swap_fn=lambda: swaps.append(5))
+    pol.observe(6, 1.0)  # recovers: resets the consecutive-mark counter
+    pol.observe(7, 5.0, swap_fn=lambda: swaps.append(7))
+    assert swaps == []
+    assert not any(e.get("action") == "request_spare_swap" for e in pol.events)
+
+
+def test_straggler_ewma_resets_after_swap():
+    """After a spare swap the EWMA is forgotten: the replacement host's
+    first step re-seeds the baseline instead of being judged against the
+    dead host's history (a fast replacement must not look 'normal-fast'
+    and a 3x-slower-than-dead-host replacement must not be demoted)."""
+    pol = StragglerPolicy(tolerance=2.0, demote_after=1, warmup_steps=0)
+    for step in range(5):
+        pol.observe(step, 1.0)
+    assert pol.observe(5, 10.0, swap_fn=lambda: None)  # demoted immediately
+    assert pol._ewma is None and pol._marks == 0
+    # replacement host is 4x slower than the old baseline: first observation
+    # re-seeds, second (same speed) is NOT straggling
+    assert not pol.observe(6, 4.0)
+    assert not pol.observe(7, 4.0)
+    assert pol._ewma == pytest.approx(4.0, rel=0.2)
 
 
 def test_redeploy_pricing_in_loop(tmp_path):
