@@ -27,14 +27,22 @@ from benchmarks.common import OUT_DIR, banner, save_json
 DRYRUN_DIR = Path("experiments/dryrun")
 
 
-def cim_weight_bytes(shape: tuple[int, ...], cols: int, repr: str) -> int:
+def cim_weight_bytes(
+    shape: tuple[int, ...], cols: int, repr: str, *, tile_density: float = 1.0
+) -> int:
     """Weight bytes one matmul pass must read for a [..., K, N] tensor.
 
     * ``dense_f32``    — 4 bytes per weight (the dense-materialized baseline);
     * ``planes_int8``  — ``cols`` bytes per weight: one int8 per bit cell,
       the naive bit-sliced operand;
     * ``packed``       — bit-packed planes + sign mask: ``(cols+1) *
-      ceil(K/8) * N`` bytes per [K, N] slab, i.e. ~(cols+1)/8 per weight.
+      ceil(K/8) * N`` bytes per [K, N] slab, i.e. ~(cols+1)/8 per weight;
+    * ``packed_codec`` — codec-compressed packed planes
+      (``core.planes.encode_operands``): ``tile_density`` is the fraction of
+      16-byte plane tiles flagged nonzero (zero tiles are never read), plus
+      the codec sideband — one zero-tile flag byte per plane tile and, for
+      ``col_perm``, ``cols`` plane-id bytes per slab.  ``tile_density=1``
+      degenerates to ``packed`` plus the sideband.
     """
     if len(shape) < 2:
         raise ValueError(f"weight shape {shape} has no (K, N) axes")
@@ -43,10 +51,16 @@ def cim_weight_bytes(shape: tuple[int, ...], cols: int, repr: str) -> int:
         return 4 * n_elem
     if repr == "planes_int8":
         return cols * n_elem
-    if repr == "packed":
+    if repr in ("packed", "packed_codec"):
         k, n = shape[-2], shape[-1]
         lead = math.prod(shape[:-2]) if len(shape) > 2 else 1
-        return lead * (cols + 1) * (-(-k // 8)) * n
+        kw = -(-k // 8)
+        if repr == "packed":
+            return lead * (cols + 1) * kw * n
+        n_tiles = -(-kw // 16)  # core.planes.OPERAND_TILE_BYTES
+        plane_b = round(cols * kw * n * min(max(tile_density, 0.0), 1.0))
+        meta_b = cols * n_tiles + cols  # nz flags + plane ids
+        return lead * (plane_b + kw * n + meta_b)
     raise ValueError(f"unknown representation {repr!r}")
 
 
@@ -99,6 +113,28 @@ def serving_weight_traffic() -> dict | None:
     }
 
 
+def codec_weight_traffic() -> dict | None:
+    """Fold per-codec deployed-operand bytes (benchmarks.plane_compression)
+    into the report: measured bytes/weight per plane codec."""
+    path = OUT_DIR / "BENCH_compress.json"
+    if not path.exists():
+        return None
+    d = json.loads(path.read_text())
+    srv = d.get("serving")
+    if not srv:
+        return None
+    return {
+        "arch": srv.get("arch"),
+        "bytes_per_weight": {
+            c: r["bytes_per_weight"] for c, r in srv["codecs"].items()
+        },
+        "traffic_reduction_vs_raw": {
+            c: r.get("traffic_reduction_vs_raw")
+            for c, r in srv["codecs"].items()
+        },
+    }
+
+
 def run(variant: str = "") -> dict:
     cells = load_cells(variant=variant)
     rows = table_rows(cells)
@@ -115,6 +151,7 @@ def run(variant: str = "") -> dict:
         "worst_roofline_fraction": worst[:3],
         "most_collective_bound": most_coll[:3],
         "serving_weight_traffic": serving_weight_traffic(),
+        "codec_weight_traffic": codec_weight_traffic(),
     }
 
 
@@ -132,6 +169,12 @@ def main() -> None:
         print(f"  serving weight traffic ({swt['arch']}): dense {t['dense_f32']:,} B/step, "
               f"int8-planes {t['planes_int8']:,} B/step, packed {t['packed']:,} B/step "
               f"(int8/packed = {t['int8_over_packed']:.2f}x)")
+    cwt = res["codec_weight_traffic"]
+    if cwt:
+        per = "  ".join(
+            f"{c}:{b:.3f}" for c, b in cwt["bytes_per_weight"].items()
+        )
+        print(f"  codec weight traffic ({cwt['arch']}): B/weight  {per}")
     rows = [r for r in res["rows"] if args.mesh in (None, r["mesh"])]
     if not rows:
         print("  no dry-run artifacts found — run: python -m repro.launch.dryrun --all --mesh both")

@@ -21,6 +21,7 @@ from benchmarks import (
     fig8_stucking,
     fig9_p_sweep,
     fig10_columns,
+    plane_compression,
     planner_throughput,
     pool_wear,
     redeploy_delta,
@@ -111,6 +112,23 @@ def main() -> None:
     summary["planner_throughput"] = {
         "speedup": rpt["speedup"],
         "bit_exact": rpt["bit_exact"],
+    }
+
+    banner("Plane codecs — reprogramming transitions + weight traffic")
+    rpc = plane_compression.run(max_elems=max_elems, gen=4 if not args.full else 8)
+    for m, r in rpc["models"].items():
+        for codec, c in r["codecs"].items():
+            print(f"  {m:10s} {codec:12s} {c['transition_reduction_vs_raw']:.2f}x "
+                  f"transitions, {c['compression_vs_raw']:.2f}x bytes vs raw")
+    parity = all(
+        r["tokens_match_dense"] for r in rpc["serving"]["codecs"].values()
+    )
+    print(f"  best transition reduction {rpc['best_transition_reduction']:.2f}x, "
+          f"serve token parity: {parity}")
+    save_json("BENCH_compress", rpc)
+    summary["plane_compression"] = {
+        "best_transition_reduction": rpc["best_transition_reduction"],
+        "serve_token_parity": parity,
     }
 
     banner("Pool wear — persistent crossbar pool + wear leveling")

@@ -195,6 +195,29 @@ def pack_linear_sign(sign: jax.Array) -> jax.Array:
     return jnp.packbits((sign < 0).astype(jnp.uint8), axis=-2)
 
 
+def encode_planes(packed: jax.Array, codec: str = "raw", *, chains=None, pin_cols=0):
+    """Canonical packed planes -> stored :class:`~repro.core.planes.PlaneSet`.
+
+    The codec layer's entry point from the slicing side: what used to be
+    "pack is the stored form" becomes pack -> encode.  ``codec`` is one of
+    :data:`repro.core.planes.CODECS`; ``col_perm*`` codecs additionally need
+    the programming ``chains`` to plan column orders against each section's
+    actual predecessor.  ``decode_planes(encode_planes(p, c)) == p``
+    byte-for-byte for every codec.
+    """
+    from repro.core import planes  # deferred: planes imports schedule -> bitslice
+
+    return planes.encode(packed, codec, chains=chains, pin_cols=pin_cols)
+
+
+def decode_planes(plane_set) -> jax.Array:
+    """Stored :class:`~repro.core.planes.PlaneSet` (or a raw packed array)
+    -> canonical packed uint8[S, ceil(rows/8), cols] planes."""
+    if isinstance(plane_set, jax.Array) or not hasattr(plane_set, "decode"):
+        return plane_set
+    return plane_set.decode()
+
+
 def section(flat: jax.Array, rows: int) -> tuple[jax.Array, int]:
     """Partition a flat array into crossbar sections of ``rows`` weights.
 

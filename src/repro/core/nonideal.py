@@ -211,6 +211,13 @@ def perturb_operands(
     zero-fault serving graph is literally the clean graph.  Hotspot
     mixture does not apply here: serving operands carry no crossbar
     identity (that lives in the pool path).
+
+    Codec-encoded operands (``core.planes.encode_operands``) perturb in
+    their *stored* layout: masks and gains attach to physical planes as the
+    hardware would, and logical decode (``plane_ids`` significance) happens
+    after the masked read — consumers apply stuck masks first, then decode
+    (post-decode fault semantics; see ``simulator.densify_operands``).
+    Perturb AFTER encoding for this composition to hold.
     """
     if "planes_packed" not in op:
         raise ValueError("perturb_operands expects packed serving operands")

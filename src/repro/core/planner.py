@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import bitslice, schedule, stucking, sws
+from repro.core import bitslice, planes, schedule, stucking, sws
 
 if TYPE_CHECKING:
     from repro.core.pool import CrossbarPool
@@ -79,6 +79,11 @@ class PlannerConfig:
     # "none" | "rotate" | "lpt" | "fault" (fault-aware remap, core/nonideal);
     # None defers to the pool's own setting
     pool_leveling: str | None = None
+    # stored-plane codec (core/planes.py): "raw" | "const_rle" | "col_perm" |
+    # "col_perm_rle".  Non-raw codecs change the *physical* bits the
+    # crossbars hold (and hence the priced transitions); logical planes —
+    # and the deployed w_hat — decode back byte-identically.
+    codec: str = "raw"
 
 
 @dataclasses.dataclass
@@ -467,8 +472,25 @@ def _analyze_tensor_pool(
     else:
         raise ValueError(f"unknown planner impl: {config.impl!r}")
 
+    # codec layer: the pool programs/prices/wears the *stored* bits
+    # (planes.PlaneSet.physical — permuted columns, reconstructed constants),
+    # so transitions under a codec are the physical transitions its layout
+    # actually costs.  The bool impl stays raw-only: it is the parity oracle
+    # for the packed pipeline, and codec encoding happens on packed words.
+    pset = None
+    if config.codec != "raw":
+        if config.impl == "bool":
+            raise ValueError("plane codecs require impl='packed' (bool is the raw parity oracle)")
+        # under bit stucking the stored lowest-order columns are deliberately
+        # under-programmed; pin them so the bounded LSB error stays an LSB
+        # error (plan_col_order docstring)
+        pin = config.stuck_cols if config.p_stuck < 1.0 else 0
+        pset = planes.encode(
+            aux["packed_s"], config.codec, chains=chains, pin_cols=pin
+        )
+
     prep = pool.program(
-        aux["packed_s"],
+        pset if pset is not None else aux["packed_s"],
         chains,
         p_stuck=config.p_stuck,
         key=key,
@@ -480,9 +502,15 @@ def _analyze_tensor_pool(
 
     # dequantize what the array *reads back* (== prep.achieved byte-for-byte
     # unless the pool has injected faults — core/nonideal.py), so deployed
-    # weights and everything served from them see the non-ideal cells
+    # weights and everything served from them see the non-ideal cells.
+    # Under a codec the readback is in the stored layout: fault masks have
+    # already applied to the physical bits, and logical planes are recovered
+    # *after* the read (planes.logical_from_physical), mirroring hardware.
+    achieved_read = prep.achieved_read
+    if pset is not None:
+        achieved_read = planes.logical_from_physical(achieved_read, pset.col_order)
     w_hat_slots = _dequant_slots(
-        prep.achieved_read, aux["sign_slots"], aux["scale"], aux["offset"], rows=spec.rows
+        achieved_read, aux["sign_slots"], aux["scale"], aux["offset"], rows=spec.rows
     )
     w_hat_flat = w_hat_slots.reshape(-1)[aux["inv_perm"]][:n]
     w_hat = w_hat_flat.reshape(w.shape).astype(w.dtype)
@@ -526,8 +554,21 @@ def analyze_tensor(
     tensor streams through persistent crossbar state instead of a pristine
     per-tensor pool (see ``core.pool``).
     """
+    if config.codec not in planes.CODECS:
+        raise ValueError(
+            f"unknown plane codec {config.codec!r}; choose from {planes.CODECS}"
+        )
     if pool is not None:
         return _analyze_tensor_pool(w, spec, config, key, pool, name=name)
+    if config.codec != "raw":
+        # Codec pricing is inherently a physical-programming question, so the
+        # stateless path routes through an ephemeral pristine pool: streaming
+        # a tensor into an all-zero pool reproduces stateless per-tensor
+        # accounting bit-exactly (pool parity invariant (a), tests/test_pool.py).
+        from repro.core.pool import CrossbarPool
+
+        eph = CrossbarPool(spec, max(1, config.crossbars))
+        return _analyze_tensor_pool(w, spec, config, key, eph, name=name)
     if config.impl == "bool":
         return _analyze_tensor_bool(w, spec, config, key, name=name)
     if config.impl != "packed":
@@ -660,7 +701,13 @@ def _dense_only(name: str) -> bool:
     return any(p in parts for p in MATERIALIZE_DENSE_ONLY)
 
 
-def deploy_params(params: Any, plan: DeploymentPlan, *, materialize: str = "dense") -> Any:
+def deploy_params(
+    params: Any,
+    plan: DeploymentPlan,
+    *,
+    materialize: str = "dense",
+    codec: str | None = None,
+) -> Any:
     """Return a params pytree with deployed tensors replaced by achieved state.
 
     ``materialize`` chooses the serving representation of every deployed
@@ -674,6 +721,12 @@ def deploy_params(params: Any, plan: DeploymentPlan, *, materialize: str = "dens
     * ``"planes_int8"`` — signed int8 plane operand dicts (one byte per bit
       cell); the parity/traffic baseline for the packed path.
 
+    ``codec`` (default: the plan's ``config.codec``) applies the serving-side
+    plane codec to packed operands (``planes.encode_operands``: plane-axis
+    reorder + zero-tile flags).  Encoded operands are exact re-encodings —
+    served tokens stay bit-identical to dense (pinned by
+    ``tests/test_cim_packed.py``).
+
     Operand dicts are exact re-encodings of ``w_hat`` (same achieved weights,
     stucking included) — see ``simulator.operands_from_dense``.
     """
@@ -681,6 +734,9 @@ def deploy_params(params: Any, plan: DeploymentPlan, *, materialize: str = "dens
         raise ValueError(
             f"unknown materialize {materialize!r}; choose from {MATERIALIZATIONS}"
         )
+    codec = plan.config.codec if codec is None else codec
+    if codec not in planes.CODECS:
+        raise ValueError(f"unknown plane codec {codec!r}; choose from {planes.CODECS}")
     if materialize != "dense":
         from repro.core import simulator
 
@@ -699,7 +755,7 @@ def deploy_params(params: Any, plan: DeploymentPlan, *, materialize: str = "dens
         out.append(
             simulator.operands_from_dense(
                 w_hat, r.scale, r.offset, plan.spec.encoding, plan.spec.cols,
-                materialize=materialize,
+                materialize=materialize, codec=codec,
             )
         )
     return jax.tree_util.tree_unflatten(treedef, out)

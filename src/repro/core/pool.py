@@ -386,19 +386,29 @@ class CrossbarPool:
         """Stream one tensor's sections through the pool along ``chains``.
 
         ``packed`` are canonical packed planes ``uint8[S, W, cols]`` (bool
-        planes are packed on entry).  Each chain is assigned a physical
-        crossbar (``leveling=None`` defers to the pool's own setting); its
-        first program reprograms whatever that crossbar currently holds —
-        the cross-tensor seam.  State and wear counters are updated in
-        place; per-job costs, seams, and wear increments come back in the
-        report.  Every program is counted (``include_initial`` semantics are
-        inherently True for a pool: the seam is a physical write).
+        planes are packed on entry), or a :class:`~repro.core.planes.PlaneSet`
+        — a codec-encoded stored representation, in which case the pool
+        programs its ``physical()`` bits: the words the crossbar actually
+        holds (permuted columns for ``col_perm``, reconstructed constants for
+        ``const_rle``).  Seam pricing, wear counters, and fault masks all see
+        those physical bits, so endurance accounting stays exact under every
+        codec; the caller recovers logical planes from ``achieved_read`` with
+        ``planes.logical_from_physical`` *after* the (possibly faulty) read.
+        Each chain is assigned a physical crossbar (``leveling=None`` defers
+        to the pool's own setting); its first program reprograms whatever
+        that crossbar currently holds — the cross-tensor seam.  State and
+        wear counters are updated in place; per-job costs, seams, and wear
+        increments come back in the report.  Every program is counted
+        (``include_initial`` semantics are inherently True for a pool: the
+        seam is a physical write).
         """
         if impl not in ("packed", "bool"):
             raise ValueError(f"unknown pool impl: {impl!r}")
         leveling = self.leveling if leveling is None else leveling
         if leveling not in LEVELINGS:
             raise ValueError(f"unknown pool leveling {leveling!r}; choose from {LEVELINGS}")
+        if hasattr(packed, "physical"):  # PlaneSet: program the stored bits
+            packed = packed.physical()
         packed = jnp.asarray(packed)
         if packed.dtype != jnp.uint8:
             packed = bitslice.pack_rows(packed)

@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bitslice
+from repro.core import planes as planes_mod
 from repro.core.planner import CrossbarSpec, DeploymentPlan, PlannerConfig, analyze_tensor
 from repro.kernels._util import on_tpu
 
@@ -84,6 +85,7 @@ def operands_from_dense(
     encoding: str,
     cols: int,
     materialize: str = "packed",
+    codec: str = "raw",
 ) -> dict[str, jax.Array]:
     """Recover crossbar operands from achieved dense weights ``w_hat``.
 
@@ -91,7 +93,17 @@ def operands_from_dense(
     true for any planner-deployed tensor, stucking included.  The integer
     magnitude is recovered by rounding: q <= 2**cols - 1 keeps the float
     error of ``q*scale/scale`` far below 0.5, so the round is exact.
+
+    ``codec`` applies the serving-side plane codec (``planes.encode_operands``)
+    to packed operands — an exact re-encoding (plane-axis reorder + zero-tile
+    flags), so every consumer decodes bit-identical weights.  Only the packed
+    materialization has a stored-plane layout to encode.
     """
+    if codec != "raw" and materialize != "packed":
+        raise ValueError(
+            f"codec {codec!r} encodes packed serving operands; materialize "
+            f"{materialize!r} has no stored-plane layout"
+        )
     w32 = w_hat.astype(jnp.float32)
     scale = jnp.asarray(scale, jnp.float32)
     offset = jnp.asarray(offset, jnp.float32)
@@ -107,7 +119,10 @@ def operands_from_dense(
     else:
         raise ValueError(f"unknown encoding: {encoding!r}")
     build = packed_operands if materialize == "packed" else int8_plane_operands
-    return build(q, sign, scale, offset, cols)
+    op = build(q, sign, scale, offset, cols)
+    if codec != "raw":
+        op = planes_mod.encode_operands(op, codec)
+    return op
 
 
 def is_cim_operands(w) -> bool:
@@ -137,7 +152,11 @@ def densify_operands(op: dict[str, jax.Array]) -> jax.Array:
     if "stuck0_packed" in op:
         planes = (planes & ~op["stuck0_packed"]) | op["stuck1_packed"]
     k = op["kdim"].shape[-2]
-    w = cim_ref.unpack_weights(planes, op["sign_packed"], k, op.get("plane_gain"))
+    # plane_ids (col_perm serving codec) decodes AFTER the stuck-mask read:
+    # faults attach to stored bit lines, significance to logical planes
+    w = cim_ref.unpack_weights(
+        planes, op["sign_packed"], k, op.get("plane_gain"), op.get("plane_ids")
+    )
     w = w * op["scale"] + op["offset"]
     if "row_atten" in op:
         w = w * op["row_atten"][..., :, None]
@@ -162,7 +181,11 @@ def densify_packed(params):
 
 
 def prepare_linear(
-    w: jax.Array, spec: CrossbarSpec = CrossbarSpec(), *, materialize: str = "int8"
+    w: jax.Array,
+    spec: CrossbarSpec = CrossbarSpec(),
+    *,
+    materialize: str = "int8",
+    codec: str = "raw",
 ) -> dict[str, jax.Array]:
     """Quantize a [K, N] weight matrix into crossbar operands for cim_linear.
 
@@ -171,15 +194,24 @@ def prepare_linear(
     *programming order* optimizations which live in the planner.
     ``materialize="int8"`` keeps the original signed int8 planes (plus the
     ``encoding`` tag, for parity with older callers); ``"packed"`` returns the
-    bit-packed serving operands.
+    bit-packed serving operands, optionally codec-encoded
+    (``planes.encode_operands`` — exact, see ``operands_from_dense``).
     """
     if w.ndim != 2:
         raise ValueError("prepare_linear expects a 2-D weight")
+    if codec != "raw" and materialize != "packed":
+        raise ValueError(
+            f"codec {codec!r} encodes packed serving operands; materialize "
+            f"{materialize!r} has no stored-plane layout"
+        )
     qt = bitslice.quantize(w, spec.cols, spec.encoding)
     q = qt.q.reshape(w.shape)
     sign = qt.sign.reshape(w.shape)
     if materialize == "packed":
-        return packed_operands(q, sign, qt.scale, qt.offset, spec.cols)
+        op = packed_operands(q, sign, qt.scale, qt.offset, spec.cols)
+        if codec != "raw":
+            op = planes_mod.encode_operands(op, codec)
+        return op
     if materialize != "int8":
         raise ValueError(f"unknown materialize: {materialize!r}")
     ops = int8_plane_operands(q, sign, qt.scale, qt.offset, spec.cols)
@@ -213,13 +245,24 @@ def cim_linear(x: jax.Array, operands: dict[str, jax.Array], *, use_kernel: bool
         if "row_atten" in operands:
             x = x * operands["row_atten"]
         gain = operands.get("plane_gain")
-        if gain is not None:
+        pids = operands.get("plane_ids")
+        if gain is not None or pids is not None:
+            # permuted plane axis (col_perm codec) and drifted gains both
+            # need per-plane weights the Pallas kernel's power-of-two unpack
+            # loop does not carry — exact ref path, same dispatch rule as
+            # plane_gain has always taken
             y = cim_ref.cim_matmul_packed(
-                x, planes, operands["sign_packed"], operands["scale"], gain
+                x, planes, operands["sign_packed"], operands["scale"], gain, pids
+            )
+        elif kernel:
+            # const_rle zero-tile flags drive the kernel's K-block skipping
+            # (bit-exact: a skipped tile contributes exact zeros)
+            y = cim_ops.cim_matmul_packed(
+                x, planes, operands["sign_packed"], operands["scale"],
+                tile_nz=operands.get("plane_tile_nz"),
             )
         else:
-            fn = cim_ops.cim_matmul_packed if kernel else cim_ref.cim_matmul_packed
-            y = fn(x, planes, operands["sign_packed"], operands["scale"])
+            y = cim_ref.cim_matmul_packed(x, planes, operands["sign_packed"], operands["scale"])
     elif kernel or (use_kernel and "encoding" in operands):
         # explicit use_kernel on a legacy operand dict keeps the historical
         # behavior (interpret-mode Pallas off-TPU) for kernel parity tests

@@ -152,6 +152,92 @@ def _packed_kernel(x_ref, p_ref, s_ref, o_ref, acc_ref, *, cols: int, n_k: int):
         o_ref[...] = acc_ref[...]
 
 
+def _packed_skip_kernel(
+    nz_ref, x_ref, p_ref, s_ref, o_ref, acc_ref, w_ref, *, cols: int, n_k: int
+):
+    """Packed kernel twin with zero-tile skipping (const_rle serving codec).
+
+    ``nz_ref`` (SMEM, scalar-prefetched) holds one flag per (plane, K-block)
+    tile, flattened row-major to int32[cols * n_k]; a 0 flag means every byte
+    of that plane's K-block is zero across all N, so its unpack+accumulate is
+    skipped.  Bit-exact with ``_packed_kernel``: a skipped tile contributes
+    exact zeros to the magnitude tile.  The reconstruction accumulates in a
+    VMEM scratch (``w_ref``) because ``pl.when`` bodies mutate refs, not
+    loop-carried values.
+    """
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    bk8, bn = s_ref.shape
+    bk = bk8 * 8
+    w_ref[...] = jnp.zeros_like(w_ref)
+    for b in range(cols):
+        @pl.when(nz_ref[b * n_k + kk] != 0)
+        def _acc(b=b):
+            w_ref[...] += (2.0**b) * _unpack_bits(p_ref[b, :, :], bk, bn).astype(
+                jnp.float32
+            )
+    sgn = 1.0 - 2.0 * _unpack_bits(s_ref[...], bk, bn).astype(jnp.float32)
+    x = x_ref[...].astype(jnp.float32)  # (M, bk)
+    acc_ref[...] += jax.lax.dot(x, w_ref[...] * sgn, preferred_element_type=jnp.float32)
+
+    @pl.when(kk == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def cim_matmul_packed_skip_kernel(
+    x: jax.Array,
+    planes_packed: jax.Array,
+    sign_packed: jax.Array,
+    tile_nz: jax.Array,
+    *,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Raw packed entry with zero-tile skip flags (same contract as
+    :func:`cim_matmul_packed_kernel`, plus ``tile_nz`` int32[cols * K/bk]
+    flattened row-major from uint8[cols, K/bk] — see
+    ``core.planes.encode_operands``).  Flags ride the scalar-prefetch lane
+    (SMEM), so the skip predicates are known before each grid step runs."""
+    m, k = x.shape
+    cols, kw, n = planes_packed.shape
+    assert bk % 8 == 0, f"bk={bk} must be a multiple of 8 (packed K bytes)"
+    assert kw * 8 == k, f"planes K/8={kw} inconsistent with x K={k}"
+    assert sign_packed.shape == (kw, n), (sign_packed.shape, (kw, n))
+    assert m % 8 == 0, f"M={m} not a multiple of 8"
+    assert n % bn == 0, f"N={n} not a multiple of bn={bn}"
+    assert k % bk == 0, f"K={k} not a multiple of bk={bk}"
+    n_k = cdiv(k, bk)
+    assert tile_nz.shape == (cols * n_k,), (tile_nz.shape, cols, n_k)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(cdiv(n, bn), n_k),
+        in_specs=[
+            pl.BlockSpec((m, bk), lambda j, kk, nz: (0, kk)),
+            pl.BlockSpec((cols, bk // 8, bn), lambda j, kk, nz: (0, kk, j)),
+            pl.BlockSpec((bk // 8, bn), lambda j, kk, nz: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j, kk, nz: (0, j)),
+        scratch_shapes=[
+            pltpu.VMEM((m, bn), jnp.float32),
+            pltpu.VMEM((bk, bn), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_packed_skip_kernel, cols=cols, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(tile_nz.astype(jnp.int32), x, planes_packed, sign_packed)
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
 def cim_matmul_packed_kernel(
     x: jax.Array,

@@ -7,7 +7,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels._util import cdiv, default_interpret, pad_axis_to, round_up
-from repro.kernels.cim_matmul.kernel import cim_matmul_kernel, cim_matmul_packed_kernel
+from repro.kernels.cim_matmul.kernel import (
+    cim_matmul_kernel,
+    cim_matmul_packed_kernel,
+    cim_matmul_packed_skip_kernel,
+)
 
 
 def _block(requested: int, dim: int, unit: int) -> int:
@@ -71,6 +75,7 @@ def cim_matmul_packed(
     bk: int = 128,
     m_chunk: int = 256,
     interpret: bool | None = None,
+    tile_nz: jax.Array | None = None,
 ) -> jax.Array:
     """Bit-packed serving matmul: y = scale * (x @ unpack(planes, signs)).
 
@@ -84,6 +89,14 @@ def cim_matmul_packed(
     ``m_chunk`` rows so the whole-M-resident kernel grid stays inside VMEM;
     within a chunk the weight tile is unpacked once per (N, K) block, never
     per M block.
+
+    ``tile_nz`` (uint8[cols, ceil(ceil(K/8)/16)] — the const_rle serving
+    codec's zero-tile flags, ``core.planes.encode_operands``) routes to the
+    skip-kernel twin: tiles flagged all-zero skip their unpack+accumulate
+    entirely.  Bit-exact with the flag-less path.  The 16-byte flag tile is
+    exactly one bk=128 K block; if a caller overrides ``bk`` to anything
+    else the flag granularity no longer matches the grid and the flags are
+    ignored (correct either way — flags are an optimization, not semantics).
     """
     m, k = x.shape
     cols, kw, n = planes_packed.shape
@@ -100,14 +113,22 @@ def cim_matmul_packed(
     pp = pad_axis_to(pad_axis_to(planes_packed, 1, kp // 8), 2, round_up(n, bn_))
     sp = pad_axis_to(pad_axis_to(sign_packed, 0, kp // 8), 1, round_up(n, bn_))
 
+    n_k = kp // bk_
+    nz = None
+    if tile_nz is not None and bk_ == 128 and tile_nz.shape == (cols, n_k):
+        nz = tile_nz.astype(jnp.int32).reshape(-1)
+
     outs = []
     for m0 in range(0, max(m, 1), m_chunk):
         chunk = xp[m0 : m0 + m_chunk]
         mp = round_up(chunk.shape[0], 8)
-        outs.append(
-            cim_matmul_packed_kernel(
-                pad_axis_to(chunk, 0, mp), pp, sp, bn=bn_, bk=bk_, interpret=interp
-            )[: chunk.shape[0]]
-        )
+        xc = pad_axis_to(chunk, 0, mp)
+        if nz is not None:
+            yc = cim_matmul_packed_skip_kernel(
+                xc, pp, sp, nz, bn=bn_, bk=bk_, interpret=interp
+            )
+        else:
+            yc = cim_matmul_packed_kernel(xc, pp, sp, bn=bn_, bk=bk_, interpret=interp)
+        outs.append(yc[: chunk.shape[0]])
     y = jnp.concatenate(outs, axis=0) if len(outs) > 1 else outs[0]
     return y[:m, :n] * jnp.asarray(scale, dtype=jnp.float32)

@@ -33,6 +33,7 @@ def unpack_weights(
     sign_packed: jax.Array,
     k: int,
     plane_gain: jax.Array | None = None,
+    plane_ids: jax.Array | None = None,
 ) -> jax.Array:
     """Packed serving operands -> dense unscaled weights f32[..., K, N].
 
@@ -45,17 +46,30 @@ def unpack_weights(
     (``core.nonideal``): each bit plane's power-of-two weight is multiplied
     by its gain before summation, exactly what a drifted analog column
     contributes.  ``None`` keeps the exact power-of-two sum.
+
+    ``plane_ids`` int32[..., cols] is the ``col_perm`` serving codec
+    (``core.planes.encode_operands``): stored plane ``p`` holds logical
+    plane ``plane_ids[..., p]``, so its weight is ``2**plane_ids[..., p]``
+    instead of ``2**p``.  Powers of two are exact in f32, so the permuted
+    sum is bit-identical to the raw-layout sum.  Composes with
+    ``plane_gain``: drift attaches to the *stored* bit line, decode to the
+    logical significance — the hardware order of operations.
     """
     cols = planes_packed.shape[-3]
     bits = jnp.unpackbits(planes_packed, axis=-2, count=k)  # [..., cols, K, N]
-    pow2 = (2.0 ** jnp.arange(cols, dtype=jnp.float32))
-    if plane_gain is None:
-        mag = jnp.einsum("...bkn,b->...kn", bits.astype(jnp.float32), pow2)
+    if plane_ids is None:
+        pow2 = (2.0 ** jnp.arange(cols, dtype=jnp.float32))
+        per_plane = pow2 if plane_gain is None else pow2[:, None] * plane_gain
+    else:
+        pow2 = 2.0 ** plane_ids.astype(jnp.float32)  # [..., cols]
+        per_plane = pow2[..., None] if plane_gain is None else pow2[..., None] * plane_gain
+    if plane_gain is None and plane_ids is None:
+        mag = jnp.einsum("...bkn,b->...kn", bits.astype(jnp.float32), per_plane)
     else:
         mag = jnp.einsum(
             "...bkn,...bn->...kn",
             bits.astype(jnp.float32),
-            pow2[:, None] * plane_gain,
+            jnp.broadcast_to(per_plane, bits.shape[:-3] + (cols, bits.shape[-1])),
         )
     sgn = 1.0 - 2.0 * jnp.unpackbits(sign_packed, axis=-2, count=k).astype(jnp.float32)
     return mag * sgn
@@ -67,6 +81,7 @@ def cim_matmul_packed(
     sign_packed: jax.Array,
     scale: jax.Array,
     plane_gain: jax.Array | None = None,
+    plane_ids: jax.Array | None = None,
 ) -> jax.Array:
     """Bit-packed oracle / portable fast path: y = scale * (x @ unpack(planes)).
 
@@ -76,5 +91,5 @@ def cim_matmul_packed(
     grid or the ``cols``-matmul einsum of the int8-plane oracle.
     """
     k = x.shape[-1]
-    w = unpack_weights(planes_packed, sign_packed, k, plane_gain)
+    w = unpack_weights(planes_packed, sign_packed, k, plane_gain, plane_ids)
     return (x.astype(jnp.float32) @ w) * scale

@@ -16,6 +16,14 @@ packed words the planner/pool hold) flowing through the Pallas
 ``cim_matmul`` packed kernel on TPU (portable packed reference elsewhere);
 ``planes_int8`` is the one-byte-per-bit-cell traffic baseline.
 
+Stored-plane codec (``--codec``, ``core/planes.py``): ``raw`` | ``const_rle``
+| ``col_perm`` | ``col_perm_rle``.  Non-raw codecs change the physical bits
+the pool programs (column-similarity reordering cuts reprogramming
+transitions; constant-tile elision cuts weight traffic) and, with
+``--materialize packed``, ride into the serving operands (plane-axis
+reorder + zero-tile kernel skipping).  Token streams are bit-identical to
+dense under every codec — the decode contract of ``core.planes``.
+
 Decode loop (``--loop``): ``scan`` (default) runs the whole generation as a
 single ``lax.scan`` dispatch with the KV cache donated, so decode never
 copies the cache between tokens; ``python`` keeps the per-token dispatch
@@ -50,6 +58,7 @@ from repro.core.planner import (
     build_deployment,
     deploy_params,
 )
+from repro.core.planes import CODECS
 from repro.core.pool import DEFAULT_ENDURANCE, LEVELINGS, CrossbarPool
 from repro.launch.steps import (
     cache_donation,
@@ -182,6 +191,13 @@ def main() -> None:
         help="serving representation of deployed tensors (packed = bit-plane-native)",
     )
     ap.add_argument(
+        "--codec", choices=CODECS, default="raw",
+        help="stored-plane codec (core/planes.py): changes the physical bits "
+             "the pool programs (and the priced transitions) and, with "
+             "--materialize packed, the serving operand layout; token streams "
+             "stay bit-identical to dense for every codec",
+    )
+    ap.add_argument(
         "--loop", choices=["scan", "python"], default="scan",
         help="decode loop: one fused lax.scan dispatch or per-token dispatches",
     )
@@ -213,6 +229,15 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.codec != "raw":
+        if not args.cim:
+            ap.error("--codec applies to crossbar-deployed weights; add --cim")
+        if args.materialize == "planes_int8":
+            ap.error(
+                "--codec encodes packed serving operands; --materialize "
+                "planes_int8 has no stored-plane layout (use packed or dense)"
+            )
+
     cfg = get_arch(args.arch, reduced=args.reduced)
     key = jax.random.PRNGKey(args.seed)
     params = api.init(key, cfg)
@@ -227,6 +252,7 @@ def main() -> None:
             p_stuck=args.p_stuck,
             min_size=args.min_size,
             pool_leveling=args.pool_leveling,
+            codec=args.codec,
         )
         pool = CrossbarPool(spec, planner_cfg.crossbars, leveling=args.pool_leveling)
         if args.fault_rate > 0.0:
@@ -244,7 +270,10 @@ def main() -> None:
                   f"{pool.n_crossbars} crossbars (worst {int(cells.max())}; "
                   f"{int(fstate.hot.sum())} hotspots)")
         plan = build_deployment(params, spec, planner_cfg, pool=pool)
-        params_hat = deploy_params(params, plan, materialize=args.materialize)
+        # dense materialization has no stored-plane layout to encode; the
+        # plan's codec already shaped the pool's physical programming above
+        codec = args.codec if args.materialize == "packed" else "raw"
+        params_hat = deploy_params(params, plan, materialize=args.materialize, codec=codec)
         tokens_hat, tps_hat = generate(
             cfg, params_hat, batch, gen_len=args.gen, seed=args.seed, loop=args.loop
         )

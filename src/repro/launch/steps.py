@@ -62,6 +62,11 @@ def _serving_params(params):
     loop) instead of paying a per-token, per-site bit-unpack emulation.
     Int8-plane operands are exempt: they exist as the faithful per-step
     bit-sliced simulation baseline.
+
+    Codec-encoded packed dicts (``core.planes.encode_operands``: plane-axis
+    reorder + zero-tile flags) need no special casing here — ``densify`` and
+    ``cim_linear`` both decode them exactly, so either route serves the same
+    bits as raw operands.
     """
     from repro.core import simulator
     from repro.kernels._util import on_tpu

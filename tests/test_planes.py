@@ -1,0 +1,398 @@
+"""Plane codec layer (core/planes.py): round trips, transition bound, threading.
+
+The standing contract this file pins:
+  * ``decode(encode(planes))`` is byte-identical to the raw packed planes for
+    EVERY codec (ragged rows included);
+  * ``col_perm`` physical transitions never exceed raw's (the per-chain
+    identity fallback makes the CI >= 1.0x gate structural);
+  * the pool programs a ``PlaneSet``'s physical bits with exact wear/seam
+    accounting, and fault masks apply to the stored layout with logical
+    decode after the read;
+  * the planner's codec route deploys byte-identical ``w_hat`` to raw;
+  * serving-side ``encode_operands`` is an exact re-encoding through both
+    ``cim_linear`` and ``densify_operands``, and the kernel's zero-tile skip
+    path matches the flag-less kernel bit for bit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import bitslice, nonideal, planes, planner, schedule, simulator
+from repro.core.pool import CrossbarPool
+from repro.kernels.cim_matmul import ops as cm_ops
+
+
+def _random_planes(seed, s=10, rows=128, cols=8, const_planes=()):
+    rng = np.random.default_rng(seed)
+    w = -(-rows // 8)
+    packed = rng.integers(0, 256, size=(s, w, cols)).astype(np.uint8)
+    for c, val in const_planes:
+        packed[:, :, c] = val
+    return jnp.asarray(packed)
+
+
+def _transitions(phys, chains):
+    costs = schedule.schedule_job_costs(phys, chains, include_initial=True)
+    return int(np.sum(np.asarray(costs), dtype=np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Round-trip byte identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec", planes.CODECS)
+@pytest.mark.parametrize("rows", [128, 100, 7])  # ragged: rows not /8
+def test_decode_encode_byte_identity(codec, rows):
+    packed = _random_planes(rows, s=9, rows=rows, const_planes=[(5, 0), (6, 255)])
+    chains = schedule.make_chains(9, 3, "stride1")
+    ps = planes.encode(packed, codec, chains=chains)
+    dec = ps.decode()
+    assert dec.dtype == jnp.uint8
+    np.testing.assert_array_equal(np.asarray(dec), np.asarray(packed))
+
+
+def test_raw_codec_is_identity():
+    packed = _random_planes(0)
+    ps = planes.encode(packed, "raw")
+    assert ps.physical() is ps.payload
+    np.testing.assert_array_equal(np.asarray(ps.decode()), np.asarray(packed))
+
+
+def test_unknown_codec_raises():
+    packed = _random_planes(0)
+    with pytest.raises(ValueError, match="unknown plane codec"):
+        planes.encode(packed, "lz77")
+    with pytest.raises(ValueError, match="chains"):
+        planes.encode(packed, "col_perm")  # col_perm needs a schedule
+
+
+def test_bitslice_encode_decode_entry_points():
+    packed = _random_planes(3)
+    chains = schedule.make_chains(10, 4, "strideL")
+    ps = bitslice.encode_planes(packed, "col_perm_rle", chains=chains)
+    np.testing.assert_array_equal(
+        np.asarray(bitslice.decode_planes(ps)), np.asarray(packed)
+    )
+    # raw arrays pass through decode_planes untouched
+    assert bitslice.decode_planes(packed) is packed
+
+
+# ---------------------------------------------------------------------------
+# const_rle tiles + compression accounting
+# ---------------------------------------------------------------------------
+
+def test_const_rle_detects_constant_tiles():
+    packed = _random_planes(1, s=6, const_planes=[(2, 0), (7, 170)])
+    ps = planes.encode(packed, "const_rle")
+    mask = np.asarray(ps.const_mask)
+    assert mask[:, 2].all() and mask[:, 7].all()
+    np.testing.assert_array_equal(np.asarray(ps.const_val)[:, 7], 170)
+    # elided tiles are zeroed in the payload; physical() reconstructs them
+    assert not np.asarray(ps.payload)[:, :, 7].any()
+    np.testing.assert_array_equal(np.asarray(ps.physical()), np.asarray(packed))
+    stats = ps.compression_stats()
+    assert stats["payload_bytes"] < stats["raw_bytes"]
+    assert stats["ratio_vs_raw"] > 1.0
+
+
+def test_compression_stats_raw_is_one():
+    ps = planes.encode(_random_planes(2), "raw")
+    stats = ps.compression_stats()
+    assert stats["total_bytes"] == stats["raw_bytes"]
+    assert stats["ratio_vs_raw"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# col_perm: transition bound + planned orders
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["stride1", "strideL"])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_col_perm_transitions_never_exceed_raw(kind, seed):
+    """The structural >= 1.0x guarantee: identity first sections + per-chain
+    identity fallback mean the encoded physical stream is never costlier."""
+    packed = _random_planes(seed, s=16)
+    chains = schedule.make_chains(16, 4, kind)
+    ps = planes.encode(packed, "col_perm", chains=chains)
+    assert _transitions(ps.physical(), chains) <= _transitions(packed, chains)
+
+
+def test_col_perm_first_sections_keep_identity():
+    """A chain's first section reprograms unknown pool content — nothing to
+    match against at plan time, so its stored order stays identity (which is
+    also what makes seam pricing equal raw's)."""
+    packed = _random_planes(4, s=12)
+    chains = schedule.make_chains(12, 3, "stride1")
+    order = planes.plan_col_order(packed, chains)
+    cols = packed.shape[-1]
+    for ch in chains:
+        np.testing.assert_array_equal(order[int(ch[0])], np.arange(cols))
+    # every row is a permutation
+    for s in range(order.shape[0]):
+        assert sorted(order[s].tolist()) == list(range(cols))
+
+
+def test_col_perm_realigns_carry_boundary():
+    """The physical win: an all-q=1 section followed by an all-q=2 section
+    toggles every cell in planes 0 and 1 under identity storage, and zero
+    cells once the two planes swap."""
+    rows, cols = 128, 4
+    q = jnp.concatenate([jnp.full((rows,), 1), jnp.full((rows,), 2)]).astype(jnp.int32)
+    packed = bitslice.section_planes_packed(q, rows, cols)
+    chains = [np.array([0, 1], np.int32)]
+    raw_t = _transitions(packed, chains)
+    ps = planes.encode(packed, "col_perm", chains=chains)
+    enc_t = _transitions(ps.physical(), chains)
+    assert enc_t < raw_t
+    # section 1 stores logical plane 1 in physical column 0 (the swap)
+    assert int(ps.col_order[1, 0]) == 1 and int(ps.col_order[1, 1]) == 0
+    np.testing.assert_array_equal(np.asarray(ps.decode()), np.asarray(packed))
+
+
+# ---------------------------------------------------------------------------
+# Pool threading: physical programming, wear exactness, fault masks
+# ---------------------------------------------------------------------------
+
+def test_pool_accepts_plane_set_raw_parity():
+    """A raw PlaneSet programs identically to the bare array."""
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    packed = _random_planes(5, s=8)
+    chains = schedule.make_chains(8, 4, "stride1")
+    pa = CrossbarPool(spec, 4)
+    pb = CrossbarPool(spec, 4)
+    ra = pa.program(packed, chains)
+    rb = pb.program(planes.encode(packed, "raw"), chains)
+    assert ra.transitions_full == rb.transitions_full
+    np.testing.assert_array_equal(pa.wear, pb.wear)
+    np.testing.assert_array_equal(np.asarray(ra.achieved), np.asarray(rb.achieved))
+
+
+def test_pool_programs_physical_bits_wear_conservation():
+    """Under col_perm the pool's wear counts the *stored* transitions (the
+    physical writes), and they sum exactly to the priced totals — the codec
+    keeps endurance accounting exact."""
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    packed = _random_planes(6, s=12)
+    chains = schedule.make_chains(12, 4, "stride1")
+    ps = planes.encode(packed, "col_perm", chains=chains)
+    pool = CrossbarPool(spec, 4)
+    rep = pool.program(ps, chains)
+    assert rep.wear_increment_total == rep.transitions_full
+    assert rep.transitions_full == _transitions(ps.physical(), chains)
+    # achieved is the stored state; decode recovers the logical planes
+    np.testing.assert_array_equal(
+        np.asarray(planes.logical_from_physical(rep.achieved, ps.col_order)),
+        np.asarray(packed),
+    )
+
+
+def test_fault_masks_apply_to_stored_layout():
+    """Post-decode fault semantics: the pool's stuck masks bite physical
+    columns; decoding the faulty read equals un-permuting the masked stored
+    bits — NOT masking the logical planes directly."""
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    packed = _random_planes(7, s=8)
+    chains = schedule.make_chains(8, 4, "stride1")
+    ps = planes.encode(packed, "col_perm", chains=chains)
+    pool = CrossbarPool(spec, 4)
+    pool.inject_faults(
+        nonideal.FaultModel(stuck0=0.05, stuck1=0.05), jax.random.PRNGKey(1)
+    )
+    rep = pool.program(ps, chains)
+    logical = planes.logical_from_physical(rep.achieved_read, ps.col_order)
+    # oracle: mask the stored bits by hand, then un-permute
+    sec_xbar = np.zeros(8, np.int32)
+    for j, c in enumerate(chains):
+        sec_xbar[c] = rep.assignment[j]
+    idx = jnp.asarray(sec_xbar)
+    masked = nonideal.read_packed(
+        ps.physical(), pool.faults.stuck0[idx], pool.faults.stuck1[idx]
+    )
+    np.testing.assert_array_equal(
+        np.asarray(logical),
+        np.asarray(planes.logical_from_physical(masked, ps.col_order)),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Planner threading
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def planner_inputs():
+    w = jax.random.normal(jax.random.PRNGKey(2), (96, 170)) * 0.02
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    key = jax.random.PRNGKey(0)
+    cfg = planner.PlannerConfig(crossbars=8)
+    rep, wh = planner.analyze_tensor(w, spec, cfg, key)
+    return w, spec, key, rep, wh
+
+
+@pytest.mark.parametrize("codec", [c for c in planes.CODECS if c != "raw"])
+def test_planner_codec_w_hat_byte_identical(planner_inputs, codec):
+    """Codecs change the physical programming, never the deployed weights."""
+    w, spec, key, rep_raw, wh_raw = planner_inputs
+    cfg = planner.PlannerConfig(crossbars=8, codec=codec)
+    rep, wh = planner.analyze_tensor(w, spec, cfg, key)
+    np.testing.assert_array_equal(np.asarray(wh), np.asarray(wh_raw))
+    if codec.startswith("col_perm"):
+        assert rep.transitions_sws <= rep_raw.transitions_sws
+
+
+def test_planner_codec_validation(planner_inputs):
+    w, spec, key, *_ = planner_inputs
+    with pytest.raises(ValueError, match="unknown plane codec"):
+        planner.analyze_tensor(w, spec, planner.PlannerConfig(codec="zip"), key)
+    with pytest.raises(ValueError, match="impl"):
+        planner.analyze_tensor(
+            w, spec, planner.PlannerConfig(codec="col_perm", impl="bool"), key
+        )
+
+
+def test_planner_codec_through_pool_stucked(planner_inputs):
+    """Codec + p_stuck < 1 through a persistent pool: the stucked walk runs
+    on stored bits and the decoded weights stay exactly representable."""
+    w, spec, key, *_ = planner_inputs
+    cfg = planner.PlannerConfig(crossbars=8, codec="col_perm_rle", p_stuck=0.5)
+    pool = CrossbarPool(spec, 8)
+    rep, wh = planner.analyze_tensor(w, spec, cfg, key, pool=pool)
+    assert rep.transitions_final <= rep.transitions_sws
+    # w_hat is exactly representable: re-encoding it is lossless
+    op = simulator.operands_from_dense(
+        wh, rep.scale, rep.offset, spec.encoding, spec.cols
+    )
+    np.testing.assert_allclose(
+        np.asarray(simulator.densify_operands(op)), np.asarray(wh), rtol=0, atol=0
+    )
+
+
+def test_planner_codec_stucked_w_hat_byte_identical(planner_inputs):
+    """Under bit stucking the planner pins the stored lowest-order columns
+    (``stuck_cols``) at identity, so the under-programmed cells hold exactly
+    the bits raw storage would — deployed weights stay byte-identical to the
+    raw codec at ANY p_stuck, not just p=1.  Without the pin, a permutation
+    parking a high-order plane in the stucked column turns the bounded LSB
+    error into a high-order one (~60x the RMSE)."""
+    w, spec, key, *_ = planner_inputs
+    for p in (0.5, 0.0):
+        cfg_r = planner.PlannerConfig(crossbars=8, p_stuck=p)
+        cfg_c = planner.PlannerConfig(crossbars=8, codec="col_perm", p_stuck=p)
+        rep_r, wr = planner.analyze_tensor(w, spec, cfg_r, key)
+        rep_c, wc = planner.analyze_tensor(w, spec, cfg_c, key)
+        np.testing.assert_array_equal(np.asarray(wc), np.asarray(wr))
+        assert rep_c.transitions_final <= rep_r.transitions_final
+
+
+def test_plan_col_order_pin_cols():
+    packed = _random_planes(9, s=12, cols=8)
+    chains = schedule.make_chains(12, 3, "stride1")
+    order = planes.plan_col_order(packed, chains, pin_cols=2)
+    assert (np.asarray(order[:, :2]) == np.arange(2)).all()
+    for s in range(order.shape[0]):
+        assert sorted(order[s].tolist()) == list(range(8))
+    # pinning everything degenerates to identity
+    full = planes.plan_col_order(packed, chains, pin_cols=99)
+    np.testing.assert_array_equal(full, np.tile(np.arange(8, dtype=np.int32), (12, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Serving-operand twins
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serving_w():
+    rng = np.random.default_rng(11)
+    w = rng.normal(0, 0.05, (200, 130)).astype(np.float32)
+    w[np.abs(w) > 0.08] = 0.0
+    w[0, 0] = 1.0  # amax outlier concentrates q low -> zero high-plane tiles
+    x = rng.normal(0, 1.0, (5, 200)).astype(np.float32)
+    return jnp.asarray(w), jnp.asarray(x)
+
+
+@pytest.mark.parametrize("codec", [c for c in planes.CODECS if c != "raw"])
+def test_encode_operands_exact_through_cim_linear_and_densify(serving_w, codec):
+    w, x = serving_w
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    raw = simulator.prepare_linear(w, spec, materialize="packed")
+    enc = simulator.prepare_linear(w, spec, materialize="packed", codec=codec)
+    np.testing.assert_array_equal(
+        np.asarray(simulator.cim_linear(x, enc)),
+        np.asarray(simulator.cim_linear(x, raw)),
+    )
+    np.testing.assert_array_equal(
+        np.asarray(simulator.densify_operands(enc)),
+        np.asarray(simulator.densify_operands(raw)),
+    )
+    if codec.startswith("col_perm"):
+        ids = np.asarray(enc["plane_ids"])
+        assert sorted(ids.tolist()) == list(range(spec.cols))
+
+
+def test_encode_operands_zero_tile_flags_honest(serving_w):
+    """A 0 flag really means every byte of that (plane, 128-row) tile is 0."""
+    w, _ = serving_w
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    enc = simulator.prepare_linear(w, spec, materialize="packed", codec="const_rle")
+    flags = np.asarray(enc["plane_tile_nz"])
+    assert (flags == 0).any(), "config should produce at least one zero tile"
+    pp = np.asarray(enc["planes_packed"])
+    t = planes.OPERAND_TILE_BYTES
+    for b in range(flags.shape[0]):
+        for kk in range(flags.shape[1]):
+            tile = pp[b, kk * t : (kk + 1) * t, :]
+            assert bool(tile.any()) == bool(flags[b, kk])
+
+
+def test_kernel_tile_skip_bit_exact(serving_w):
+    """The PrefetchScalarGridSpec skip kernel == the flag-less kernel, bit for
+    bit (interpret mode): skipped tiles contribute exact zeros."""
+    w, x = serving_w
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    enc = simulator.prepare_linear(w, spec, materialize="packed", codec="const_rle")
+    with_skip = cm_ops.cim_matmul_packed(
+        x, enc["planes_packed"], enc["sign_packed"], enc["scale"],
+        tile_nz=enc["plane_tile_nz"], interpret=True,
+    )
+    without = cm_ops.cim_matmul_packed(
+        x, enc["planes_packed"], enc["sign_packed"], enc["scale"], interpret=True
+    )
+    np.testing.assert_array_equal(np.asarray(with_skip), np.asarray(without))
+
+
+def test_encode_operands_validation(serving_w):
+    w, _ = serving_w
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    with pytest.raises(ValueError, match="stored-plane layout"):
+        simulator.prepare_linear(w, spec, materialize="int8", codec="col_perm")
+    op8 = simulator.prepare_linear(w, spec, materialize="int8")
+    with pytest.raises(ValueError, match="packed serving operands"):
+        planes.encode_operands(op8, "col_perm")
+
+
+def test_operand_payload_bytes_accounting(serving_w):
+    w, _ = serving_w
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    raw = simulator.prepare_linear(w, spec, materialize="packed")
+    enc = simulator.prepare_linear(w, spec, materialize="packed", codec="col_perm_rle")
+    b_raw = planes.operand_payload_bytes(raw)
+    b_enc = planes.operand_payload_bytes(enc)
+    assert b_raw["plane_bytes"] == int(np.prod(raw["planes_packed"].shape))
+    assert b_enc["plane_bytes"] < b_raw["plane_bytes"]  # zero tiles elided
+    assert b_enc["meta_bytes"] > 0
+
+
+def test_perturbed_encoded_operands_densify_vs_cim_linear(serving_w):
+    """Fault masks attach to the stored layout (perturb AFTER encoding) and
+    both consumers decode the same faulty weights."""
+    w, x = serving_w
+    spec = planner.CrossbarSpec(rows=128, cols=8)
+    enc = simulator.prepare_linear(w, spec, materialize="packed", codec="col_perm")
+    model = nonideal.FaultModel(stuck0=0.02, stuck1=0.02, drift_sigma=0.05)
+    pert = nonideal.perturb_operands(enc, model, jax.random.PRNGKey(3))
+    y = simulator.cim_linear(x, pert)
+    w_read = simulator.densify_operands(pert)
+    y_dense = (x @ w_read) * 1.0 + jnp.sum(x, axis=-1, keepdims=True) * pert["offset"]
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_dense), rtol=1e-4, atol=1e-4)
