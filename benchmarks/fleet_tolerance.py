@@ -1,0 +1,302 @@
+"""Fleet fault tolerance: throughput scaling, chaos survival, admission.
+
+Four experiments prove the fleet router (``launch/fleet.py``) turns replica
+failures into routing events instead of outages:
+
+  * **Scaling** — one trace served by 1/2/4-replica fleets; reported tok/s
+    per replica count.  Meaningful scaling needs one emulated device per
+    replica: pass ``--devices 4`` (sets
+    ``--xla_force_host_platform_device_count`` *before* first jax
+    initialization, like the dry-run's 512-chip override) — without it the
+    replicas share one CPU device and scaling is flat by construction.
+  * **Kill-one-of-4** — a deterministic :class:`FaultInjector` crash takes
+    one replica down mid-trace; the survivors must complete 100% of
+    admitted requests with every stream bit-identical to solo
+    ``serve.generate`` (the failover parity contract).
+  * **Stall trace** — one replica freezes for seconds; hedged re-dispatch
+    must finish its in-flight requests on healthy replicas without waiting
+    the stall out, again with full completion + parity.
+  * **Admission** — a burst beyond the bounded queue: shed-vs-completed
+    -vs-degraded counts, with the degraded (clamped) streams still exact.
+
+  PYTHONPATH=src python -m benchmarks.fleet_tolerance [--devices N]
+      [--quick] [--check]
+
+Writes experiments/bench/BENCH_fleet.json (schema: docs/benchmarks.md).
+``--check`` exits non-zero unless both chaos traces complete every admitted
+request with >= 1 surviving replica and per-request token parity, and
+deadline-expired requests (if any) retired as "timeout" — the CI fleet
+gates.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _preparse_devices() -> int:
+    """Apply ``--devices N`` before any jax initialization.
+
+    XLA reads ``--xla_force_host_platform_device_count`` once, at backend
+    init — mutating it later is a silent no-op — so this runs at import
+    time, before the jax-touching imports below.
+    """
+    ap = argparse.ArgumentParser(add_help=False)
+    ap.add_argument("--devices", type=int, default=0)
+    args, _ = ap.parse_known_args()
+    if args.devices > 0:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices} "
+            + os.environ.get("XLA_FLAGS", "")
+        ).strip()
+    return args.devices
+
+
+N_DEVICES = _preparse_devices()
+
+import time  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from benchmarks.common import banner, save_json  # noqa: E402
+from repro.configs import get_arch  # noqa: E402
+from repro.launch.engine import EngineConfig, Request  # noqa: E402
+from repro.launch.fleet import FaultInjector, Fleet, FleetConfig  # noqa: E402
+from repro.launch.serve import generate  # noqa: E402
+from repro.models import api  # noqa: E402
+
+ECFG = EngineConfig(
+    max_slots=2, page_size=8, max_seq_len=64, prefill_chunk=16, decode_quantum=4
+)
+
+
+def _trace(cfg, n, *, seed=0, gen_lo=6, gen_hi=12):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(
+            0, cfg.vocab_size, int(rng.integers(4, 11))
+        ).astype(np.int32)
+        reqs.append(Request(
+            rid=i, prompt=prompt,
+            max_new_tokens=int(rng.integers(gen_lo, gen_hi + 1)),
+            greedy=bool(i % 2), seed=i,
+        ))
+    return reqs
+
+
+def _solo(cfg, params, req):
+    toks, _ = generate(
+        cfg, params, {"tokens": jnp.asarray(req.prompt)[None]},
+        gen_len=req.max_new_tokens, greedy=req.greedy, seed=req.seed,
+    )
+    return [int(t) for t in np.asarray(toks[0])]
+
+
+def _summarize(cfg, params, fleet, reqs, results, wall_s) -> dict:
+    """Completion / parity / latency / shed accounting for one trace."""
+    ok = [r for r in results if r.status == "ok"]
+    parity = all(
+        r.tokens == _solo(cfg, params, fleet.requests[r.rid]) for r in ok
+    )
+    lat = sorted(r.latency for r in ok)
+    pct = lambda p: float(lat[min(int(p * len(lat)), len(lat) - 1)]) if lat else 0.0  # noqa: E731
+    toks = sum(len(r.tokens) for r in ok)
+    return {
+        "n_requests": len(reqs),
+        "admitted": fleet.stats["admitted"],
+        "completed": len(ok),
+        "timeouts": sum(r.status == "timeout" for r in results),
+        "shed": sum(r.status == "shed" for r in results),
+        "degraded": fleet.stats["degraded"],
+        "stream_parity": bool(parity),
+        "surviving_replicas": sum(r.state == "live" for r in fleet.replicas),
+        "tok_s": toks / max(wall_s, 1e-9),
+        "p50_latency_s": pct(0.50),
+        "p99_latency_s": pct(0.99),
+        "retries": fleet.stats["retries"],
+        "failovers": fleet.stats["failovers"],
+        "restarts": fleet.stats["restarts"],
+        "hedges": fleet.stats["hedges"],
+        "wall_s": wall_s,
+    }
+
+
+def _run_fleet(cfg, params, fcfg, reqs, injector=None):
+    fleet = Fleet(cfg, params, fcfg, ECFG, injector=injector)
+    t0 = time.perf_counter()
+    results = fleet.run(reqs)
+    wall = time.perf_counter() - t0
+    return fleet, results, wall
+
+
+def run_scaling(cfg, params, *, counts=(1, 2, 4), n_requests=12, seed=0) -> list[dict]:
+    """One trace through fleets of increasing replica count (hedging off:
+    pure placement throughput)."""
+    rows = []
+    for n in counts:
+        reqs = _trace(cfg, n_requests, seed=seed)
+        fcfg = FleetConfig(n_replicas=n, max_queue=4 * n_requests, hedge=False)
+        fleet, results, wall = _run_fleet(cfg, params, fcfg, reqs)
+        row = _summarize(cfg, params, fleet, reqs, results, wall)
+        row["n_replicas"] = n
+        rows.append(row)
+        print(f"  {n} replica(s): {row['tok_s']:8.1f} tok/s   "
+              f"{row['completed']}/{row['n_requests']} completed   "
+              f"p50 {row['p50_latency_s'] * 1e3:.0f} ms")
+    return rows
+
+
+def run_kill_trace(cfg, params, *, n_replicas=4, n_requests=16, seed=1) -> dict:
+    """Crash one replica mid-trace (host state lost on odd seeds): the
+    survivors must complete everything admitted, streams exact."""
+    reqs = _trace(cfg, n_requests, seed=seed, gen_lo=8, gen_hi=16)
+    inj = FaultInjector()
+    inj.crash(0, at_step=2, lose_state=bool(seed % 2))
+    fcfg = FleetConfig(n_replicas=n_replicas, max_queue=4 * n_requests, hedge=False)
+    fleet, results, wall = _run_fleet(cfg, params, fcfg, reqs, injector=inj)
+    row = _summarize(cfg, params, fleet, reqs, results, wall)
+    row.update(n_replicas=n_replicas, chaos=inj.log,
+               crashes=fleet.stats["crashes"])
+    print(f"  kill 1/{n_replicas}: {row['completed']}/{row['admitted']} "
+          f"completed, parity {row['stream_parity']}, "
+          f"{row['surviving_replicas']} survivors, "
+          f"{row['failovers']} failovers + {row['restarts']} restarts")
+    return row
+
+
+def run_stall_trace(cfg, params, *, n_replicas=4, n_requests=16,
+                    stall_s=2.0, seed=2) -> dict:
+    """Freeze one replica mid-trace: hedged re-dispatch finishes its work
+    on the others without waiting out the stall."""
+    reqs = _trace(cfg, n_requests, seed=seed, gen_lo=8, gen_hi=16)
+    inj = FaultInjector()
+    inj.stall(0, at_step=2, duration_s=stall_s)
+    fcfg = FleetConfig(n_replicas=n_replicas, max_queue=4 * n_requests,
+                       hedge=True, hedge_stall_s=0.15)
+    fleet, results, wall = _run_fleet(cfg, params, fcfg, reqs, injector=inj)
+    row = _summarize(cfg, params, fleet, reqs, results, wall)
+    row.update(n_replicas=n_replicas, stall_s=stall_s, chaos=inj.log,
+               cancels=fleet.stats["cancels"])
+    print(f"  stall {stall_s}s on 1/{n_replicas}: {row['completed']}/"
+          f"{row['admitted']} completed, parity {row['stream_parity']}, "
+          f"{row['hedges']} hedges, wall {row['wall_s']:.1f}s")
+    return row
+
+
+def run_admission(cfg, params, *, n_requests=10, seed=3) -> dict:
+    """Burst a single replica past its bounded queue: shed vs completed vs
+    degraded counts (the graceful-degradation ledger)."""
+    reqs = _trace(cfg, n_requests, seed=seed)
+    fcfg = FleetConfig(n_replicas=1, max_queue=max(4, n_requests // 2),
+                       degrade_cap=4, hedge=False)
+    fleet, results, wall = _run_fleet(cfg, params, fcfg, reqs)
+    row = _summarize(cfg, params, fleet, reqs, results, wall)
+    print(f"  burst {n_requests} -> queue {fcfg.max_queue}: "
+          f"{row['completed']} completed / {row['shed']} shed / "
+          f"{row['degraded']} degraded, parity {row['stream_parity']}")
+    return row
+
+
+def run(arch: str = "gemma-2b", *, reduced: bool = True,
+        counts=(1, 2, 4), n_requests: int = 16, seed: int = 0) -> dict:
+    cfg = get_arch(arch, reduced=reduced)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+
+    banner("Fleet scaling — tok/s vs replica count")
+    scaling = run_scaling(cfg, params, counts=counts,
+                          n_requests=max(8, n_requests // 2), seed=seed)
+
+    banner("Chaos: kill one replica mid-trace")
+    kill = run_kill_trace(cfg, params, n_replicas=max(counts),
+                          n_requests=n_requests, seed=seed + 1)
+
+    banner("Chaos: stall one replica mid-trace (hedged re-dispatch)")
+    stall = run_stall_trace(cfg, params, n_replicas=max(counts),
+                            n_requests=n_requests, seed=seed + 2)
+
+    banner("Admission: bounded queue, shed + degraded mode")
+    admission = run_admission(cfg, params, n_requests=max(8, n_requests // 2),
+                              seed=seed + 3)
+
+    return {
+        "arch": arch,
+        "reduced": reduced,
+        "backend": jax.default_backend(),
+        "devices": jax.device_count(),
+        "engine": {"max_slots": ECFG.max_slots, "page_size": ECFG.page_size,
+                   "max_seq_len": ECFG.max_seq_len, "fused": ECFG.fused},
+        "scaling": scaling,
+        "kill_trace": kill,
+        "stall_trace": stall,
+        "admission": admission,
+    }
+
+
+def _gate_trace(name: str, row: dict, failures: list) -> None:
+    """The fleet survival contract for one chaos trace."""
+    if row["completed"] < row["admitted"]:
+        failures.append(
+            f"{name}: {row['completed']}/{row['admitted']} admitted "
+            f"requests completed (gate: 100%)"
+        )
+    if not row["stream_parity"]:
+        failures.append(f"{name}: token streams diverged from solo generation")
+    if row["surviving_replicas"] < 1:
+        failures.append(f"{name}: no surviving replicas")
+    if row["timeouts"]:
+        failures.append(
+            f"{name}: {row['timeouts']} deadline timeouts in a trace with "
+            f"no deadlines set"
+        )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--full-size", action="store_true", help="no --reduced config")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="emulate N host devices (must be first jax init; "
+                         "consumed before imports)")
+    ap.add_argument("--quick", action="store_true", help="CI smoke shapes")
+    ap.add_argument(
+        "--check", action="store_true",
+        help="exit non-zero unless both chaos traces complete 100% of "
+             "admitted requests with >= 1 surviving replica and per-request "
+             "token parity (CI fleet gates)",
+    )
+    args = ap.parse_args()
+
+    kw = {}
+    if args.quick:
+        kw = dict(n_requests=8, counts=(1, 2, 4) if jax.device_count() >= 4
+                  else (1, 2))
+
+    res = run(args.arch, reduced=not args.full_size, **kw)
+    save_json("BENCH_fleet", res)
+    if args.check:
+        failures: list = []
+        _gate_trace("kill trace", res["kill_trace"], failures)
+        _gate_trace("stall trace", res["stall_trace"], failures)
+        adm = res["admission"]
+        if not adm["stream_parity"]:
+            failures.append("admission: degraded streams diverged from solo")
+        if adm["completed"] + adm["shed"] + adm["timeouts"] < adm["n_requests"]:
+            failures.append(
+                f"admission: {adm['completed']} completed + {adm['shed']} "
+                f"shed + {adm['timeouts']} timeouts < {adm['n_requests']} "
+                f"submitted (requests lost)"
+            )
+        if any(r["tok_s"] <= 0 for r in res["scaling"]):
+            failures.append("scaling: non-positive tok/s recorded")
+        if failures:
+            for f in failures:
+                print(f"  CHECK FAILED: {f}", file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ from benchmarks import (
     fig8_stucking,
     fig9_p_sweep,
     fig10_columns,
+    fleet_tolerance,
     plane_compression,
     planner_throughput,
     pool_wear,
@@ -210,6 +211,28 @@ def main() -> None:
         "redeploy_completed": rd_ft["completed"],
         "stream_parity": rd_ft["stream_parity"],
         "endurance_horizons": rft["endurance"]["horizons"],
+    }
+
+    banner("Fleet tolerance — replica router under chaos")
+    # replicas share this process's single device here; the CI smoke runs
+    # the module standalone with --devices 4 for a real emulated mesh
+    rfl = fleet_tolerance.run(
+        counts=(1, 2) if not args.full else (1, 2, 4),
+        n_requests=8 if not args.full else 16,
+    )
+    kt, st = rfl["kill_trace"], rfl["stall_trace"]
+    print(f"  kill trace: {kt['completed']}/{kt['admitted']} completed, "
+          f"parity {kt['stream_parity']}, {kt['surviving_replicas']} survivors")
+    print(f"  stall trace: {st['completed']}/{st['admitted']} completed, "
+          f"parity {st['stream_parity']}, {st['hedges']} hedges")
+    save_json("BENCH_fleet", rfl)
+    summary["fleet"] = {
+        "tok_s_by_replicas": {str(r["n_replicas"]): r["tok_s"]
+                              for r in rfl["scaling"]},
+        "kill_completed": kt["completed"],
+        "stall_completed": st["completed"],
+        "stream_parity": kt["stream_parity"] and st["stream_parity"],
+        "shed": rfl["admission"]["shed"],
     }
 
     banner("Redeploy delta (training-time integration, beyond-paper)")

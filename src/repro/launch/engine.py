@@ -55,7 +55,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from collections import deque
-from typing import Any, Optional, Union
+from typing import Any, Callable, Optional, Union
 
 import jax
 import numpy as np
@@ -69,7 +69,15 @@ from repro.models import api
 @dataclasses.dataclass
 class Request:
     """One generation request.  ``arrival_time`` is seconds relative to
-    ``Engine.run`` start (0.0 = available immediately)."""
+    ``Engine.run`` start (0.0 = available immediately).
+
+    ``deadline_s`` (seconds after arrival) bounds the request's total
+    latency: once exceeded, the engine retires it with
+    ``status="timeout"`` — partial tokens returned, blocks freed — instead
+    of decoding forever.  ``priority_class`` is the SLO tier consumed by
+    preemption victim-key policies (0 = most important; see
+    :func:`priority_class_victim_key`) and by fleet placement.
+    """
 
     rid: int
     prompt: np.ndarray  # (S,) int32
@@ -78,6 +86,8 @@ class Request:
     seed: int = 0
     eos_id: Optional[int] = None
     arrival_time: float = 0.0
+    deadline_s: Optional[float] = None
+    priority_class: int = 0
 
     def __post_init__(self):
         self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
@@ -85,12 +95,19 @@ class Request:
             raise ValueError("empty prompt")
         if self.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if self.deadline_s is not None and self.deadline_s <= 0:
+            raise ValueError("deadline_s must be positive (or None)")
 
 
 @dataclasses.dataclass
 class RequestResult:
     """Outcome of one request: its token stream plus the latency breakdown
-    (all times seconds relative to ``Engine.run`` start)."""
+    (all times seconds relative to ``Engine.run`` start).
+
+    ``status``: ``"ok"`` (EOS / max-new-tokens), ``"timeout"`` (deadline
+    expired — ``tokens`` holds whatever was emitted in time), or
+    ``"cancelled"`` (:meth:`Engine.cancel`, e.g. a fleet killing the losing
+    copy of a hedged dispatch)."""
 
     rid: int
     tokens: list[int]
@@ -98,6 +115,7 @@ class RequestResult:
     t_admitted: float
     t_first_token: float
     t_done: float
+    status: str = "ok"
 
     @property
     def latency(self) -> float:
@@ -120,6 +138,16 @@ class EngineConfig:
     ``preempt`` selects what happens to a victim's KV under block pressure:
     ``"swap"`` (host snapshot, byte-identical restore) or ``"recompute"``
     (drop + teacher-forced re-prefill on re-admission).
+
+    ``victim_key`` makes the preemption order pluggable: a callable from
+    :class:`SlotView` to ``(protect, prefer)`` tuples — ``protect`` is the
+    total priority order (larger = lower priority; a slot may only evict
+    slots whose ``protect`` is strictly larger than its own, which is what
+    makes preemption deadlock-free), ``prefer`` breaks ties among evictable
+    candidates (largest wins).  ``None`` keeps the FCFS default
+    (:func:`fcfs_victim_key`: latest arrival evicted first, decode slots
+    preferred); :func:`priority_class_victim_key` is the SLO-tier example
+    the fleet router uses.
     """
 
     max_slots: int = 8
@@ -130,6 +158,7 @@ class EngineConfig:
     num_blocks: Optional[int] = None  # default: dummy + max_slots * max_pages
     fused: bool = True  # fused prefill+decode dispatch per cycle
     preempt: str = "swap"  # "swap" | "recompute"
+    victim_key: Optional[Callable[["SlotView"], tuple]] = None
 
     def __post_init__(self):
         for field in ("max_slots", "page_size", "max_seq_len",
@@ -146,9 +175,40 @@ class EngineConfig:
                 f"unknown preemption mode {self.preempt!r}; "
                 f"choose 'swap' or 'recompute'"
             )
+        if self.victim_key is not None and not callable(self.victim_key):
+            raise ValueError("victim_key must be callable (SlotView -> tuple) or None")
 
 
 _WAITING, _PREFILL, _DECODE = "waiting", "prefill", "decode"
+
+
+@dataclasses.dataclass(frozen=True)
+class SlotView:
+    """What a ``victim_key`` policy may observe of an occupied slot —
+    deliberately host-only scheduling facts, never device state."""
+
+    rid: int
+    arrival_time: float
+    priority_class: int
+    decoding: bool  # prompt finished, emitting tokens
+    generated: int  # tokens emitted so far
+    deadline_s: Optional[float]
+
+
+def fcfs_victim_key(v: SlotView) -> tuple:
+    """Default preemption order: strict FCFS protection (latest arrival is
+    evicted first), decode slots preferred among candidates (a mid-prompt
+    victim wastes its partial prefill)."""
+    return ((v.arrival_time, v.rid), (v.decoding,))
+
+
+def priority_class_victim_key(v: SlotView) -> tuple:
+    """SLO-tier preemption: a lower ``priority_class`` (more important
+    request) may evict any higher class regardless of arrival order; FCFS
+    within a class; decode slots preferred among candidates.  The fleet
+    router's lever for keeping interactive traffic live while batch-tier
+    work absorbs block pressure."""
+    return ((v.priority_class, v.arrival_time, v.rid), (v.decoding,))
 
 
 class _Slot:
@@ -180,22 +240,33 @@ class _Slot:
         return self.replay if self.replay is not None else self.req.prompt
 
     @property
-    def priority(self) -> tuple[float, int]:
-        """FCFS priority key — smaller is higher priority (preempted last)."""
-        return (self.req.arrival_time, self.req.rid)
+    def view(self) -> SlotView:
+        return SlotView(
+            rid=self.req.rid,
+            arrival_time=self.req.arrival_time,
+            priority_class=self.req.priority_class,
+            decoding=self.state == _DECODE,
+            generated=len(self.generated),
+            deadline_s=self.req.deadline_s,
+        )
 
 
 @dataclasses.dataclass
-class _Preempted:
-    """A request evicted under block pressure, waiting to re-admit FIFO.
+class ResumeState:
+    """Everything needed to continue a request on *an* engine — the one it
+    left (preemption requeue) or a different replica (failover / hedging).
 
     ``n_live`` live cells ([0, n_live)) were either snapshotted to host
-    (``snapshot`` pytree, swap mode) or dropped (recompute mode).
-    Re-admission derives everything else from the *prefix* the cache must
-    hold — prompt + generated[:-1] — so every eviction point (mid-prompt,
-    mid-replay, steady decode) readmits through one rule: restore what was
-    snapshotted, then prefill the rest of the prefix teacher-forced, then
-    resume decode with ``tok_next`` (already emitted — never re-sampled).
+    (``snapshot`` pytree, swap mode) or dropped (recompute mode / a crash
+    that lost device state).  Re-admission derives everything else from the
+    *prefix* the cache must hold — prompt + generated[:-1] — so every
+    resume point (mid-prompt, mid-replay, steady decode) readmits through
+    one rule: restore what was snapshotted, then prefill the rest of the
+    prefix teacher-forced, then resume decode with ``tok_next`` (already
+    emitted — never re-sampled).  Because both the snapshot and the prefix
+    are keyed by logical position, the record is portable across engines
+    with different block layouts and param epochs (:meth:`Engine.resume`
+    re-pins ``epoch`` to the adopting engine).
     """
 
     req: Request
@@ -247,7 +318,8 @@ class Engine:
     benchmark reads per-pass deltas from it).
     """
 
-    def __init__(self, cfg: ArchConfig, params: Any, ecfg: EngineConfig = EngineConfig()):
+    def __init__(self, cfg: ArchConfig, params: Any, ecfg: EngineConfig = EngineConfig(),
+                 *, dispatch_from: Optional["Engine"] = None):
         if not api.supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: the paged engine serves pure-attention decoder stacks"
@@ -278,33 +350,52 @@ class Engine:
         self.kv = PagedKVCache(self.pcfg)
         self.pools = api.init_paged_pools(cfg, self.pcfg.num_tokens)
 
-        donate = steps.cache_donation()
         # two compiled quantum lengths: the full quantum for steady decoding
         # and a short one for when most live rows sit near retirement —
         # heavy-tailed traffic would otherwise overrun every short request
         # by most of a full quantum (or, with a min-remaining policy, drag
         # every long row down to one-token dispatches)
         self._quanta = sorted({max(2, ecfg.decode_quantum // 4), ecfg.decode_quantum})
-        self._decode_loops = {
-            q: jax.jit(
-                steps.make_paged_decode_loop(cfg, q, ecfg.page_size),
+        if dispatch_from is not None:
+            # data-parallel replicas of one fleet serve the same model with
+            # the same dispatch shapes — sharing the jitted callables means
+            # a shape bucket compiles once per fleet, not once per replica
+            src = dispatch_from
+            if (src.cfg is not cfg
+                    or src.ecfg.page_size != ecfg.page_size
+                    or src.ecfg.decode_quantum != ecfg.decode_quantum
+                    or src.ecfg.prefill_chunk != ecfg.prefill_chunk
+                    or bool(src._fused_steps) != ecfg.fused):
+                raise ValueError(
+                    "dispatch_from requires an engine with the same model "
+                    "config and dispatch shapes (page_size, decode_quantum, "
+                    "prefill_chunk, fused)"
+                )
+            self._decode_loops = src._decode_loops
+            self._prefill_step = src._prefill_step
+            self._fused_steps = src._fused_steps
+        else:
+            donate = steps.cache_donation()
+            self._decode_loops = {
+                q: jax.jit(
+                    steps.make_paged_decode_loop(cfg, q, ecfg.page_size),
+                    donate_argnums=donate,
+                )
+                for q in self._quanta
+            }
+            self._prefill_step = jax.jit(
+                steps.make_prefill_chunk_step(cfg, ecfg.page_size),
                 donate_argnums=donate,
             )
-            for q in self._quanta
-        }
-        self._prefill_step = jax.jit(
-            steps.make_prefill_chunk_step(cfg, ecfg.page_size),
-            donate_argnums=donate,
-        )
-        self._fused_steps = {
-            q: jax.jit(
-                steps.make_fused_step(cfg, q, ecfg.page_size),
-                donate_argnums=donate,
-            )
-            for q in self._quanta
-        } if ecfg.fused else {}
+            self._fused_steps = {
+                q: jax.jit(
+                    steps.make_fused_step(cfg, q, ecfg.page_size),
+                    donate_argnums=donate,
+                )
+                for q in self._quanta
+            } if ecfg.fused else {}
 
-        self.waiting: deque[Union[Request, _Preempted]] = deque()
+        self.waiting: deque[Union[Request, ResumeState]] = deque()
         self.slots: list[Optional[_Slot]] = [None] * ecfg.max_slots
         self.results: dict[int, RequestResult] = {}
         self._shapes_seen: set[tuple] = set()
@@ -324,6 +415,8 @@ class Engine:
             "hot_swaps": 0,
             "swap_rollbacks": 0,
             "epochs_retired": 0,
+            "timeouts": 0,
+            "cancels": 0,
         }
 
     # -- public API ---------------------------------------------------------
@@ -367,7 +460,7 @@ class Engine:
         live = {self.params_epoch}
         live.update(s.epoch for s in self.slots if s is not None)
         live.update(
-            w.epoch for w in self.waiting if isinstance(w, _Preempted)
+            w.epoch for w in self.waiting if isinstance(w, ResumeState)
         )
         for ep in [e for e in self._params if e not in live]:
             del self._params[ep]
@@ -490,6 +583,7 @@ class Engine:
         each epoch gets its own dispatch round (same compiled variants —
         only the traced param argument differs), normally exactly one
         extra round for the handful of cycles the old epoch drains."""
+        self._expire(now)
         self._admit(now)
         epochs = sorted({s.epoch for s in self.slots if s is not None})
         did = False
@@ -526,6 +620,142 @@ class Engine:
         self.stats["compiled_variants"] = len(self._shapes_seen)
         return [self.results[r.rid] for r in requests]
 
+    # -- deadlines / cancellation / cross-replica records --------------------
+
+    def _finish_waiting(self, item: Union[Request, ResumeState], now: float,
+                        status: str) -> None:
+        """Record a result for a request that ends while still queued —
+        deadline expiry or cancellation before (re-)admission."""
+        if isinstance(item, ResumeState):
+            req, tokens = item.req, list(item.generated)
+            t_admitted, t_first = item.t_admitted, item.t_first_token
+        else:
+            req, tokens = item, []
+            t_admitted = t_first = now
+        self.results[req.rid] = RequestResult(
+            rid=req.rid, tokens=tokens, t_arrival=req.arrival_time,
+            t_admitted=t_admitted, t_first_token=t_first, t_done=now,
+            status=status,
+        )
+        self.stats["timeouts" if status == "timeout" else "cancels"] += 1
+        self.stats["tokens_emitted"] += len(tokens)
+
+    def _expire(self, now: float) -> None:
+        """Retire everything past its deadline (``arrival_time +
+        deadline_s``): occupied slots return their partial tokens and free
+        their blocks; queued requests (fresh or preempted) retire in place.
+        A deadlined request can never decode forever or wedge the queue."""
+
+        def expired(req: Request) -> bool:
+            return req.deadline_s is not None and (
+                now >= req.arrival_time + req.deadline_s
+            )
+
+        for i, s in enumerate(self.slots):
+            if s is not None and expired(s.req):
+                self._retire(i, now, status="timeout")
+        if any(expired(w.req if isinstance(w, ResumeState) else w)
+               for w in self.waiting):
+            keep: deque[Union[Request, ResumeState]] = deque()
+            for w in self.waiting:
+                if expired(w.req if isinstance(w, ResumeState) else w):
+                    self._finish_waiting(w, now, "timeout")
+                else:
+                    keep.append(w)
+            self.waiting = keep
+
+    def cancel(self, rid: int, *, now: float = 0.0, status: str = "cancelled") -> bool:
+        """Abort request ``rid`` wherever it is — occupied slot (partial
+        tokens returned, blocks freed) or waiting queue.  Returns False if
+        the request is unknown or already finished.  The fleet router uses
+        this to kill the losing copy of a hedged dispatch and to tear down
+        draining replicas."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.req.rid == rid:
+                self._retire(i, now, status=status)
+                return True
+        for j, w in enumerate(self.waiting):
+            if (w.req if isinstance(w, ResumeState) else w).rid == rid:
+                del self.waiting[j]
+                self._finish_waiting(w, now, status)
+                return True
+        return False
+
+    def export_state(self, rid: int) -> Optional[ResumeState]:
+        """Host-side copy of ``rid``'s progress WITHOUT disturbing this
+        engine — no eviction, no device snapshot.  The hedged-dispatch
+        primitive: another replica can :meth:`resume` the copy (teacher-
+        forced replay of the recorded prefix) while this one keeps running;
+        both compute the identical stream, first to finish wins.  None if
+        the request is unknown or already finished."""
+        for s in self.slots:
+            if s is not None and s.req.rid == rid:
+                return ResumeState(
+                    req=s.req,
+                    n_live=0,
+                    generated=list(s.generated),
+                    tok_next=s.saved_tok if s.replay is not None else s.tok_next,
+                    key=np.array(s.key),
+                    snapshot=None,
+                    t_admitted=s.t_admitted,
+                    t_first_token=s.t_first_token,
+                )
+        for w in self.waiting:
+            if isinstance(w, ResumeState) and w.req.rid == rid:
+                return dataclasses.replace(w, generated=list(w.generated),
+                                           n_live=0, snapshot=None)
+            if isinstance(w, Request) and w.rid == rid:
+                return ResumeState(
+                    req=w, n_live=0, generated=[], tok_next=-1,
+                    key=np.asarray(jax.random.PRNGKey(w.seed)), snapshot=None,
+                    t_admitted=0.0, t_first_token=0.0,
+                )
+        return None
+
+    def evict(self, rid: int, *, snapshot: bool = False) -> Optional[ResumeState]:
+        """Remove ``rid`` from this engine and return the record another
+        replica needs to finish it (drain / migrate).  ``snapshot=True``
+        adds the device KV snapshot — byte-identical restore on the
+        adopting engine even across different block layouts; without it the
+        adopter replays the recorded prefix teacher-forced.  None if the
+        request is unknown or already finished."""
+        for i, s in enumerate(self.slots):
+            if s is not None and s.req.rid == rid:
+                return self._evict_record(i, want_snapshot=snapshot)
+        for j, w in enumerate(self.waiting):
+            if (w.req if isinstance(w, ResumeState) else w).rid == rid:
+                del self.waiting[j]
+                if isinstance(w, ResumeState):
+                    return w
+                return ResumeState(
+                    req=w, n_live=0, generated=[], tok_next=-1,
+                    key=np.asarray(jax.random.PRNGKey(w.seed)), snapshot=None,
+                    t_admitted=0.0, t_first_token=0.0,
+                )
+        return None
+
+    def resume(self, rec: ResumeState) -> None:
+        """Adopt a record exported by another engine replica (failover /
+        hedging / drain).  The record is re-pinned to THIS engine's current
+        param epoch — the parity contract demands all replicas serve
+        identical params for the stream to stay bit-identical to solo
+        generation — and enqueued FIFO by its original arrival time."""
+        req = rec.req
+        if req.prompt.size + req.max_new_tokens > self.ecfg.max_seq_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new "
+                f"{req.prompt.size + req.max_new_tokens} > max_seq_len "
+                f"{self.ecfg.max_seq_len}"
+            )
+        need = -(-self._cap_tokens(req) // self.ecfg.page_size)
+        if need > self.pcfg.usable_blocks:
+            raise ValueError(
+                f"request {req.rid}: needs {need} KV blocks > pool's "
+                f"{self.pcfg.usable_blocks} usable blocks"
+            )
+        rec.epoch = self.params_epoch
+        self._reinsert(rec)
+
     # -- admission / preemption ---------------------------------------------
 
     def _admit(self, now: float) -> None:
@@ -540,7 +770,7 @@ class Engine:
             head = self.waiting[0]
             if head.arrival_time > now:
                 break  # FIFO: later arrivals wait behind the head
-            if isinstance(head, _Preempted):
+            if isinstance(head, ResumeState):
                 if not self._readmit(i, head):
                     break  # out of blocks until a retirement frees some
             else:
@@ -550,7 +780,7 @@ class Engine:
                 self.slots[i] = _Slot(head, now, epoch=self.params_epoch)
             self.waiting.popleft()
 
-    def _readmit(self, idx: int, rec: _Preempted) -> bool:
+    def _readmit(self, idx: int, rec: ResumeState) -> bool:
         """Seat a preempted request back into slot ``idx``; False if the
         free list can't yet hold its live cells plus its next prefill chunk.
         The whole block need is secured *before* the device-side snapshot
@@ -593,11 +823,11 @@ class Engine:
         self.stats["readmissions"] += 1
         return True
 
-    def _wkey(self, item: Union[Request, _Preempted]) -> tuple[float, int]:
+    def _wkey(self, item: Union[Request, ResumeState]) -> tuple[float, int]:
         r = item if isinstance(item, Request) else item.req
         return (r.arrival_time, r.rid)
 
-    def _reinsert(self, rec: _Preempted) -> None:
+    def _reinsert(self, rec: ResumeState) -> None:
         """Put a preempted request back into the waiting queue in arrival
         order (every waiting request arrived at or after any running one, so
         this lands at/near the front — FIFO re-admission)."""
@@ -609,39 +839,41 @@ class Engine:
                 break
         self.waiting.insert(at, rec)
 
-    def _pick_victim(self, exclude: int, than: tuple[float, int]) -> Optional[int]:
-        """Lowest-priority slot strictly below priority ``than`` (decode
-        slots preferred — a mid-prompt victim wastes its partial prefill),
-        or None."""
+    def _vkey(self, slot: _Slot) -> tuple:
+        """(protect, prefer) of a slot under the configured victim policy."""
+        return (self.ecfg.victim_key or fcfs_victim_key)(slot.view)
+
+    def _pick_victim(self, exclude: int, than: tuple) -> Optional[int]:
+        """The most evictable slot whose ``protect`` key is strictly above
+        ``than`` (the requester's — strict ordering keeps preemption
+        deadlock-free), or None.  Among candidates the policy's ``prefer``
+        key picks first (FCFS default: decode slots — a mid-prompt victim
+        wastes its partial prefill), ``protect`` breaks ties."""
         best, best_key = None, None
         for i, s in enumerate(self.slots):
-            if s is None or i == exclude or s.priority <= than:
+            if s is None or i == exclude:
                 continue
-            key = (s.state == _DECODE, s.priority)  # decode first, then latest
+            protect, prefer = self._vkey(s)
+            if protect <= than:
+                continue
+            key = (prefer, protect)
             if best_key is None or key > best_key:
                 best, best_key = i, key
         return best
 
-    def _preempt(self, idx: int) -> None:
-        """Evict slot ``idx`` under block pressure: snapshot (swap) or drop
-        (recompute) its live cells, free its blocks, and requeue it FIFO."""
+    def _evict_record(self, idx: int, *, want_snapshot: bool) -> ResumeState:
+        """Remove slot ``idx`` and return the record that continues it —
+        here (preemption requeue) or on another replica (failover)."""
         slot = self.slots[idx]
         n_live = slot.pos if slot.state == _DECODE else slot.prefill_done
         snapshot = None
-        if self.ecfg.preempt == "swap":
-            # counted per policy even when there is nothing to snapshot yet
-            # (a just-admitted victim) — the stats split swap/recompute by
-            # the configured mode, not by whether cells happened to exist
-            if n_live:
-                snapshot = paged_cache.swap_out(self.pools, self.kv, idx, n_live)
-            self.stats["preempt_swap"] += 1
-        else:
-            n_live = 0  # recompute: drop the cells, replay on re-admission
-            self.stats["preempt_recompute"] += 1
-        self.stats["preemptions"] += 1
+        if want_snapshot and n_live:
+            snapshot = paged_cache.swap_out(self.pools, self.kv, idx, n_live)
+        if not want_snapshot:
+            n_live = 0  # drop the cells, replay the prefix on re-admission
         self.kv.release(idx)
         self.slots[idx] = None
-        self._reinsert(_Preempted(
+        return ResumeState(
             req=slot.req,
             n_live=n_live,
             generated=slot.generated,
@@ -653,15 +885,26 @@ class Engine:
             t_admitted=slot.t_admitted,
             t_first_token=slot.t_first_token,
             epoch=slot.epoch,
-        ))
+        )
+
+    def _preempt(self, idx: int) -> None:
+        """Evict slot ``idx`` under block pressure: snapshot (swap) or drop
+        (recompute) its live cells, free its blocks, and requeue it FIFO."""
+        want = self.ecfg.preempt == "swap"
+        # counted per policy even when there is nothing to snapshot yet
+        # (a just-admitted victim) — the stats split swap/recompute by
+        # the configured mode, not by whether cells happened to exist
+        self.stats["preempt_swap" if want else "preempt_recompute"] += 1
+        self.stats["preemptions"] += 1
+        self._reinsert(self._evict_record(idx, want_snapshot=want))
 
     def _ensure_blocks(self, idx: int, n_tokens: int) -> bool:
         """Grow slot ``idx`` to ``n_tokens`` cells, preempting lower-priority
         slots while the free list is short.  False if the slot must skip this
         cycle (it is itself among the lowest-priority work)."""
-        slot = self.slots[idx]
+        protect = self._vkey(self.slots[idx])[0]
         while not self.kv.ensure_capacity(idx, n_tokens):
-            victim = self._pick_victim(exclude=idx, than=slot.priority)
+            victim = self._pick_victim(exclude=idx, than=protect)
             if victim is None:
                 return False
             self._preempt(victim)
@@ -676,7 +919,7 @@ class Engine:
         Shared by the fused, prefill, and decode rounds so all three
         dispatch kinds apply one securing policy."""
         kept = []
-        for i in sorted(rows, key=lambda i: self.slots[i].priority):
+        for i in sorted(rows, key=lambda i: self._vkey(self.slots[i])[0]):
             s = self.slots[i]
             if s is None:
                 continue
@@ -686,7 +929,7 @@ class Engine:
 
     # -- retirement ---------------------------------------------------------
 
-    def _retire(self, idx: int, now: float) -> None:
+    def _retire(self, idx: int, now: float, status: str = "ok") -> None:
         slot = self.slots[idx]
         self.kv.release(idx)
         self.slots[idx] = None
@@ -697,7 +940,12 @@ class Engine:
             t_admitted=slot.t_admitted,
             t_first_token=slot.t_first_token,
             t_done=now,
+            status=status,
         )
+        if status == "timeout":
+            self.stats["timeouts"] += 1
+        elif status == "cancelled":
+            self.stats["cancels"] += 1
         self.stats["tokens_emitted"] += len(slot.generated)
 
     def _append_token(self, idx: int, tok: int, now: float) -> bool:

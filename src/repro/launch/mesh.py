@@ -25,3 +25,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 def make_host_mesh() -> jax.sharding.Mesh:
     """Trivial 1x1 mesh over the real local device (tests / examples)."""
     return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def replica_devices(n: int) -> list[jax.Device]:
+    """One device per data-parallel engine replica along the "data" axis.
+
+    With more replicas than devices the assignment wraps (replicas share a
+    device) — tests run with 1 CPU device and the fleet benchmark emulates
+    a mesh with ``--xla_force_host_platform_device_count=N`` (set before
+    first jax initialization, exactly like the dry-run's 512-chip override;
+    the benchmark's ``--devices`` flag does this pre-import)."""
+    if n < 1:
+        raise ValueError(f"need at least one replica, got {n}")
+    devs = jax.devices()
+    return [devs[i % len(devs)] for i in range(n)]

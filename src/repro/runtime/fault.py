@@ -19,15 +19,47 @@ timeouts); this container has one process, so tests inject failures via the
 from __future__ import annotations
 
 import dataclasses
+import random
 import time
 from typing import Any, Callable, Optional, Tuple, Type
 
 
 @dataclasses.dataclass
 class FaultPolicy:
+    """Bounded-retry policy.  ``backoff_s`` is the exponential base between
+    attempts; ``jitter`` spreads each sleep to ``backoff_s * 2**attempt *
+    (1 + uniform(0, jitter))`` from a PRNG seeded with ``seed`` — N
+    replicas retrying a shared dependency (checkpoint store, pool
+    reprogramming) must not thunder-herd back in lockstep, while a fixed
+    seed keeps every trace reproducible."""
+
     max_retries: int = 3
     backoff_s: float = 0.0  # exponential base; 0 for tests
     restore_on_failure: bool = True  # reload last checkpoint before retrying
+    jitter: float = 0.0  # uniform backoff spread fraction (0 = deterministic)
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.jitter < 0:
+            raise ValueError(f"jitter must be >= 0, got {self.jitter}")
+
+
+def backoff_delay(
+    policy: FaultPolicy, attempt: int, rng: Optional[random.Random] = None
+) -> float:
+    """The jittered exponential delay before retry ``attempt`` (0-based
+    failure count): ``backoff_s * 2**attempt * (1 + uniform(0, jitter))``.
+
+    One formula for both retry styles: :func:`run_with_retries` sleeps it
+    inline, while the fleet router turns it into a not-before timestamp on
+    its admission queue (a router must keep serving other replicas while a
+    failed request waits out its backoff)."""
+    if not policy.backoff_s:
+        return 0.0
+    spread = 1.0
+    if policy.jitter:
+        spread += (rng or random.Random(policy.seed)).uniform(0.0, policy.jitter)
+    return policy.backoff_s * (2**attempt) * spread
 
 
 def run_with_retries(
@@ -43,10 +75,12 @@ def run_with_retries(
     retry boundary must never swallow a shutdown request.  ``retry_on``
     narrows which exceptions are retried: anything outside it re-raises
     unchanged on the first occurrence.  The backoff sleep only runs when
-    another attempt follows (never after the final failure), and the
-    terminal ``RuntimeError`` chains the last underlying exception.
+    another attempt follows (never after the final failure) and is
+    jittered per ``policy.jitter`` (seeded — deterministic per call), and
+    the terminal ``RuntimeError`` chains the last underlying exception.
     """
     last: Optional[BaseException] = None
+    rng = random.Random(policy.seed) if policy.jitter else None
     for attempt in range(policy.max_retries + 1):
         try:
             return fn()
@@ -61,7 +95,7 @@ def run_with_retries(
             if on_failure is not None:
                 on_failure(attempt, e)
             if policy.backoff_s:
-                time.sleep(policy.backoff_s * (2**attempt))
+                time.sleep(backoff_delay(policy, attempt, rng))
     raise RuntimeError(f"step failed after {policy.max_retries + 1} attempts") from last
 
 

@@ -521,3 +521,143 @@ def test_prepare_serving_params_densifies_once_off_tpu(deployed):
     dense = deploy_params(params, plan)
     for a, b in zip(jax.tree.leaves(prepared), jax.tree.leaves(dense)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Deadlines, cancellation, pluggable preemption victim keys
+# ---------------------------------------------------------------------------
+
+def test_deadline_timeout_retires_partial_and_frees_blocks(gemma):
+    """A slot past its deadline retires with status="timeout": the tokens
+    emitted in time are returned (a strict prefix of the solo stream), its
+    blocks go back to the pool, and the engine keeps serving."""
+    cfg, params = gemma
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=1, page_size=8, max_seq_len=64,
+                     prefill_chunk=16, decode_quantum=4),
+    )
+    free0 = eng.kv.allocator.free_blocks
+    req = Request(rid=0, prompt=np.arange(5) % cfg.vocab_size,
+                  max_new_tokens=40, greedy=True, seed=0, deadline_s=1.0)
+    eng.submit(req)
+    now = 0.0
+    while 0 not in eng.results:
+        eng.step(now)
+        now += 0.4  # virtual clock: deadline crossed after ~3 cycles
+    res = eng.results[0]
+    assert res.status == "timeout"
+    assert 0 < len(res.tokens) < 40  # partial: decoded a few quanta, not all
+    assert res.tokens == _solo(cfg, params, req)[: len(res.tokens)]
+    assert eng.kv.allocator.free_blocks == free0  # blocks freed on retire
+    assert eng.stats["timeouts"] == 1
+
+
+def test_deadline_expires_in_waiting_queue(gemma):
+    """A request whose deadline passes while still queued (slots full)
+    times out with zero tokens instead of waiting forever."""
+    cfg, params = gemma
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=1, page_size=8, max_seq_len=64,
+                     prefill_chunk=16, decode_quantum=4),
+    )
+    hog = Request(rid=0, prompt=np.arange(4) % cfg.vocab_size,
+                  max_new_tokens=30, greedy=True, seed=0)
+    queued = Request(rid=1, prompt=np.arange(6) % cfg.vocab_size,
+                     max_new_tokens=4, greedy=True, seed=1, deadline_s=0.5)
+    eng.submit(hog)
+    eng.submit(queued)
+    now = 0.0
+    while 1 not in eng.results:
+        eng.step(now)
+        now += 0.4
+    assert eng.results[1].status == "timeout"
+    assert eng.results[1].tokens == []
+    # the hog is unaffected: runs to completion, exact
+    while 0 not in eng.results:
+        eng.step(now)
+        now += 0.4
+    assert eng.results[0].status == "ok"
+    assert eng.results[0].tokens == _solo(cfg, params, hog)
+
+
+def test_cancel_running_and_waiting(gemma):
+    """cancel() retires a running slot with its partial tokens (blocks
+    freed) and drops a waiting request; unknown/finished rids return
+    False.  The surviving request's stream stays exact."""
+    cfg, params = gemma
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=1, page_size=8, max_seq_len=64,
+                     prefill_chunk=16, decode_quantum=4),
+    )
+    free0 = eng.kv.allocator.free_blocks
+    running = Request(rid=0, prompt=np.arange(5) % cfg.vocab_size,
+                      max_new_tokens=30, greedy=True, seed=0)
+    waiting = Request(rid=1, prompt=np.arange(4) % cfg.vocab_size,
+                      max_new_tokens=4, greedy=True, seed=1)
+    eng.submit(running)
+    eng.submit(waiting)
+    eng.step(0.0)
+    eng.step(0.1)
+    assert eng.cancel(0, now=0.2)
+    res = eng.results[0]
+    assert res.status == "cancelled" and 0 < len(res.tokens) < 30
+    assert res.tokens == _solo(cfg, params, running)[: len(res.tokens)]
+    assert not eng.cancel(0, now=0.2)  # already finished
+    assert not eng.cancel(99, now=0.2)  # unknown
+    assert eng.cancel(1, now=0.2)  # still waiting: dropped with no tokens
+    assert eng.results[1].status == "cancelled" and eng.results[1].tokens == []
+    assert eng.stats["cancels"] == 2
+    assert eng.kv.allocator.free_blocks == free0
+
+
+def test_victim_key_policies_ordering():
+    """fcfs: protection is strict arrival order.  priority_class: class
+    outranks arrival (a later high-priority arrival is protected over an
+    earlier batch-tier one); decode preferred among candidates in both."""
+    from repro.launch.engine import SlotView, fcfs_victim_key, priority_class_victim_key
+
+    early_batch = SlotView(rid=0, arrival_time=0.0, priority_class=2,
+                           decoding=True, generated=3, deadline_s=None)
+    late_urgent = SlotView(rid=1, arrival_time=1.0, priority_class=0,
+                           decoding=False, generated=0, deadline_s=None)
+    # FCFS: the late arrival is the less-protected (evicted-first) slot
+    assert fcfs_victim_key(late_urgent)[0] > fcfs_victim_key(early_batch)[0]
+    # priority classes invert that: the batch-tier slot is evicted first
+    assert priority_class_victim_key(early_batch)[0] > priority_class_victim_key(late_urgent)[0]
+    # preference part: decode slots win ties among candidates
+    assert fcfs_victim_key(early_batch)[1] > fcfs_victim_key(late_urgent)[1]
+
+
+def test_engine_config_rejects_uncallable_victim_key():
+    with pytest.raises(ValueError, match="victim_key"):
+        EngineConfig(victim_key=42)
+
+
+def test_priority_class_preemption_parity(gemma):
+    """Overcommitted pool with the priority-class victim key: the earliest
+    arrival — which plain FCFS would protect above everyone — is the batch
+    tier and absorbs the preemptions; every stream (including its own,
+    bounced and re-admitted) stays exact, and the interactive tier
+    finishes first."""
+    from repro.launch.engine import priority_class_victim_key
+
+    cfg, params = gemma
+    specs = [(6, 10, True, s) for s in range(4)]
+    reqs = _mk_requests(cfg, specs)
+    reqs[0].priority_class = 2  # earliest arrival, lowest tier
+    eng = Engine(
+        cfg, params,
+        EngineConfig(max_slots=4, page_size=4, max_seq_len=32, prefill_chunk=4,
+                     decode_quantum=4, num_blocks=7, fused=True, preempt="swap",
+                     victim_key=priority_class_victim_key),
+    )
+    results = eng.run(reqs)
+    for req, res in zip(reqs, results):
+        assert res.tokens == _solo(cfg, params, req), f"rid {req.rid}"
+    assert eng.stats["preemptions"] >= 1
+    # the batch-tier request took the evictions: it retires last
+    batch_done = eng.results[0].t_done
+    assert all(eng.results[r.rid].t_done <= batch_done for r in reqs)

@@ -189,3 +189,46 @@ def test_engine_config_validation():
         with pytest.raises(ValueError):
             EngineConfig(**bad)
     EngineConfig()  # defaults stay valid
+
+
+def test_cross_epoch_snapshot_restore_on_fresh_replica(gemma):
+    """The failover primitive, pinned directly: ``swap_out`` state from
+    replica A restored via ``swap_in`` on a *fresh* replica B — different
+    block layout (page size AND pool size differ), post-``hot_swap`` param
+    epoch — lands byte-identical in B's pools, and the replayed stream is
+    token-identical to solo generation."""
+    cfg, params0, params1 = gemma
+    req = _reqs(cfg, [(6, 12, False, 5)])[0]
+    A = Engine(cfg, params0, ECFG)
+    A.submit(req)
+    now = 0.0
+    while not (A.slots[0] is not None and len(A.slots[0].generated) >= 3):
+        A.step(now)
+        now += 0.01
+        assert not A.results, "request finished before eviction"
+    rec = A.evict(req.rid, snapshot=True)
+    assert rec is not None and rec.snapshot is not None and rec.n_live > 0
+    want = jax.tree.map(np.copy, rec.snapshot)
+
+    # fresh replica B: different page size and pool, one hot_swap behind it
+    B = Engine(
+        cfg, params1,
+        EngineConfig(max_slots=3, page_size=4, max_seq_len=64,
+                     prefill_chunk=8, decode_quantum=4),
+    )
+    assert B.hot_swap(params0)  # epoch 1 now serves A's tree
+    assert B.params_epoch == 1
+    B.resume(rec)
+    assert rec.epoch == 1  # re-pinned to B's current epoch
+    B.step(now)  # admits: snapshot swaps into B's (different) blocks
+
+    idx = next(i for i, s in enumerate(B.slots) if s and s.req.rid == req.rid)
+    cells = B.kv.slot_cells(idx, rec.n_live)
+    got = jax.tree.map(lambda p: np.asarray(p[:, cells]), B.pools)
+    jax.tree.map(np.testing.assert_array_equal, got, want)
+    assert B.stats["swap_ins"] == 1
+
+    while req.rid not in B.results:
+        B.step(now)
+        now += 0.01
+    assert B.results[req.rid].tokens == _solo(cfg, params0, req)

@@ -220,3 +220,53 @@ def test_redeploy_pricing_in_loop(tmp_path):
     assert len(result["redeploy_log"]) >= 1
     rec = result["redeploy_log"][0]
     assert rec["transitions_sws"] <= rec["n_bits"]
+
+
+def test_backoff_delay_jittered_bounded_and_seed_deterministic():
+    """The jittered delay stays within [base, base*(1+jitter)] per attempt
+    and replays identically for a fixed seed — N replicas spread out, one
+    trace reproduces."""
+    import random
+
+    from repro.runtime.fault import backoff_delay
+
+    pol = FaultPolicy(max_retries=5, backoff_s=0.1, jitter=0.5, seed=42)
+    rng1, rng2 = random.Random(42), random.Random(42)
+    d1 = [backoff_delay(pol, a, rng1) for a in range(4)]
+    d2 = [backoff_delay(pol, a, rng2) for a in range(4)]
+    assert d1 == d2
+    for a, d in enumerate(d1):
+        base = 0.1 * 2**a
+        assert base <= d <= base * 1.5
+    assert len({d / 0.1 / 2**a for a, d in enumerate(d1)}) > 1  # actually jittered
+    # zero base short-circuits (no RNG draw), jitter-off is exact exponential
+    assert backoff_delay(FaultPolicy(backoff_s=0.0, jitter=0.5), 3) == 0.0
+    assert backoff_delay(FaultPolicy(backoff_s=0.2), 3) == pytest.approx(1.6)
+    with pytest.raises(ValueError, match="jitter"):
+        FaultPolicy(jitter=-0.1)
+
+
+def test_run_with_retries_jittered_sleeps_deterministic(monkeypatch):
+    """Jittered backoff keeps both PR-6 invariants: sleeps only between
+    attempts (never after the final one), and a fixed policy seed replays
+    the identical sleep trace."""
+    import repro.runtime.fault as fault_mod
+
+    sleeps: list[float] = []
+    monkeypatch.setattr(fault_mod.time, "sleep", sleeps.append)
+
+    def fn():
+        raise RuntimeError("down")
+
+    pol = FaultPolicy(max_retries=2, backoff_s=0.01, jitter=1.0, seed=7)
+    with pytest.raises(RuntimeError, match="failed after 3 attempts"):
+        run_with_retries(fn, pol)
+    assert len(sleeps) == 2  # 3 attempts, no sleep after the last
+    first = list(sleeps)
+    sleeps.clear()
+    with pytest.raises(RuntimeError):
+        run_with_retries(fn, pol)
+    assert sleeps == first  # seeded jitter: bit-identical trace
+    for a, s in enumerate(first):
+        base = 0.01 * 2**a
+        assert base <= s <= base * 2.0
