@@ -1,0 +1,351 @@
+"""Online integrity: scrub/detect/repair economics and serving overhead.
+
+Four experiments close the self-repair loop around the serving stack
+(core/integrity.py):
+
+  * **Storm and repair** — deploy a checkpoint through an integrity-enabled
+    pool, unleash a mid-trace fault storm (stored-bit corruption + new hard
+    stuck-at cells), and drive the scrubber to convergence.  Reported: the
+    storm is *detected* (checksum tiles flag it), repair restores
+    bit-identical token parity versus solo generation on the clean
+    deployment, and the priced repair cost (in-place rewrites + spare-column
+    remaps + migrations, all via ``price_pairs``) lands far below a full
+    reprogram of the affected tensors — the reprogramming-cost argument of
+    the paper applied to maintenance instead of checkpoint swaps.
+  * **Engine-integrated scrub** — an engine serves a live trace while its
+    between-dispatch scrub hook finds the storm, repairs it, and atomically
+    ``hot_swap``s the repaired planes in; requests admitted after the
+    refresh are bit-identical to solo generation on the clean deployment
+    (in-flight requests keep their epoch, per the hot-redeploy contract).
+  * **Scrub overhead** — steady-state serving throughput with the scrubber
+    scanning its per-round tile budget on a *clean* pool versus scrubbing
+    disabled, interleaved best-of-N: the detection tax on tok/s.
+  * **Tolerated-fault accuracy** — with ``tolerate_cols=1`` the repair
+    policy leaves lowest-order faulty columns un-repaired (the bit-stucking
+    insight); shadow-batch logit KL versus the clean fp model across storm
+    rates prices that tolerance.
+
+  PYTHONPATH=src python -m benchmarks.integrity_scrub [--quick] [--check]
+
+Writes experiments/bench/BENCH_integrity.json (schema: docs/benchmarks.md).
+``--check`` exits non-zero if the storm goes undetected, post-repair token
+parity breaks, repair costs more than half a full reprogram of the affected
+tensors, or scrubbing costs more than 5% of serving throughput.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import banner, save_json
+from repro.configs import get_arch
+from repro.core import simulator
+from repro.core.integrity import IntegrityConfig
+from repro.core.planner import (
+    CrossbarSpec,
+    PlannerConfig,
+    build_deployment,
+    deploy_params,
+)
+from repro.core.pool import CrossbarPool
+from repro.launch.engine import Engine, EngineConfig, Request
+from repro.launch.serve import generate
+from repro.models import api
+
+SPEC = CrossbarSpec(rows=128, cols=10)
+STORM_KEY = jax.random.PRNGKey(1729)
+ECFG = EngineConfig(
+    max_slots=2, page_size=8, max_seq_len=64, prefill_chunk=8, decode_quantum=4
+)
+
+
+def _integrity_deploy(params, pcfg, icfg):
+    """Deploy ``params`` through a fresh integrity-enabled pool; returns
+    (pool, manager, plan, dense served params)."""
+    pool = CrossbarPool(SPEC, 2 * pcfg.crossbars, leveling="lpt")
+    mgr = pool.enable_integrity(icfg)
+    plan = build_deployment(params, SPEC, pcfg, pool=pool)
+    return pool, mgr, plan, deploy_params(params, plan, materialize="dense")
+
+
+def _mk_reqs(cfg, n, *, seed=0, rid0=0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(
+            rid=rid0 + i,
+            prompt=rng.integers(0, cfg.vocab_size, int(rng.integers(6, 14))).astype(np.int32),
+            max_new_tokens=int(rng.integers(4, 9)), greedy=True, seed=rid0 + i,
+        )
+        for i in range(n)
+    ]
+
+
+def _solo(cfg, params, req):
+    toks, _ = generate(
+        cfg, params, {"tokens": jnp.asarray(req.prompt)[None]},
+        gen_len=req.max_new_tokens, greedy=req.greedy, seed=req.seed,
+    )
+    return [int(t) for t in np.asarray(toks[0])]
+
+
+def run_storm_repair(cfg, params, *, pcfg, corrupt=2e-3, stuck=2e-4,
+                     n_requests=4, seed=0) -> dict:
+    """Storm -> scrub to convergence -> rebuilt deployment must serve token
+    streams bit-identical to the pre-storm one."""
+    icfg = IntegrityConfig(spare_cols=2, tolerate_cols=0)
+    pool, mgr, plan, served = _integrity_deploy(params, pcfg, icfg)
+    reqs = _mk_reqs(cfg, n_requests, seed=seed)
+    clean_streams = [_solo(cfg, served, r) for r in reqs]
+
+    st = mgr.storm(STORM_KEY, corrupt_rate=corrupt, stuck_rate=stuck)
+    corrupted = deploy_params(params, mgr.rebuild_plan(plan), materialize="dense")
+    storm_streams = [_solo(cfg, corrupted, r) for r in reqs]
+    degraded = sum(a != b for a, b in zip(storm_streams, clean_streams))
+
+    rep = mgr.scrub_until_clean()
+    full = mgr.transitions_full_affected()
+    repaired = deploy_params(params, mgr.rebuild_plan(plan), materialize="dense")
+    repaired_streams = [_solo(cfg, repaired, r) for r in reqs]
+    parity = repaired_streams == clean_streams
+    return {
+        "corrupt_rate": corrupt, "stuck_rate": stuck,
+        "corrupted_bits": st["corrupted_bits"],
+        "new_stuck_cells": st["new_stuck_cells"],
+        "streams_degraded_by_storm": degraded,
+        "detections": rep.detections,
+        "transients": rep.transients,
+        "rewrites": rep.rewrites,
+        "remaps": rep.remaps,
+        "migrations": rep.migrations,
+        "tolerated": rep.tolerated,
+        "repair_transitions": rep.repair_transitions,
+        "transitions_full_reprogram": full,
+        "repair_cost_ratio": rep.repair_transitions / max(full, 1),
+        "post_repair_parity": bool(parity),
+        "pool_verified": bool(mgr.verify_all()),
+        "spare_writes": mgr.spare_writes,
+    }
+
+
+def run_engine_scrub(cfg, params, *, pcfg, corrupt=2e-3, stuck=2e-4,
+                     n_requests=4, seed=0) -> dict:
+    """Mid-trace storm under a live engine: the between-dispatch scrub hook
+    detects, repairs, and hot-swaps the repaired planes; post-refresh
+    admissions are bit-identical to solo generation on the clean params."""
+    icfg = IntegrityConfig(spare_cols=2, scrub_tiles=1_000_000)
+    pool, mgr, plan, served = _integrity_deploy(params, pcfg, icfg)
+    eng = Engine(cfg, served, ECFG)
+    eng.attach_scrub(
+        mgr,
+        refresh=lambda: deploy_params(
+            params, mgr.rebuild_plan(plan), materialize="dense"
+        ),
+    )
+    mgr.storm(STORM_KEY, corrupt_rate=corrupt, stuck_rate=stuck)
+    # what an un-refreshed engine would keep serving
+    eng.hot_swap(deploy_params(params, mgr.rebuild_plan(plan), materialize="dense"))
+    eng.run(_mk_reqs(cfg, n_requests, seed=seed))
+
+    post = _mk_reqs(cfg, 2, seed=seed + 1, rid0=100)
+    results = eng.run(post)
+    parity = all(
+        res.tokens == _solo(cfg, served, req) for req, res in zip(post, results)
+    )
+    return {
+        "scrub_rounds": eng.stats["scrub_rounds"],
+        "scrub_tiles": eng.stats["scrub_tiles"],
+        "scrub_detections": eng.stats["scrub_detections"],
+        "scrub_repairs": eng.stats["scrub_repairs"],
+        "scrub_refreshes": eng.stats["scrub_refreshes"],
+        "pool_verified": bool(mgr.verify_all()),
+        "post_refresh_parity": bool(parity),
+    }
+
+
+def run_scrub_overhead(cfg, params, *, pcfg, n_requests=4, trials=3,
+                       scrub_tiles=64, every=8, seed=0) -> dict:
+    """Steady-state serving tok/s with/without the scrubber scanning its
+    tile budget every ``every`` engine steps (clean pool: pure detection
+    overhead at a realistic scrub duty cycle).  Interleaved best-of-N so
+    one-off JIT/compile noise cancels."""
+    icfg = IntegrityConfig(spare_cols=2, scrub_tiles=scrub_tiles)
+    pool, mgr, plan, served = _integrity_deploy(params, pcfg, icfg)
+    eng_off = Engine(cfg, served, ECFG)
+    eng_on = Engine(cfg, served, ECFG)
+    eng_on.attach_scrub(mgr, every=every)
+
+    def _timed(eng, rid0):
+        reqs = _mk_reqs(cfg, n_requests, seed=seed, rid0=rid0)
+        t0 = time.perf_counter()
+        results = eng.run(reqs)
+        wall = time.perf_counter() - t0
+        return sum(len(r.tokens) for r in results), wall
+
+    _timed(eng_off, 10_000), _timed(eng_on, 20_000)  # warm-up both paths
+    best = {"off": float("inf"), "on": float("inf")}
+    tokens = 0
+    for t in range(trials):
+        tokens, w_off = _timed(eng_off, 30_000 + 100 * t)
+        _, w_on = _timed(eng_on, 60_000 + 100 * t)
+        best["off"] = min(best["off"], w_off)
+        best["on"] = min(best["on"], w_on)
+    tps_off = tokens / best["off"]
+    tps_on = tokens / best["on"]
+    return {
+        "trials": trials,
+        "scrub_every_steps": every,
+        "scrub_tiles_per_round": scrub_tiles,
+        "total_tiles": mgr.total_tiles,
+        "tokens_per_trial": tokens,
+        "tok_s_off": tps_off,
+        "tok_s_on": tps_on,
+        "throughput_ratio": tps_on / tps_off,
+        "scrub_rounds": eng_on.stats["scrub_rounds"],
+        "false_detections": eng_on.stats["scrub_detections"],
+    }
+
+
+def run_tolerated_kl(cfg, params, *, pcfg, rates, batch_size=2,
+                     shadow_len=16, seed=0) -> list[dict]:
+    """Shadow-batch logit KL (vs clean fp) after storm+repair with
+    ``tolerate_cols=1``: low-order faulty columns stay un-repaired and the
+    bounded LSB error is priced in accuracy instead of repair writes."""
+    batch = api.make_batch(cfg, jax.random.PRNGKey(seed), batch_size, shadow_len)
+    f = lambda p, b: api.forward(p, cfg, b)[0]  # noqa: E731
+    out = []
+    for rate in rates:
+        icfg = IntegrityConfig(spare_cols=2, tolerate_cols=1)
+        pool, mgr, plan, _ = _integrity_deploy(params, pcfg, icfg)
+        rep_row = {"stuck_rate": rate, "tolerated": 0, "remaps": 0}
+        if rate > 0.0:
+            mgr.storm(STORM_KEY, stuck_rate=rate)
+            rep = mgr.scrub_until_clean()
+            rep_row.update(tolerated=rep.tolerated, remaps=rep.remaps)
+        params_hat = deploy_params(params, mgr.rebuild_plan(plan),
+                                   materialize="dense")
+        rep_row["kl"] = float(simulator.logit_kl(f, params, params_hat, batch))
+        out.append(rep_row)
+        print(f"  stuck rate {rate:7.5f}   kl {rep_row['kl']:.5f}   "
+              f"({rep_row['tolerated']} tolerated, {rep_row['remaps']} remapped)")
+    return out
+
+
+def run(
+    arch: str = "gemma-2b",
+    *,
+    reduced: bool = True,
+    corrupt: float = 2e-3,
+    stuck: float = 2e-4,
+    n_requests: int = 4,
+    trials: int = 3,
+    kl_rates=(0.0, 1e-3, 4e-3),
+    seed: int = 0,
+) -> dict:
+    cfg = get_arch(arch, reduced=reduced)
+    params = api.init(jax.random.PRNGKey(seed), cfg)
+    pcfg = PlannerConfig(p_stuck=0.5, min_size=1024)
+
+    banner("Storm and repair — detect, localize, price, restore parity")
+    storm = run_storm_repair(cfg, params, pcfg=pcfg, corrupt=corrupt,
+                             stuck=stuck, n_requests=n_requests, seed=seed)
+    print(f"  {storm['corrupted_bits']} corrupted bits + "
+          f"{storm['new_stuck_cells']} stuck cells -> "
+          f"{storm['detections']} tiles detected, "
+          f"{storm['rewrites']} rewrites / {storm['remaps']} remaps / "
+          f"{storm['migrations']} migrations")
+    print(f"  repair cost {storm['repair_transitions']} transitions = "
+          f"{100 * storm['repair_cost_ratio']:.1f}% of a full reprogram "
+          f"({storm['transitions_full_reprogram']}), "
+          f"token parity {storm['post_repair_parity']}")
+
+    banner("Engine-integrated scrub — repair + atomic refresh under load")
+    esc = run_engine_scrub(cfg, params, pcfg=pcfg, corrupt=corrupt,
+                           stuck=stuck, n_requests=n_requests, seed=seed)
+    print(f"  {esc['scrub_rounds']} scrub rounds between dispatches: "
+          f"{esc['scrub_detections']} detections, {esc['scrub_repairs']} repairs, "
+          f"{esc['scrub_refreshes']} refreshes; "
+          f"post-refresh parity {esc['post_refresh_parity']}")
+
+    banner("Scrub overhead — steady-state tok/s, scrubber on vs off")
+    ovh = run_scrub_overhead(cfg, params, pcfg=pcfg, n_requests=n_requests,
+                             trials=trials, seed=seed)
+    print(f"  {ovh['tok_s_off']:.1f} tok/s off vs {ovh['tok_s_on']:.1f} on "
+          f"({100 * ovh['throughput_ratio']:.1f}%, "
+          f"{ovh['scrub_tiles_per_round']}/{ovh['total_tiles']} tiles/round)")
+
+    banner("Tolerated-fault accuracy — KL vs stuck rate at tolerate_cols=1")
+    kl = run_tolerated_kl(cfg, params, pcfg=pcfg, rates=kl_rates, seed=seed)
+
+    return {
+        "arch": arch,
+        "reduced": reduced,
+        "backend": jax.default_backend(),
+        "spec": {"rows": SPEC.rows, "cols": SPEC.cols},
+        "planner": {"p_stuck": pcfg.p_stuck, "min_size": pcfg.min_size,
+                    "crossbars": pcfg.crossbars, "spare_factor": 2},
+        "storm_repair": storm,
+        "engine_scrub": esc,
+        "overhead": ovh,
+        "tolerated_kl": kl,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--full-size", action="store_true", help="no --reduced config")
+    ap.add_argument("--quick", action="store_true", help="CI smoke shapes")
+    ap.add_argument(
+        "--check", action="store_true",
+        help="exit non-zero if the storm goes undetected, post-repair token "
+             "parity breaks, repair transitions exceed half a full reprogram "
+             "of the affected tensors, or scrubbing costs > 5% of serving "
+             "tok/s (CI integrity gates)",
+    )
+    args = ap.parse_args()
+
+    kw = {}
+    if args.quick:
+        kw = dict(n_requests=3, trials=2, kl_rates=(1e-3,))
+
+    res = run(args.arch, reduced=not args.full_size, **kw)
+    save_json("BENCH_integrity", res)
+    if args.check:
+        failures = []
+        sr = res["storm_repair"]
+        if sr["detections"] < 1:
+            failures.append("fault storm went undetected by the scrubber")
+        if not (sr["post_repair_parity"] and sr["pool_verified"]):
+            failures.append(
+                "post-repair token streams or pool reads are not bit-identical "
+                "to the clean deployment"
+            )
+        if sr["repair_cost_ratio"] > 0.5:
+            failures.append(
+                f"repair cost {100 * sr['repair_cost_ratio']:.1f}% of a full "
+                f"reprogram (gate: <= 50%)"
+            )
+        esc = res["engine_scrub"]
+        if not (esc["scrub_refreshes"] >= 1 and esc["post_refresh_parity"]):
+            failures.append(
+                "engine scrub hook failed to refresh repaired planes with "
+                "post-refresh stream parity"
+            )
+        if res["overhead"]["throughput_ratio"] < 0.95:
+            failures.append(
+                f"scrubbing costs {100 * (1 - res['overhead']['throughput_ratio']):.1f}% "
+                f"of serving throughput (gate: <= 5%)"
+            )
+        if failures:
+            for f in failures:
+                print(f"  CHECK FAILED: {f}", file=sys.stderr)
+            sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,7 @@ from benchmarks import (
     fig9_p_sweep,
     fig10_columns,
     fleet_tolerance,
+    integrity_scrub,
     plane_compression,
     planner_throughput,
     pool_wear,
@@ -211,6 +212,27 @@ def main() -> None:
         "redeploy_completed": rd_ft["completed"],
         "stream_parity": rd_ft["stream_parity"],
         "endurance_horizons": rft["endurance"]["horizons"],
+    }
+
+    banner("Integrity scrub — detect, repair, refresh; overhead and cost")
+    ri = integrity_scrub.run(
+        n_requests=3 if not args.full else 4,
+        trials=2 if not args.full else 3,
+        kl_rates=(1e-3,) if not args.full else (0.0, 1e-3, 4e-3),
+    )
+    sr_i, ov_i = ri["storm_repair"], ri["overhead"]
+    print(f"  storm: {sr_i['detections']} detections, repair cost "
+          f"{100 * sr_i['repair_cost_ratio']:.1f}% of full reprogram, "
+          f"parity {sr_i['post_repair_parity']}")
+    print(f"  scrub overhead: {100 * (1 - min(ov_i['throughput_ratio'], 1.0)):.1f}% "
+          f"of serving tok/s at 1/{ov_i['scrub_every_steps']} duty cycle")
+    save_json("BENCH_integrity", ri)
+    summary["integrity"] = {
+        "detections": sr_i["detections"],
+        "repair_cost_ratio": sr_i["repair_cost_ratio"],
+        "post_repair_parity": sr_i["post_repair_parity"],
+        "refreshes": ri["engine_scrub"]["scrub_refreshes"],
+        "throughput_ratio": ov_i["throughput_ratio"],
     }
 
     banner("Fleet tolerance — replica router under chaos")

@@ -68,6 +68,25 @@ class FaultModel:
     hotspot_fraction: float = 0.0
     hotspot_mult: float = 1.0
 
+    def __post_init__(self):
+        # fail loudly at construction: a rate outside [0, 1] would silently
+        # clip (or invert) inside the Bernoulli draws, and a negative
+        # multiplier/sigma would produce nonsense masks downstream — every
+        # entry point (pool.inject_faults, perturb_operands) goes through a
+        # FaultModel, so this is the one validation choke point
+        for field in ("stuck0", "stuck1", "hotspot_fraction"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"FaultModel.{field} must be in [0, 1], got {v}")
+        for field in ("drift_sigma", "ir_alpha"):
+            v = getattr(self, field)
+            if v < 0.0:
+                raise ValueError(f"FaultModel.{field} must be >= 0, got {v}")
+        if self.hotspot_mult < 0.0:
+            raise ValueError(
+                f"FaultModel.hotspot_mult must be >= 0, got {self.hotspot_mult}"
+            )
+
     @property
     def ideal(self) -> bool:
         """True when every non-ideality is off (reads are exact)."""

@@ -515,6 +515,19 @@ def _analyze_tensor_pool(
     w_hat_flat = w_hat_slots.reshape(-1)[aux["inv_perm"]][:n]
     w_hat = w_hat_flat.reshape(w.shape).astype(w.dtype)
 
+    if pool.integrity is not None:
+        # the reconstruction closure core/integrity.py needs to dequantize
+        # repaired planes back into served weights, bit-exactly (rebuild)
+        pool.integrity.attach_aux(name, {
+            "sign_slots": aux["sign_slots"],
+            "scale": aux["scale"],
+            "offset": aux["offset"],
+            "inv_perm": aux["inv_perm"],
+            "n": n,
+            "shape": tuple(w.shape),
+            "dtype": w.dtype,
+        })
+
     jobs_u_np = np.asarray(jobs_u)
     report = TensorReport(
         name=name,

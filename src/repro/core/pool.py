@@ -269,6 +269,25 @@ class CrossbarPool:
         self.programs = 0
         self.total_writes = 0
         self.faults = None  # Optional[nonideal.FaultState]
+        self.integrity = None  # Optional[integrity.IntegrityManager]
+
+    # -- integrity ---------------------------------------------------------
+
+    def enable_integrity(self, cfg=None):
+        """Attach an :class:`~repro.core.integrity.IntegrityManager`.
+
+        Once enabled, every ``program()`` call registers the tensor's
+        reference planes, per-tile checksums, and spare columns with the
+        manager, so the scrub/detect/repair loop (``core/integrity.py``) can
+        verify and repair the deployment online.  Returns the manager (also
+        kept on ``self.integrity``).
+        """
+        from repro.core import integrity  # local: pool <-> integrity cycle hygiene
+
+        self.integrity = integrity.IntegrityManager(
+            self, cfg or integrity.IntegrityConfig()
+        )
+        return self.integrity
 
     # -- faults ------------------------------------------------------------
 
@@ -407,7 +426,10 @@ class CrossbarPool:
         leveling = self.leveling if leveling is None else leveling
         if leveling not in LEVELINGS:
             raise ValueError(f"unknown pool leveling {leveling!r}; choose from {LEVELINGS}")
+        col_order = None
         if hasattr(packed, "physical"):  # PlaneSet: program the stored bits
+            if getattr(packed, "col_order", None) is not None:
+                col_order = np.asarray(packed.col_order)
             packed = packed.physical()
         packed = jnp.asarray(packed)
         if packed.dtype != jnp.uint8:
@@ -516,7 +538,7 @@ class CrossbarPool:
         wear_total = int(wear_inc.sum())
         self.total_writes += wear_total
 
-        return PoolProgramReport(
+        report = PoolProgramReport(
             name=name,
             assignment=assignment,
             seam_costs=seam,
@@ -530,3 +552,7 @@ class CrossbarPool:
             achieved=achieved,
             achieved_read=achieved_read,
         )
+        if self.integrity is not None:
+            # register reference planes + tile checksums for the scrub loop
+            self.integrity.register(report, chains=chains, col_order=col_order)
+        return report

@@ -417,7 +417,16 @@ class Engine:
             "epochs_retired": 0,
             "timeouts": 0,
             "cancels": 0,
+            "scrub_rounds": 0,
+            "scrub_tiles": 0,
+            "scrub_detections": 0,
+            "scrub_repairs": 0,
+            "scrub_refreshes": 0,
         }
+        self._scrub_mgr = None
+        self._scrub_refresh = None
+        self._scrub_every = 1
+        self._scrub_cycles = 0
 
     # -- public API ---------------------------------------------------------
 
@@ -454,6 +463,44 @@ class Engine:
         self._params[self.params_epoch] = steps.prepare_serving_params(params)
         self.stats["hot_swaps"] += 1
         return True
+
+    def attach_scrub(self, manager, *, refresh=None, every: int = 1) -> None:
+        """Run a budgeted integrity scrub between dispatch rounds.
+
+        ``manager`` is a ``core.integrity.IntegrityManager`` (duck-typed:
+        anything with ``scrub_round()``/``pending_faults()``); one round —
+        at most ``manager.cfg.scrub_tiles`` tile verifications — runs every
+        ``every``-th scheduler cycle, after the cycle's dispatches, so the
+        added serving latency is bounded by the tile budget.  When a round
+        performs repairs and the manager comes back clean, ``refresh`` (a
+        zero-arg callable producing repaired serving params — typically
+        ``deploy_params`` over ``manager.rebuild_plan``) is swapped in
+        atomically via :meth:`hot_swap`: in-flight requests finish on the
+        epoch they started under, new admissions read the repaired planes.
+        """
+        if every < 1:
+            raise ValueError(f"scrub interval must be >= 1, got {every}")
+        self._scrub_mgr = manager
+        self._scrub_refresh = refresh
+        self._scrub_every = int(every)
+        self._scrub_cycles = 0
+
+    def _scrub_tick(self) -> None:
+        if self._scrub_mgr is None:
+            return
+        self._scrub_cycles += 1
+        if self._scrub_cycles % self._scrub_every:
+            return
+        rep = self._scrub_mgr.scrub_round()
+        self.stats["scrub_rounds"] += 1
+        self.stats["scrub_tiles"] += rep.tiles_scanned
+        self.stats["scrub_detections"] += rep.detections
+        repairs = rep.rewrites + rep.remaps + rep.migrations
+        self.stats["scrub_repairs"] += repairs
+        if (repairs and self._scrub_refresh is not None
+                and self._scrub_mgr.pending_faults() == 0):
+            if self.hot_swap(self._scrub_refresh):
+                self.stats["scrub_refreshes"] += 1
 
     def _gc_params(self) -> None:
         """Drop param epochs no live or queued-preempted request references."""
@@ -593,6 +640,7 @@ class Engine:
             else:
                 did = self._prefill_round(now, ep) or did
                 did = self._decode(now, ep) or did
+        self._scrub_tick()
         self._gc_params()
         return did
 
@@ -1320,6 +1368,16 @@ class HealthConfig:
     kl_threshold: float = 0.05
     min_horizon: float = 1.0
     endurance: float = 1e8  # pool.DEFAULT_ENDURANCE (kept literal: no import cycle)
+    # a redeploy (or a fleet kill) is expensive and a shadow batch is one
+    # noisy sample — require this many *consecutive* breaches before
+    # triggering, so one bad probe can't kill a healthy replica
+    consecutive_breaches: int = 1
+
+    def __post_init__(self):
+        if self.consecutive_breaches < 1:
+            raise ValueError(
+                f"consecutive_breaches must be >= 1, got {self.consecutive_breaches}"
+            )
 
 
 class HealthMonitor:
@@ -1340,6 +1398,7 @@ class HealthMonitor:
         self.shadow_batch = shadow_batch
         self.hcfg = hcfg
         self.history: list[dict] = []
+        self.breaches = 0  # current run of consecutive breached probes
 
     def probe(self, params: Any) -> float:
         """Shadow-batch logit KL(reference || params) — degradation signal."""
@@ -1357,12 +1416,21 @@ class HealthMonitor:
         ``min_horizon`` — the latter fires even while accuracy is still
         fine, which is the point (move off the worn cells *before* they
         die).
+
+        A single breached probe does not trigger by itself unless
+        ``consecutive_breaches == 1``: one bad shadow batch (or a transient
+        read upset) is indistinguishable from real degradation on one
+        sample, so the trigger requires the configured run of consecutive
+        breaches; any healthy probe resets the run.
         """
         kl = self.probe(params)
         horizon = float("inf")
         if pool is not None:
             horizon = pool.stats().exhaustion_horizon(self.hcfg.endurance)
-        trigger = kl > self.hcfg.kl_threshold or horizon < self.hcfg.min_horizon
-        rec = {"kl": kl, "horizon": horizon, "trigger": trigger}
+        breach = kl > self.hcfg.kl_threshold or horizon < self.hcfg.min_horizon
+        self.breaches = self.breaches + 1 if breach else 0
+        trigger = self.breaches >= self.hcfg.consecutive_breaches
+        rec = {"kl": kl, "horizon": horizon, "breach": breach,
+               "breaches": self.breaches, "trigger": trigger}
         self.history.append(rec)
         return trigger, rec

@@ -119,6 +119,11 @@ class FleetConfig:
     w_wear: float = 1.0
     w_fault: float = 100.0
     w_straggler: float = 1.0
+    # scrub findings feed placement: every known-but-unrepaired fault on a
+    # replica's pool (core/integrity.py pending backlog) costs this much, so
+    # traffic routes around replicas mid-repair until their scrubber
+    # converges (they are also excluded outright while healthy peers exist)
+    w_scrub: float = 10.0
 
     def __post_init__(self):
         if self.n_replicas < 1:
@@ -148,11 +153,13 @@ class ChaosEvent:
 
     replica: int
     at_step: int
-    kind: str  # "crash" | "stall" | "slow" | "corrupt_probe"
+    kind: str  # "crash" | "stall" | "slow" | "corrupt_probe" | "storm"
     duration_s: float = 0.0  # stall: wall-clock seconds of no progress
     factor: float = 1.0  # slow: reported step-wall multiplier
     steps: int = 1  # slow: cycles affected; corrupt_probe: probes affected
     lose_state: bool = False  # crash: host scheduler state unrecoverable too
+    corrupt: float = 0.0  # storm: stored-bit corruption rate
+    stuck: float = 0.0  # storm: new hard stuck-at cell rate
     fired: bool = False
 
 
@@ -193,6 +200,17 @@ class FaultInjector:
         failover path must still preserve every stream."""
         self.events.append(ChaosEvent(replica, at_step, "corrupt_probe", steps=probes))
 
+    def storm(self, replica: int, at_step: int, *, corrupt: float = 1e-3,
+              stuck: float = 1e-4) -> None:
+        """Unleash a mid-trace fault storm on ``replica``'s crossbar pool:
+        stored bits flip at ``corrupt`` and new hard stuck-at cells appear
+        at ``stuck`` (``core.integrity.IntegrityManager.storm``).  Requires
+        the replica's pool to have integrity enabled; the scrub/repair loop
+        — not failover — is what must recover the replica."""
+        self.events.append(
+            ChaosEvent(replica, at_step, "storm", corrupt=corrupt, stuck=stuck)
+        )
+
     def fire(self, replica: int, step: int, now: float) -> list[ChaosEvent]:
         """Pop (mark fired + log) every armed event for ``replica`` whose
         ``at_step`` has been reached."""
@@ -230,6 +248,7 @@ class Replica:
         self.slow_factor = 1.0
         self.slow_left = 0
         self.probe_corrupt_left = 0
+        self.probe_breaches = 0  # consecutive failed health probes
         self.last_progress = 0.0  # fleet clock of the last completed step
         self.reported: set[int] = set()  # rids whose engine result was collected
 
@@ -254,6 +273,14 @@ class Replica:
         ]
         return out
 
+    def mid_repair(self) -> bool:
+        """The replica's scrubber has found faults it hasn't repaired yet."""
+        return (
+            self.pool is not None
+            and self.pool.integrity is not None
+            and self.pool.integrity.pending_faults() > 0
+        )
+
     def score(self, fcfg: FleetConfig) -> float:
         """Placement cost — smaller attracts more work."""
         cost = fcfg.w_queue * self.backlog() + fcfg.w_straggler * self.marks
@@ -266,6 +293,10 @@ class Replica:
                     self.pool.wear.size, 1
                 )
                 cost += fcfg.w_fault * frac
+            if self.pool.integrity is not None:
+                # scrub findings: every pending (detected, unrepaired) fault
+                # makes this replica less attractive until repair converges
+                cost += fcfg.w_scrub * self.pool.integrity.pending_faults()
         return cost
 
 
@@ -360,7 +391,7 @@ class Fleet:
             "placements": 0, "retries": 0, "failovers": 0, "restarts": 0,
             "hedges": 0, "cancels": 0, "completed": 0, "timeouts": 0,
             "crashes": 0, "stalls": 0, "slows": 0, "kills": 0, "drains": 0,
-            "restores": 0, "probes": 0, "probe_failures": 0,
+            "restores": 0, "probes": 0, "probe_failures": 0, "storms": 0,
         }
 
     # -- admission -----------------------------------------------------------
@@ -416,7 +447,10 @@ class Fleet:
         ]
         if not cands:
             return None
-        return min(cands, key=lambda r: (r.score(self.fcfg), r.id))
+        # route around replicas mid-repair (scrubber has pending faults) as
+        # long as a healthy candidate exists; fall back rather than wedge
+        healthy = [r for r in cands if not r.mid_repair()]
+        return min(healthy or cands, key=lambda r: (r.score(self.fcfg), r.id))
 
     def _place(self, now: float) -> None:
         """Drain the fleet queue onto the cheapest live replicas, honouring
@@ -582,7 +616,14 @@ class Fleet:
                 kl = self.monitor.probe(r.engine.params)
             if kl > self.monitor.hcfg.kl_threshold:
                 self.stats["probe_failures"] += 1
-                self._fail_replica(r, now, lose_state=False, reason="kill")
+                # a kill is expensive and one shadow batch is one noisy
+                # sample: require the monitor's configured run of
+                # consecutive breaches before failing the replica
+                r.probe_breaches += 1
+                if r.probe_breaches >= self.monitor.hcfg.consecutive_breaches:
+                    self._fail_replica(r, now, lose_state=False, reason="kill")
+            else:
+                r.probe_breaches = 0
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -645,6 +686,7 @@ class Fleet:
         r.marks = 0
         r.stall_until = 0.0
         r.slow_factor, r.slow_left = 1.0, 0
+        r.probe_breaches = 0
         r.last_progress = now
         r.reported = set()
         r.straggler.reset_ewma()
@@ -666,6 +708,14 @@ class Fleet:
                 self.stats["slows"] += 1
             elif ev.kind == "corrupt_probe":
                 r.probe_corrupt_left += ev.steps
+            elif ev.kind == "storm":
+                if r.pool is not None and r.pool.integrity is not None:
+                    # deterministic per (replica, step): traces replay exactly
+                    r.pool.integrity.storm(
+                        jax.random.PRNGKey(1_000_003 * r.id + ev.at_step),
+                        corrupt_rate=ev.corrupt, stuck_rate=ev.stuck,
+                    )
+                    self.stats["storms"] += 1
 
     def step(self, now: float) -> bool:
         """One fleet cycle: chaos → queue expiry → placement → per-replica

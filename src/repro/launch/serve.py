@@ -226,9 +226,34 @@ def main() -> None:
         help="fraction of crossbars with 8x the stuck-at rate (the "
              "heterogeneous-yield setting 'fault' leveling remaps around)",
     )
+    ap.add_argument(
+        "--scrub", action="store_true",
+        help="enable the online integrity layer (core/integrity.py): tile "
+             "checksums + spare columns registered at program() time, with a "
+             "scrub/repair summary in the report",
+    )
+    ap.add_argument(
+        "--scrub-tiles", type=int, default=64,
+        help="tile-verification budget per scrub round (bounds scrub latency)",
+    )
+    ap.add_argument(
+        "--spare-cols", type=int, default=2,
+        help="clean spare column planes per section (remap targets for hard "
+             "stuck-at faults found by the scrubber)",
+    )
+    ap.add_argument(
+        "--scrub-storm", type=float, default=0.0,
+        help="after deployment, corrupt stored bits at this rate (plus 1/10th "
+             "of it as new hard stuck cells), scrub to convergence, and report "
+             "repair cost vs a full reprogram of the affected tensors",
+    )
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if (args.scrub or args.scrub_storm > 0.0) and not args.cim:
+        ap.error("--scrub/--scrub-storm apply to crossbar-deployed weights; add --cim")
+    if args.scrub_storm > 0.0 and not args.scrub:
+        ap.error("--scrub-storm needs the integrity layer; add --scrub")
     if args.codec != "raw":
         if not args.cim:
             ap.error("--codec applies to crossbar-deployed weights; add --cim")
@@ -255,6 +280,12 @@ def main() -> None:
             codec=args.codec,
         )
         pool = CrossbarPool(spec, planner_cfg.crossbars, leveling=args.pool_leveling)
+        if args.scrub:
+            from repro.core.integrity import IntegrityConfig
+
+            pool.enable_integrity(IntegrityConfig(
+                spare_cols=args.spare_cols, scrub_tiles=args.scrub_tiles,
+            ))
         if args.fault_rate > 0.0:
             from repro.core import nonideal
 
@@ -290,6 +321,29 @@ def main() -> None:
               f"over {stats.tensors_seen} tensors")
         print(f"endurance horizon: ~{horizon:.3g} such deployments "
               f"@ {args.endurance:.0e} writes/cell ({args.pool_leveling} leveling)")
+        if args.scrub:
+            mgr = pool.integrity
+            s = mgr.summary()
+            print(f"integrity: {s['tensors']} tensors registered, {s['tiles']} "
+                  f"checksum tiles, {s['spare_cols']} spare cols/section"
+                  + (" + parity" if s["parity_col"] else ""))
+            if args.scrub_storm > 0.0:
+                st = mgr.storm(
+                    jax.random.PRNGKey(args.seed + 1),
+                    corrupt_rate=args.scrub_storm,
+                    stuck_rate=args.scrub_storm / 10,
+                )
+                rep = mgr.scrub_until_clean()
+                full = mgr.transitions_full_affected()
+                ratio = rep.repair_transitions / max(full, 1)
+                print(f"storm: {st['corrupted_bits']} bits corrupted, "
+                      f"{st['new_stuck_cells']} new stuck cells -> "
+                      f"{rep.detections} detections, {rep.rewrites} rewrites, "
+                      f"{rep.remaps} remaps, {rep.migrations} migrations, "
+                      f"{rep.tolerated} tolerated")
+                print(f"repair cost: {rep.repair_transitions} transitions vs "
+                      f"{full} full reprogram ({ratio:.4f}x); reads restored: "
+                      f"{mgr.verify_all()}")
 
 
 if __name__ == "__main__":

@@ -19,7 +19,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch
-from repro.launch.engine import EngineConfig, HealthMonitor, Request
+from repro.launch.engine import EngineConfig, HealthConfig, HealthMonitor, Request
 from repro.launch.fleet import (
     ChaosEvent,
     FaultInjector,
@@ -352,6 +352,100 @@ def test_corrupt_probe_kills_healthy_replica_fleet_recovers(gemma):
     assert fleet.stats["probe_failures"] >= 1
     assert fleet.replicas[0].state == "dead"
     assert fleet.stats["probes"] >= 2  # healthy replicas kept probing clean
+
+
+def test_transient_probe_failure_needs_consecutive_breaches(gemma):
+    """Regression: with ``consecutive_breaches=2`` a single corrupted health
+    probe is treated as transient — the replica records the breach but stays
+    live, and the next clean probe resets the streak."""
+    cfg, params = gemma
+    batch = {"tokens": jnp.asarray(
+        jax.random.randint(jax.random.PRNGKey(9), (1, 8), 0, cfg.vocab_size))}
+    monitor = HealthMonitor(cfg, params, batch,
+                            HealthConfig(consecutive_breaches=2))
+    inj = FaultInjector()
+    inj.corrupt_probe(0, at_step=1, probes=1)
+    fleet = Fleet(
+        cfg, params,
+        FleetConfig(n_replicas=2, hedge=False, health_every=1), ECFG,
+        monitor=monitor, injector=inj,
+    )
+    reqs = [_mk(cfg, i, 5, 8, seed=50 + i) for i in range(4)]
+    results = fleet.run(reqs)
+    _assert_parity(cfg, params, fleet, reqs, results)
+    assert fleet.stats["probe_failures"] == 1
+    assert fleet.stats["kills"] == 0
+    assert fleet.replicas[0].state == "live"  # survived the transient
+    assert fleet.replicas[0].probe_breaches <= 1
+    fleet._check_health(fleet._now + 1.0)  # one clean probe resets the streak
+    assert fleet.replicas[0].probe_breaches == 0
+    assert fleet.replicas[0].state == "live"
+
+
+def test_storm_chaos_hits_integrity_pool_and_scrub_recovers(gemma):
+    """Mid-trace fault-storm chaos lands on the replica's integrity-enabled
+    pool; token streams are untouched (chaos never changes tokens) and the
+    scrub/repair loop restores a bit-exact pool read."""
+    from repro.core.integrity import IntegrityConfig
+    from repro.core.planner import CrossbarSpec, PlannerConfig, _analyze_tensor_pool
+    from repro.core.pool import CrossbarPool
+
+    cfg, params = gemma
+    spec = CrossbarSpec(rows=64, cols=8)
+    pool = CrossbarPool(spec, 4, leveling="lpt")
+    mgr = pool.enable_integrity(IntegrityConfig(spare_cols=2))
+    w = jax.random.normal(jax.random.PRNGKey(0), (40, 20)) * 0.05
+    _analyze_tensor_pool(w, spec, PlannerConfig(p_stuck=1.0, crossbars=4),
+                         jax.random.PRNGKey(1), pool, name="t0")
+    inj = FaultInjector()
+    inj.storm(0, at_step=1, corrupt=5e-3, stuck=1e-3)
+    fleet = Fleet(cfg, params, FleetConfig(n_replicas=2, hedge=False), ECFG,
+                  pools=[pool, None], injector=inj)
+    reqs = [_mk(cfg, i, 5, 6, seed=60 + i) for i in range(3)]
+    results = fleet.run(reqs)
+    _assert_parity(cfg, params, fleet, reqs, results)
+    assert fleet.stats["storms"] == 1 and inj.log[0]["kind"] == "storm"
+    assert not mgr.verify_all()  # the storm really corrupted the pool
+    rep = mgr.scrub_until_clean()
+    assert rep.detections > 0 and mgr.verify_all() and mgr.clean
+
+
+def test_mid_repair_replica_routed_around(gemma):
+    """A replica whose scrubber holds pending (detected, budget-deferred)
+    faults is excluded from placement while a healthy peer exists."""
+    from repro.core.integrity import IntegrityConfig, tile_checksums
+    from repro.core.planner import CrossbarSpec, PlannerConfig, _analyze_tensor_pool
+    from repro.core.pool import CrossbarPool
+
+    cfg, params = gemma
+    spec = CrossbarSpec(rows=64, cols=8)
+    pool = CrossbarPool(spec, 4, leveling="lpt")
+    mgr = pool.enable_integrity(IntegrityConfig(spare_cols=4, repair_budget=1))
+    w = jax.random.normal(jax.random.PRNGKey(0), (40, 20)) * 0.05
+    _analyze_tensor_pool(w, spec, PlannerConfig(p_stuck=1.0, crossbars=4),
+                         jax.random.PRNGKey(1), pool, name="t0")
+    rec = mgr.tensors["t0"]
+    for c in (0, 2):  # two hard faults; budget=1 defers the second repair
+        rec.stuck1[0, 0, c] |= 0x80
+        for arr in (rec.expected, rec.reference, rec.stored):
+            arr[0, 0, c] &= 0x7F
+    rec.checksums[0] = tile_checksums(rec.expected[0:1], mgr.cfg.tile_bytes)[0]
+    if rec.parity is not None:
+        rec.parity[0] = np.bitwise_xor.reduce(rec.expected[0], axis=1)
+    mgr.scrub_round()
+    assert mgr.pending_faults() > 0
+    fleet = Fleet(cfg, params, FleetConfig(n_replicas=2, hedge=False), ECFG,
+                  pools=[pool, None])
+    assert fleet.replicas[0].mid_repair()
+    # pending faults price into the score AND exclude the replica outright
+    assert fleet.replicas[0].score(fleet.fcfg) >= fleet.fcfg.w_scrub
+    req = _mk(cfg, 0, 5, 4, seed=7)
+    res = fleet.run([req])
+    assert res[0].replica == 1
+    assert res[0].tokens == _solo(cfg, params, req)
+    # once the scrubber converges the replica is placeable again
+    mgr.scrub_until_clean()
+    assert not fleet.replicas[0].mid_repair()
 
 
 # ---------------------------------------------------------------------------

@@ -176,6 +176,31 @@ def test_health_monitor_kl_and_horizon_triggers(gemma):
     assert ok4 and rec4["horizon"] == pytest.approx(0.5)
 
 
+def test_health_monitor_requires_consecutive_breaches(gemma):
+    """Regression: a single transient probe failure must not trigger the
+    kill/redeploy path when ``consecutive_breaches`` > 1 — only K breaches
+    in a row do, and one healthy probe resets the streak."""
+    cfg, params0, params1 = gemma
+    batch = api.make_batch(cfg, jax.random.PRNGKey(2), 2, 16)
+    mon = HealthMonitor(
+        cfg, params0, batch,
+        HealthConfig(kl_threshold=0.01, consecutive_breaches=2),
+    )
+    ok1, rec1 = mon.check(params1)  # breach #1: transient — no trigger yet
+    assert not ok1 and rec1["breach"] and rec1["breaches"] == 1
+    ok2, rec2 = mon.check(params1)  # breach #2: consecutive — trigger
+    assert ok2 and rec2["breaches"] == 2
+    # a healthy probe resets the streak: the next breach is #1 again
+    ok3, _ = mon.check(params0)
+    assert not ok3 and mon.breaches == 0
+    ok4, rec4 = mon.check(params1)
+    assert not ok4 and rec4["breaches"] == 1
+    assert [r["trigger"] for r in mon.history] == [False, True, False, False]
+
+    with pytest.raises(ValueError):
+        HealthConfig(consecutive_breaches=0)
+
+
 def test_engine_config_validation():
     for bad in (
         dict(max_slots=0),

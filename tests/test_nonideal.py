@@ -20,6 +20,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from hypothesis import given, strategies as st
+
 from repro.configs import get_arch
 from repro.core import bitslice, nonideal, schedule, simulator
 from repro.core.planner import (
@@ -164,6 +166,97 @@ def test_pool_spec_validation():
         CrossbarPool(CrossbarSpec(rows=0, cols=8), 2)
     with pytest.raises(ValueError):
         CrossbarPool(CrossbarSpec(rows=64, cols=-1), 2)
+
+
+@pytest.mark.parametrize(
+    "kwargs, field",
+    [
+        (dict(stuck0=-0.1), "stuck0"),
+        (dict(stuck0=1.5), "stuck0"),
+        (dict(stuck1=2.0), "stuck1"),
+        (dict(hotspot_fraction=-0.01), "hotspot_fraction"),
+        (dict(hotspot_fraction=1.01), "hotspot_fraction"),
+        (dict(drift_sigma=-0.5), "drift_sigma"),
+        (dict(ir_alpha=-1.0), "ir_alpha"),
+        (dict(hotspot_mult=-2.0), "hotspot_mult"),
+    ],
+)
+def test_fault_model_rejects_invalid_rates(kwargs, field):
+    """Construction is the single choke point: a bad rate never reaches
+    pool.inject_faults or perturb_operands, and the error names the field."""
+    with pytest.raises(ValueError, match=field):
+        nonideal.FaultModel(**kwargs)
+
+
+def test_fault_model_accepts_boundary_rates():
+    nonideal.FaultModel(stuck0=0.0, stuck1=1.0, hotspot_fraction=1.0,
+                        drift_sigma=0.0, ir_alpha=0.0, hotspot_mult=0.0)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis; integer strategies → derived float rates)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       sections=st.integers(min_value=1, max_value=12))
+def test_prop_zero_rate_read_is_byte_identity(seed, sections):
+    """Property: all-zero fault rates make the non-ideal read a bitwise
+    identity on arbitrary packed planes."""
+    st_f = nonideal.inject(SPEC, sections, nonideal.FaultModel(),
+                           jax.random.PRNGKey(seed))
+    assert int(jnp.sum(st_f.stuck0)) == 0 and int(jnp.sum(st_f.stuck1)) == 0
+    planes = _random_packed(jax.random.PRNGKey(seed ^ 0x5A5A), sections)
+    out = nonideal.read_packed(
+        planes,
+        st_f.stuck0[:sections].astype(jnp.uint8),
+        st_f.stuck1[:sections].astype(jnp.uint8),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(planes))
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       s0_pm=st.integers(min_value=0, max_value=500),
+       s1_pm=st.integers(min_value=0, max_value=500),
+       hot=st.booleans())
+def test_prop_stuck_masks_disjoint(seed, s0_pm, s1_pm, hot):
+    """Property: across arbitrary rates (permille-derived) and hotspot
+    shapes, no cell is ever both stuck-at-0 and stuck-at-1."""
+    m = nonideal.FaultModel(
+        stuck0=s0_pm / 1000.0, stuck1=s1_pm / 1000.0,
+        hotspot_fraction=0.5 if hot else 0.0,
+        hotspot_mult=8.0 if hot else 1.0,
+    )
+    st_f = nonideal.inject(SPEC, 6, m, jax.random.PRNGKey(seed))
+    assert int(jnp.sum(st_f.stuck0 & st_f.stuck1)) == 0
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       s_pm=st.integers(min_value=1, max_value=60),
+       drift_cs=st.integers(min_value=0, max_value=10),
+       ir_cs=st.integers(min_value=0, max_value=20))
+def test_prop_perturb_operands_deterministic_under_fixed_key(
+        seed, s_pm, drift_cs, ir_cs):
+    """Property: perturb_operands is a pure function of (operands, model,
+    key) — two applications under the same PRNG key compose to identical
+    leaves, and the densified fold agrees between them."""
+    m = nonideal.FaultModel(
+        stuck0=s_pm / 1000.0, stuck1=s_pm / 1000.0,
+        drift_sigma=drift_cs / 100.0, ir_alpha=ir_cs / 100.0,
+    )
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 12)) * 0.05
+    op = simulator.prepare_linear(w, CrossbarSpec(rows=16, cols=8),
+                                  materialize="packed")
+    key = jax.random.PRNGKey(seed)
+    pa = nonideal.perturb_operands(op, m, key)
+    pb = nonideal.perturb_operands(op, m, key)
+    la, lb = jax.tree.leaves(pa), jax.tree.leaves(pb)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(
+        np.asarray(simulator.densify_operands(pa)),
+        np.asarray(simulator.densify_operands(pb)),
+    )
 
 
 # ---------------------------------------------------------------------------
