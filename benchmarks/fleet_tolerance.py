@@ -9,6 +9,11 @@ failures into routing events instead of outages:
     ``--xla_force_host_platform_device_count`` *before* first jax
     initialization, like the dry-run's 512-chip override) — without it the
     replicas share one CPU device and scaling is flat by construction.
+  * **TP scaling** — one replica's pipeline sharded {1, 2, 4}-way over the
+    "model" axis (``parallel/tp.py``): per-replica tok/s vs shard count,
+    with every shard count's token stream checked against solo generation
+    (vmap-emulated on one device; native ``shard_map`` when ``--devices``
+    provides a real mesh).
   * **Kill-one-of-4** — a deterministic :class:`FaultInjector` crash takes
     one replica down mid-trace; the survivors must complete 100% of
     admitted requests with every stream bit-identical to solo
@@ -150,6 +155,45 @@ def run_scaling(cfg, params, *, counts=(1, 2, 4), n_requests=12, seed=0) -> list
     return rows
 
 
+def run_tp_scaling(cfg, params, *, counts=(1, 2, 4), gen_len=16, seed=0) -> list[dict]:
+    """Per-replica tok/s vs tensor-parallel shard count, parity-checked.
+
+    Uses ``tp_generate`` (the lockstep serve.generate twin) so the numbers
+    isolate the TP dispatch overhead from fleet scheduling.  Shards run
+    under native ``shard_map`` when the (emulated) mesh is big enough,
+    else vmap-emulated on one device — recorded per row, since emulated
+    rows measure overhead only, not speedup."""
+    from repro.parallel.tp import plan_tp, tp_generate
+
+    rng = np.random.default_rng(seed)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    )}
+    ref, _ = generate(cfg, params, batch, gen_len=gen_len)
+    ref = np.asarray(ref)
+    rows = []
+    for n in counts:
+        plan = plan_tp(cfg, n)
+        devs = list(jax.devices()[:n]) if jax.device_count() >= n > 1 else None
+        toks, tok_s = tp_generate(cfg, params, batch, n=n, gen_len=gen_len,
+                                  plan=plan, devices=devs, repeats=2)
+        row = {
+            "n_shards": n,
+            "native_mesh": devs is not None,
+            "attn_sharded": plan.attn,
+            "mlp_sharded": plan.mlp,
+            "tok_s_per_replica": float(tok_s),
+            "token_parity": bool(np.array_equal(np.asarray(toks), ref)),
+        }
+        rows.append(row)
+        print(f"  {n} shard(s) [{'mesh' if row['native_mesh'] else 'vmap'}]: "
+              f"{row['tok_s_per_replica']:8.1f} tok/s   "
+              f"attn={'TP' if plan.attn else 'rep'} "
+              f"mlp={'TP' if plan.mlp else 'rep'}   "
+              f"parity {row['token_parity']}")
+    return rows
+
+
 def run_kill_trace(cfg, params, *, n_replicas=4, n_requests=16, seed=1) -> dict:
     """Crash one replica mid-trace (host state lost on odd seeds): the
     survivors must complete everything admitted, streams exact."""
@@ -210,6 +254,9 @@ def run(arch: str = "gemma-2b", *, reduced: bool = True,
     scaling = run_scaling(cfg, params, counts=counts,
                           n_requests=max(8, n_requests // 2), seed=seed)
 
+    banner("TP scaling — per-replica tok/s vs shard count")
+    tp_scaling = run_tp_scaling(cfg, params, counts=counts, seed=seed)
+
     banner("Chaos: kill one replica mid-trace")
     kill = run_kill_trace(cfg, params, n_replicas=max(counts),
                           n_requests=n_requests, seed=seed + 1)
@@ -230,6 +277,7 @@ def run(arch: str = "gemma-2b", *, reduced: bool = True,
         "engine": {"max_slots": ECFG.max_slots, "page_size": ECFG.page_size,
                    "max_seq_len": ECFG.max_seq_len, "fused": ECFG.fused},
         "scaling": scaling,
+        "tp_scaling": tp_scaling,
         "kill_trace": kill,
         "stall_trace": stall,
         "admission": admission,
@@ -292,6 +340,16 @@ def main() -> None:
             )
         if any(r["tok_s"] <= 0 for r in res["scaling"]):
             failures.append("scaling: non-positive tok/s recorded")
+        for r in res["tp_scaling"]:
+            if not r["token_parity"]:
+                failures.append(
+                    f"tp_scaling: {r['n_shards']}-shard token stream "
+                    f"diverged from solo generation"
+                )
+            if r["tok_s_per_replica"] <= 0:
+                failures.append(
+                    f"tp_scaling: non-positive tok/s at {r['n_shards']} shards"
+                )
         if failures:
             for f in failures:
                 print(f"  CHECK FAILED: {f}", file=sys.stderr)

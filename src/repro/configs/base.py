@@ -86,6 +86,16 @@ class ArchConfig:
     n_meta_tokens: int = 0
     # sub-quadratic? (drives long_500k applicability)
     subquadratic: bool = False
+    # --- tensor parallelism (parallel/tp.py) ---
+    # When tp_axis is set, model code runs as ONE shard of a tensor-parallel
+    # group: tp_attn means q/k/v are column-parallel and wo row-parallel
+    # (psum over tp_axis after wo), tp_mlp means wi_gate/wi_up column-parallel
+    # and mlp wo row-parallel (psum after the MLP).  The *local* head/ff
+    # counts are already divided down in this config (see tp.local_config);
+    # the flags only gate where the cross-shard reductions happen.
+    tp_axis: Optional[str] = None
+    tp_attn: bool = False
+    tp_mlp: bool = False
 
     @property
     def resolved_head_dim(self) -> int:

@@ -63,7 +63,9 @@ def packed_operands(
     ``planes_packed`` uint8[..., cols, ceil(K/8), N] (plane 0 = LSB, K packed
     MSB-first per byte) and ``sign_packed`` uint8[..., ceil(K/8), N] (bit 1 =
     negative) — see ``bitslice.pack_linear_planes``.  Array-only dict; leading
-    dims as in :func:`int8_plane_operands`.
+    dims as in :func:`int8_plane_operands`.  Tensor-parallel shards are built
+    by slicing this dict with :func:`shard_operands` (column- or row-parallel)
+    — exact, no repacking — so dense and packed layouts agree by construction.
     """
     lead = q.shape[:-2]
     return {
@@ -128,6 +130,75 @@ def operands_from_dense(
 def is_cim_operands(w) -> bool:
     """True if ``w`` is a crossbar operand dict rather than a dense array."""
     return isinstance(w, dict) and ("planes_packed" in w or "splanes" in w)
+
+
+def shard_operands(op: dict[str, jax.Array], *, axis: int, index: int, n: int) -> dict[str, jax.Array]:
+    """Slice a crossbar operand dict along one logical weight axis — shard
+    ``index`` of ``n`` for a tensor-parallel layout (column-parallel slices
+    ``axis=-1``/N, row-parallel slices ``axis=-2``/K).
+
+    Exactness contract: ``densify_operands(shard_operands(op, ...)) ==
+    densify_operands(op)[..., slice]`` byte-for-byte — no repacking, no
+    requantization.  The bit planes store K packed 8-per-byte, so a K slice
+    must land on byte boundaries: ``(K // n) % 8 == 0`` is required (the TP
+    planner, ``parallel.tp.plan_tp``, only emits packed K-sharding when this
+    holds and degrades to replication otherwise).  Per-field rules:
+
+    * ``planes_packed`` / ``stuck0_packed`` / ``stuck1_packed``
+      uint8[..., cols, K8, N] and ``sign_packed`` uint8[..., K8, N]: slice N
+      on the last axis, or bytes ``k0//8:k1//8`` of the packed-K axis.
+    * ``kdim`` [..., K, 0]: the zero-width true-K marker — slice its K axis
+      on K shards so consumers recover the shard-local contraction length.
+    * ``plane_ids`` [..., cols]: the col_perm plane order is a property of
+      the plane AXIS, untouched by either slicing — passes through.
+    * ``plane_tile_nz`` [..., cols, ceil(K8/16)]: flags are reduced over N,
+      so an N slice keeps them (conservative: a tile zero only in this shard
+      still reads as nonzero — a missed skip, never a wrong read); a K slice
+      realigns the 16-byte tile grid, so the flags are DROPPED (they are a
+      kernel skip hint, absence just disables skipping).
+    * ``row_atten`` [..., K]: IR-drop folds into activations per input row —
+      slice on K shards, replicate on N shards.
+    * ``scale`` / ``offset`` / ``plane_gain``: per-tensor (or per-plane)
+      scalars — replicated.
+
+    ``splanes`` int8[..., cols, K, N] dicts shard too (no byte constraint).
+    """
+    if axis not in (-1, -2):
+        raise ValueError(f"axis must be -1 (N) or -2 (K), got {axis}")
+    if not 0 <= index < n:
+        raise ValueError(f"shard index {index} outside [0, {n})")
+    packed = "planes_packed" in op
+    planes = op["planes_packed"] if packed else op["splanes"]
+    if axis == -1:
+        dim = planes.shape[-1]
+    else:
+        dim = op["kdim"].shape[-2] if packed else planes.shape[-2]
+    if dim % n:
+        raise ValueError(f"axis {axis} extent {dim} not divisible by {n} shards")
+    lo, hi = index * (dim // n), (index + 1) * (dim // n)
+    if packed and axis == -2 and (lo % 8 or hi % 8):
+        raise ValueError(
+            f"packed K shard [{lo}:{hi}) not byte-aligned (K//n must be % 8)"
+        )
+    out = {}
+    for name, arr in op.items():
+        if name in ("scale", "offset", "plane_gain", "plane_ids"):
+            out[name] = arr
+        elif name == "plane_tile_nz":
+            if axis == -1:
+                out[name] = arr  # N-reduced flags: conservative, still honest
+        elif name == "row_atten":
+            out[name] = arr[..., lo:hi] if axis == -2 else arr
+        elif name == "kdim":
+            out[name] = arr[..., lo:hi, :] if axis == -2 else arr
+        elif axis == -1:
+            out[name] = arr[..., lo:hi]
+        elif name == "sign_packed":
+            out[name] = arr[..., lo // 8 : hi // 8, :]
+        else:  # planes_packed / stuck0_packed / stuck1_packed / splanes
+            sl = (lo // 8, hi // 8) if packed else (lo, hi)
+            out[name] = arr[..., sl[0] : sl[1], :]
+    return out
 
 
 def densify_operands(op: dict[str, jax.Array]) -> jax.Array:

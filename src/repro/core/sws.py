@@ -82,6 +82,34 @@ def _host_stable_argsort(nonneg: bool, with_inverse: bool):
     return cb
 
 
+def _usable_cores() -> int:
+    """Host cores actually available to THIS process.
+
+    ``sched_getaffinity`` respects container/cgroup CPU masks where
+    ``os.cpu_count()`` reports the whole machine; a process pinned to one
+    core must take the device sort (see :func:`_use_host_sort`) no matter
+    how many cores the box has.
+    """
+    try:
+        return len(os.sched_getaffinity(0)) or 1
+    except (AttributeError, OSError):  # non-Linux
+        return os.cpu_count() or 1
+
+
+def _use_host_sort() -> bool:
+    """Route to the numpy host-callback sort?
+
+    Keys on the CPU backend AND actual execution threads (>1 usable core).
+    Deliberately independent of ``jax.device_count()``: a host-emulated
+    device mesh (``--xla_force_host_platform_device_count=N``) multiplies
+    *devices*, not cores — N emulated devices on one core still deadlock a
+    pending pure_callback exactly like the plain single-core case, and
+    conversely one real device on many cores is safe.  Pinned by the
+    regression test under the emulated mesh (tests/test_sws.py).
+    """
+    return jax.default_backend() == "cpu" and _usable_cores() > 1
+
+
 def stable_argsort(
     keys: jax.Array, *, with_inverse: bool = False, nonneg: bool = False
 ) -> jax.Array:
@@ -100,9 +128,12 @@ def stable_argsort(
     one execution thread, a pending host callback inside one dispatch can
     deadlock against a blocking wait on another (observed as a futex hang
     in the planner's pool path), and the callback's throughput advantage
-    needs a second core anyway.
+    needs a second core anyway.  The routing guard (:func:`_use_host_sort`)
+    counts usable HOST cores, never ``jax.device_count()`` — emulated
+    host-platform devices add execution streams without adding the second
+    core the callback needs.
     """
-    if jax.default_backend() == "cpu" and (os.cpu_count() or 1) > 1:
+    if _use_host_sort():
         out_shapes = (jax.ShapeDtypeStruct(keys.shape, jnp.int32),) * (
             2 if with_inverse else 1
         )

@@ -58,12 +58,14 @@ from collections import deque
 from typing import Any, Callable, Optional, Union
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.launch import paged_cache, steps
 from repro.launch.paged_cache import PagedCacheConfig, PagedKVCache
 from repro.models import api
+from repro.parallel import tp as tp_mod
 
 
 @dataclasses.dataclass
@@ -319,20 +321,45 @@ class Engine:
     """
 
     def __init__(self, cfg: ArchConfig, params: Any, ecfg: EngineConfig = EngineConfig(),
-                 *, dispatch_from: Optional["Engine"] = None):
+                 *, dispatch_from: Optional["Engine"] = None, tp: int = 1,
+                 tp_devices: Optional[list] = None):
         if not api.supports_paged(cfg):
             raise NotImplementedError(
                 f"{cfg.name}: the paged engine serves pure-attention decoder stacks"
             )
         self.cfg = cfg
         self.ecfg = ecfg
+        # tensor parallelism: tp > 1 splits this replica over a "model" axis
+        # (parallel/tp.py) — params are sharded + stacked on a leading shard
+        # axis, the paged KV pools partition on the head axis (one shared
+        # slot schedule / block table), and every dispatch runs the same
+        # step functions SPMD (vmap-emulated on one device, or shard_map
+        # over ``tp_devices`` when a real N-device group is supplied).  The
+        # host scheduler below is untouched: wrapped steps return tokens /
+        # keys reduced to shard 0 (they are replicated across shards).
+        if tp_devices is not None and tp == 1:
+            tp = len(tp_devices)
+        if tp > 1:
+            # plan against packed constraints even for dense trees: a hot
+            # redeploy may swap a packed materialization in later, and the
+            # shard layout must not change across epochs
+            self._tp = tp_mod.plan_tp(cfg, tp, packed=True)
+            devs = tuple(tp_devices) if tp_devices is not None else None
+            if devs is not None and len(set(devs)) != tp:
+                devs = None  # repeated devices = 1-device emulation -> vmap
+            self._tp_devices = devs
+            self.cfg_local = tp_mod.local_config(cfg, self._tp)
+        else:
+            self._tp = None
+            self._tp_devices = None
+            self.cfg_local = cfg
         # serving params are versioned by *epoch* so a hot redeploy
         # (``hot_swap``) can swap in a new tree between dispatches while
         # every in-flight request keeps computing on the tree it was
         # admitted under — its whole token stream sees ONE param version,
         # which is what makes streams bit-identical across a swap
         self.params_epoch = 0
-        self._params: dict[int, Any] = {0: steps.prepare_serving_params(params)}
+        self._params: dict[int, Any] = {0: self._prepare(params)}
 
         # a slot's dispatches may address up to a fused window (one padded
         # prefill chunk + one decode quantum) past max_seq_len; writes beyond
@@ -348,7 +375,14 @@ class Engine:
             max_pages=max_pages,
         )
         self.kv = PagedKVCache(self.pcfg)
-        self.pools = api.init_paged_pools(cfg, self.pcfg.num_tokens)
+        # per-shard pools: each shard's wk/wv slice only produces its own
+        # n_kv_heads/N heads, so the pool partition is the local-config pool
+        # stacked on a leading shard axis — ONE block table / slot schedule
+        self.pools = api.init_paged_pools(self.cfg_local, self.pcfg.num_tokens)
+        if self._tp is not None:
+            self.pools = jax.tree.map(
+                lambda x: jnp.zeros((self._tp.n, *x.shape), x.dtype), self.pools
+            )
 
         # two compiled quantum lengths: the full quantum for steady decoding
         # and a short one for when most live rows sit near retirement —
@@ -365,11 +399,13 @@ class Engine:
                     or src.ecfg.page_size != ecfg.page_size
                     or src.ecfg.decode_quantum != ecfg.decode_quantum
                     or src.ecfg.prefill_chunk != ecfg.prefill_chunk
-                    or bool(src._fused_steps) != ecfg.fused):
+                    or bool(src._fused_steps) != ecfg.fused
+                    or src._tp != self._tp
+                    or src._tp_devices != self._tp_devices):
                 raise ValueError(
                     "dispatch_from requires an engine with the same model "
-                    "config and dispatch shapes (page_size, decode_quantum, "
-                    "prefill_chunk, fused)"
+                    "config, dispatch shapes (page_size, decode_quantum, "
+                    "prefill_chunk, fused), and tensor-parallel layout"
                 )
             self._decode_loops = src._decode_loops
             self._prefill_step = src._prefill_step
@@ -378,18 +414,27 @@ class Engine:
             donate = steps.cache_donation()
             self._decode_loops = {
                 q: jax.jit(
-                    steps.make_paged_decode_loop(cfg, q, ecfg.page_size),
+                    self._tp_wrap(
+                        steps.make_paged_decode_loop(self.cfg_local, q, ecfg.page_size),
+                        (True, True, False, False, False), (False, True, False),
+                    ),
                     donate_argnums=donate,
                 )
                 for q in self._quanta
             }
             self._prefill_step = jax.jit(
-                steps.make_prefill_chunk_step(cfg, ecfg.page_size),
+                self._tp_wrap(
+                    steps.make_prefill_chunk_step(self.cfg_local, ecfg.page_size),
+                    (True, True, False, False, False, False), (False, False, True),
+                ),
                 donate_argnums=donate,
             )
             self._fused_steps = {
                 q: jax.jit(
-                    steps.make_fused_step(cfg, q, ecfg.page_size),
+                    self._tp_wrap(
+                        steps.make_fused_step(self.cfg_local, q, ecfg.page_size),
+                        (True, True) + (False,) * 8, (False, False, False, True),
+                    ),
                     donate_argnums=donate,
                 )
                 for q in self._quanta
@@ -428,6 +473,20 @@ class Engine:
         self._scrub_every = 1
         self._scrub_cycles = 0
 
+    # -- tensor parallelism -------------------------------------------------
+
+    def _prepare(self, params: Any) -> Any:
+        """Serving-ready tree: prepared solo, or sharded+stacked under TP."""
+        if self._tp is None:
+            return steps.prepare_serving_params(params)
+        return tp_mod.prepare_tp_params(params, self._tp)
+
+    def _tp_wrap(self, fn, stacked_in, stacked_out):
+        """SPMD-wrap a step under TP (identity when unsharded)."""
+        if self._tp is None:
+            return fn
+        return tp_mod.tp_step(fn, self._tp, stacked_in, stacked_out, self._tp_devices)
+
     # -- public API ---------------------------------------------------------
 
     @property
@@ -460,7 +519,7 @@ class Engine:
                 self.stats["swap_rollbacks"] += 1
                 return False
         self.params_epoch += 1
-        self._params[self.params_epoch] = steps.prepare_serving_params(params)
+        self._params[self.params_epoch] = self._prepare(params)
         self.stats["hot_swaps"] += 1
         return True
 

@@ -57,9 +57,12 @@ contract in CI: kill-one-of-4 and stall traces must complete 100% of
 admitted requests with every completed stream bit-identical to solo
 generation.
 
-Replicas are data-parallel over ``launch.mesh.replica_devices`` (the
+Replicas are data-parallel over ``launch.mesh.replica_submeshes`` (the
 "data" axis; CPU development emulates the mesh with
-``--xla_force_host_platform_device_count``).  All replicas serve the same
+``--xla_force_host_platform_device_count``).  With
+``FleetConfig.shards_per_replica > 1`` each replica is additionally
+tensor-parallel over its own contiguous "model"-axis device group
+(``parallel/tp.py``) — shards-of-meshes.  All replicas serve the same
 param tree — placement-, failover-, and hedge-routing never change any
 request's tokens, only *where* and *whether* they are computed.
 """
@@ -82,7 +85,7 @@ from repro.launch.engine import (
     Request,
     ResumeState,
 )
-from repro.launch.mesh import replica_devices
+from repro.launch.mesh import replica_submeshes
 from repro.runtime.fault import FaultPolicy, StragglerPolicy, backoff_delay
 
 LIVE, DRAINING, DOWN, DEAD = "live", "draining", "down", "dead"
@@ -104,6 +107,11 @@ class FleetConfig:
     """
 
     n_replicas: int = 2
+    # tensor-parallel width of each replica: every replica's engine runs
+    # its model sharded this many ways over a contiguous "model"-axis
+    # device group (launch.mesh.replica_submeshes).  1 = the plain
+    # single-device engine.
+    shards_per_replica: int = 1
     max_queue: int = 64
     degrade_backlog: Optional[int] = None
     degrade_cap: int = 8
@@ -128,6 +136,8 @@ class FleetConfig:
     def __post_init__(self):
         if self.n_replicas < 1:
             raise ValueError("need at least one replica")
+        if self.shards_per_replica < 1:
+            raise ValueError("need at least one shard per replica")
         if self.max_queue < 1:
             raise ValueError("max_queue must be positive")
         if self.failover not in ("resume", "restart"):
@@ -229,15 +239,20 @@ class Replica:
     """One engine replica plus the host-side signals the router scores."""
 
     def __init__(self, rid: int, cfg: ArchConfig, params: Any, ecfg: EngineConfig,
-                 *, device=None, pool=None, fcfg: FleetConfig,
+                 *, devices=None, pool=None, fcfg: FleetConfig,
                  dispatch_from: Optional[Engine] = None):
         self.id = rid
-        self.device = device
+        # the replica's contiguous "model"-axis device group; devices[0]
+        # hosts the engine's host-side state and any non-sharded compute
+        self.devices = list(devices) if devices else None
+        self.device = self.devices[0] if self.devices else None
         self.pool = pool  # Optional[CrossbarPool]: wear + fault signals
         self.state = LIVE
-        if device is not None:
-            params = jax.device_put(params, device)
-        self.engine = Engine(cfg, params, ecfg, dispatch_from=dispatch_from)
+        if self.device is not None:
+            params = jax.device_put(params, self.device)
+        tp = fcfg.shards_per_replica
+        self.engine = Engine(cfg, params, ecfg, dispatch_from=dispatch_from,
+                             tp=tp, tp_devices=self.devices if tp > 1 else None)
         self.straggler = StragglerPolicy(
             tolerance=fcfg.straggler_tolerance, warmup_steps=2,
             demote_after=max(fcfg.hedge_after_marks, 1),
@@ -363,12 +378,17 @@ class Fleet:
         self.injector = injector
         if pools is not None and len(pools) != fcfg.n_replicas:
             raise ValueError("pools must have one entry per replica")
-        devices = devices or replica_devices(fcfg.n_replicas)
+        if devices is None:
+            groups = replica_submeshes(fcfg.n_replicas, fcfg.shards_per_replica)
+        else:
+            # accept a flat device list (one device per replica, the PR 8
+            # signature) or an explicit list of per-replica device groups
+            groups = [d if isinstance(d, (list, tuple)) else [d] for d in devices]
         self.replicas: list[Replica] = []
         template: Optional[Engine] = None
         for i in range(fcfg.n_replicas):
             r = Replica(
-                i, cfg, params, ecfg, device=devices[i % len(devices)],
+                i, cfg, params, ecfg, devices=groups[i % len(groups)],
                 pool=pools[i] if pools else None, fcfg=fcfg,
                 dispatch_from=template,
             )
@@ -679,8 +699,10 @@ class Fleet:
         params = self.params
         if r.device is not None:
             params = jax.device_put(params, r.device)
+        tp = self.fcfg.shards_per_replica
         r.engine = Engine(self.cfg, params, self.ecfg,
-                          dispatch_from=self._dispatch_template)
+                          dispatch_from=self._dispatch_template,
+                          tp=tp, tp_devices=r.devices if tp > 1 else None)
         r.state = LIVE
         r.steps = 0
         r.marks = 0

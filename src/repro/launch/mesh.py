@@ -7,6 +7,8 @@ initialization, while smoke tests and benchmarks must see 1 device.
 """
 from __future__ import annotations
 
+import warnings
+
 import jax
 
 
@@ -37,5 +39,56 @@ def replica_devices(n: int) -> list[jax.Device]:
     the benchmark's ``--devices`` flag does this pre-import)."""
     if n < 1:
         raise ValueError(f"need at least one replica, got {n}")
+    return [g[0] for g in replica_submeshes(n, 1)]
+
+
+def replica_submeshes(
+    n_replicas: int, shards_per_replica: int = 1
+) -> list[list[jax.Device]]:
+    """Carve the device list into per-replica "model"-axis submeshes.
+
+    Replica ``i`` owns the ``shards_per_replica`` contiguous devices starting
+    at ``i * shards_per_replica`` — contiguity is what keeps a tensor-
+    parallel psum on intra-group links.  Assignment rules:
+
+    * ``shards_per_replica == 1`` — the PR 8 behavior: with more replicas
+      than devices the assignment wraps silently (replicas share a device;
+      how single-CPU tests run an N-replica fleet).
+    * ``shards_per_replica > 1`` and one physical device — every replica
+      gets the single device repeated (pure emulation: the TP layer runs
+      its shards under ``vmap`` on that device), with a warning so a
+      misconfigured production launch is loud.
+    * ``shards_per_replica > 1`` on a real mesh — a replica whose group
+      would straddle the device-list end non-contiguously (wrap-around
+      mixing the first and last devices of the "model" axis) is REJECTED:
+      the wrapped group's psum would hop the mesh seam every layer.  Grow
+      the emulated mesh (``--xla_force_host_platform_device_count``) or
+      drop the replica count.
+    """
+    if n_replicas < 1:
+        raise ValueError(f"need at least one replica, got {n_replicas}")
+    if shards_per_replica < 1:
+        raise ValueError(f"need at least one shard per replica, got {shards_per_replica}")
     devs = jax.devices()
-    return [devs[i % len(devs)] for i in range(n)]
+    d = len(devs)
+    if shards_per_replica == 1:
+        return [[devs[i % d]] for i in range(n_replicas)]
+    if d == 1:
+        warnings.warn(
+            f"{shards_per_replica}-way tensor parallelism on a single device: "
+            "shards will be vmap-emulated, not distributed",
+            stacklevel=2,
+        )
+        return [[devs[0]] * shards_per_replica for _ in range(n_replicas)]
+    groups = []
+    for i in range(n_replicas):
+        start = (i * shards_per_replica) % d
+        if start + shards_per_replica > d:
+            raise ValueError(
+                f"replica {i}'s {shards_per_replica}-device submesh would wrap "
+                f"non-contiguously around the {d}-device mesh (start {start}); "
+                f"the model axis must stay contiguous — use "
+                f"n_replicas * shards_per_replica <= {d} (or a multiple)"
+            )
+        groups.append(list(devs[start : start + shards_per_replica]))
+    return groups

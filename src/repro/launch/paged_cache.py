@@ -167,13 +167,14 @@ def swap_out(pools, kv: "PagedKVCache", slot: int, n_tokens: int):
     to host memory (numpy), so the caller can ``release`` the slot's blocks.
 
     ``pools`` is the engine-owned device pool pytree (one token-major leaf
-    per segment, cell axis second: (layers, T, ...)); the snapshot pytree
-    mirrors it with the cell axis re-indexed to logical order.  The
-    transfer is forced synchronously (``np.asarray``) so later donated
-    dispatches cannot invalidate the buffers mid-read.
+    per segment, cell axis at -3: (layers, T, Hkv, hd), with any extra
+    leading axes — e.g. a tensor-parallel shard axis — passing through);
+    the snapshot pytree mirrors it with the cell axis re-indexed to logical
+    order.  The transfer is forced synchronously (``np.asarray``) so later
+    donated dispatches cannot invalidate the buffers mid-read.
     """
     cells = kv.slot_cells(slot, n_tokens)
-    return jax.tree.map(lambda a: np.asarray(a[:, cells]), pools)
+    return jax.tree.map(lambda a: np.asarray(a[..., cells, :, :]), pools)
 
 
 _swap_scatter = None  # lazily jitted so the backend is known at first use
@@ -199,18 +200,19 @@ def swap_in(pools, kv: "PagedKVCache", slot: int, snapshot):
         donate = (0,) if jax.default_backend() != "cpu" else ()
         _swap_scatter = jax.jit(
             lambda p, cells, s: jax.tree.map(
-                lambda a, sl: a.at[:, cells].set(sl), p, s
+                lambda a, sl: a.at[..., cells, :, :].set(sl), p, s
             ),
             donate_argnums=donate,
         )
-    n_tokens = next(iter(jax.tree.leaves(snapshot))).shape[1]
+    n_tokens = next(iter(jax.tree.leaves(snapshot))).shape[-3]
     cells = kv.slot_cells(slot, n_tokens)
     nb = 1 << max(0, n_tokens - 1).bit_length()
     if pad := nb - n_tokens:
         cells = np.concatenate([cells, np.zeros(pad, np.int32)])  # dummy cells
         snapshot = jax.tree.map(
             lambda s: np.concatenate(
-                [s, np.zeros((s.shape[0], pad) + s.shape[2:], s.dtype)], axis=1
+                [s, np.zeros(s.shape[:-3] + (pad,) + s.shape[-2:], s.dtype)],
+                axis=-3,
             ),
             snapshot,
         )

@@ -26,6 +26,24 @@ from repro.models.layers import Params
 
 
 # ---------------------------------------------------------------------------
+# Tensor parallelism: cross-shard reduction points
+#
+# Under a TP plan (parallel/tp.py) this module runs as ONE shard: q/k/v and
+# wi_gate/wi_up are column-parallel (cfg already holds the shard-local head /
+# d_ff counts), wo is row-parallel, so each shard's wo output is a PARTIAL
+# sum over its slice of the contraction axis.  The reduction must happen
+# before the residual add (residual + norms are replicated), which is why the
+# psum sits here at the block call sites and not inside layers.linear.
+# ---------------------------------------------------------------------------
+
+def _tp_reduce(y: jax.Array, cfg: ArchConfig, enabled: bool) -> jax.Array:
+    """psum partial row-parallel outputs over cfg.tp_axis (no-op untagged)."""
+    if enabled and cfg.tp_axis is not None:
+        return jax.lax.psum(y, cfg.tp_axis)
+    return y
+
+
+# ---------------------------------------------------------------------------
 # GQA/MQA attention sub-layer
 # ---------------------------------------------------------------------------
 
@@ -71,7 +89,7 @@ def attention_fwd(
     q, k, v = _qkv(p, cfg, x, positions)
     out = attention(q, k, v, kind=kind, window=window, q_offset=q_offset)
     out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
-    y = layers.linear(p["wo"], out, x.dtype)
+    y = _tp_reduce(layers.linear(p["wo"], out, x.dtype), cfg, cfg.tp_attn)
     cache = {"k": k, "v": v} if return_cache else None
     return y, cache
 
@@ -102,7 +120,7 @@ def attention_step(
         v_cache = upd(cache["v"], v, pos)
     out = decode_attention(q, k_cache, v_cache, pos + 1, window=window)
     out = out.transpose(0, 2, 1, 3).reshape(b, 1, -1)
-    y = layers.linear(p["wo"], out, x.dtype)
+    y = _tp_reduce(layers.linear(p["wo"], out, x.dtype), cfg, cfg.tp_attn)
     return y, {"k": k_cache, "v": v_cache}
 
 
@@ -217,7 +235,7 @@ def attention_chunk_step(
         kv_valid_len=kv_len,
     )
     out = out.transpose(0, 2, 1, 3).reshape(b, c, -1)
-    y = layers.linear(p["wo"], out, x.dtype)
+    y = _tp_reduce(layers.linear(p["wo"], out, x.dtype), cfg, cfg.tp_attn)
     return y, {"k": k_cache, "v": v_cache}
 
 
@@ -230,7 +248,8 @@ def attn_block_chunk_step(
         kind=kind, window=window,
     )
     x = x + a
-    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    m = layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    x = x + _tp_reduce(m, cfg, cfg.tp_mlp)
     return x, cache
 
 
@@ -264,12 +283,14 @@ def attn_block_fwd(
         q_offset=q_offset, kind=kind, window=window, return_cache=return_cache,
     )
     x = x + a
-    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    m = layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    x = x + _tp_reduce(m, cfg, cfg.tp_mlp)
     return x, cache
 
 
 def attn_block_step(p: Params, cfg: ArchConfig, x, cache, pos, *, window=None, layer_flag=None, **_):
     a, cache = attention_step(p["attn"], cfg, layers.rmsnorm(p["ln1"], x), cache, pos, window=window)
     x = x + a
-    x = x + layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    m = layers.glu_mlp(p["mlp"], layers.rmsnorm(p["ln2"], x), cfg.act, x.dtype)
+    x = x + _tp_reduce(m, cfg, cfg.tp_mlp)
     return x, cache

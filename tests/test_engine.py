@@ -449,11 +449,12 @@ def test_swap_roundtrip_restores_bytes_into_different_blocks():
     cell byte-identical even though the physical blocks differ; the dummy
     block is never allocated, snapshotted, or written by the restore."""
     kv = PagedKVCache(PagedCacheConfig(page_size=4, num_blocks=9, max_slots=2, max_pages=6))
-    # two pools mimicking one segment's k/v: distinct cell fingerprints
+    # two pools mimicking one segment's k/v in the engine's token-major
+    # (count, T, Hkv, hd) layout (cell axis -3): distinct cell fingerprints
     t = kv.cfg.num_tokens
     pools = {
-        "k": jnp.arange(2 * t * 3, dtype=jnp.float32).reshape(2, t, 3),
-        "v": -jnp.arange(2 * t * 3, dtype=jnp.float32).reshape(2, t, 3),
+        "k": jnp.arange(2 * t * 3, dtype=jnp.float32).reshape(2, t, 1, 3),
+        "v": -jnp.arange(2 * t * 3, dtype=jnp.float32).reshape(2, t, 1, 3),
     }
     assert kv.ensure_capacity(0, 11)  # 3 pages
     assert kv.ensure_capacity(1, 5)  # 2 pages (forces slot 0 to move later)

@@ -1,0 +1,126 @@
+"""Property tests for the sharding rule table (parallel/sharding.py).
+
+The divisibility fallback law, driven across mesh sizes 1-16: whatever spec
+``_resolve`` returns for a leaf, the per-device shard shapes multiply back to
+the global shape exactly — a mesh axis is only ever assigned to a dim it
+divides (the fallback chain — alternate axis, then replicate — absorbs every
+ragged case rather than erroring), stacked-layer leaves always lead with
+``None`` for the scan axis, and resolution is spec-length-safe for any rank.
+These are the invariants ``parallel/tp.py`` builds its slice rules on.
+"""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, strategies as st
+
+from repro.parallel.sharding import _RULES, _resolve
+
+# Representative leaf paths: one per rule family, plus stacked twins and an
+# unmatched name (resolves fully replicated).
+_NAMES = [
+    "embed/table",
+    "head/w",
+    "segments/0/attn/wq",
+    "segments/0/attn/wk",
+    "segments/0/attn/wo",
+    "segments/3/mlp/wi_gate",
+    "segments/3/mlp/wo",
+    "encoder/self/wq",
+    "decoder/cross/wo",
+    "segments/1/moe/wi_gate",
+    "segments/1/moe/wo",
+    "segments/1/moe/router",
+    "segments/2/mamba/in_proj",
+    "segments/2/mamba/out_proj",
+    "segments/0/norm/scale",  # no rule: replicated
+]
+
+_STACKED_PREFIXES = ("segments/", "encoder/", "decoder/")
+
+
+def _shard_shape(shape, spec, axis_sizes):
+    """Per-device shard shape under ``spec`` (the law asserts exact division
+    first, so this is always an integer shape)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec)):
+        if ax is None:
+            out.append(dim)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        k = int(np.prod([axis_sizes[a] for a in axes]))
+        assert dim % k == 0, f"spec {spec} assigns indivisible axis: {dim} % {k}"
+        out.append(dim // k)
+    return tuple(out)
+
+
+@given(
+    name=st.sampled_from(_NAMES),
+    model=st.integers(min_value=1, max_value=16),
+    data=st.integers(min_value=1, max_value=16),
+    d0=st.sampled_from([1, 2, 3, 8, 24, 96, 32001]),
+    d1=st.sampled_from([1, 2, 3, 8, 24, 96, 32001]),
+    stacked_layers=st.integers(min_value=1, max_value=7),
+    fsdp=st.booleans(),
+)
+def test_resolve_divisibility_fallback_law(
+    name, model, data, d0, d1, stacked_layers, fsdp
+):
+    """Any leaf shape at any mesh size resolves (never raises) to a spec whose
+    shard shapes multiply back to the global shape."""
+    axis_sizes = {"data": data, "model": model}
+    core = (d0, d1)
+    stacked = name.startswith(_STACKED_PREFIXES)
+    shape = (stacked_layers, *core) if stacked else core
+    spec = _resolve(name, shape, axis_sizes, fsdp=fsdp, fsdp_min=2**10)
+    entries = tuple(spec)
+    assert len(entries) == len(shape), (name, shape, spec)
+    if stacked:
+        assert entries[0] is None, f"stacked leaf {name} shards its scan axis"
+    local = _shard_shape(shape, spec, axis_sizes)
+    mult = tuple(
+        l * int(np.prod([
+            axis_sizes[a]
+            for a in ((ax,) if not isinstance(ax, tuple) else ax)
+        ])) if ax is not None else l
+        for l, ax in zip(local, entries)
+    )
+    assert mult == shape
+
+
+@given(
+    model=st.integers(min_value=1, max_value=16),
+    e=st.sampled_from([2, 3, 6, 8, 60]),
+    d_ff=st.sampled_from([16, 48, 64]),
+)
+def test_moe_fallback_chain_always_lands(model, e, d_ff):
+    """Expert-parallel if E divides, TP-within-expert if d_ff does, else
+    replicated — the chain never assigns an indivisible axis."""
+    shape = (e, 32, d_ff)
+    spec = _resolve(
+        "segments/0/moe/wi_gate", (4, *shape), {"model": model},
+        fsdp=False, fsdp_min=2**62,
+    )
+    entries = tuple(spec)
+    assert entries[0] is None
+    _shard_shape((4, *shape), spec, {"model": model})  # asserts divisibility
+    if e % model == 0:
+        assert entries[1] == "model"  # expert-parallel preferred
+
+
+@given(n=st.integers(min_value=1, max_value=16))
+def test_mesh_size_one_replicates_nothing_away(n):
+    """At every mesh size the resolver covers every rule family; at n == 1
+    the intended axis always fits (dividing by 1), so the primary rule wins."""
+    for pat, rule in _RULES:
+        ndim = len(rule)
+        shape = tuple(16 for _ in range(ndim))
+        name = "segments/0/" + pat.strip("$").replace("(attn|self|cross)", "attn") \
+            .replace("(mlp|shared)", "mlp").replace("(wq|wk|wv)", "wq") \
+            .replace("(^|/)", "").lstrip("/")
+        spec = _resolve(name, (4, *shape), {"model": n}, fsdp=False, fsdp_min=2**62)
+        entries = tuple(spec)
+        assert len(entries) == ndim + 1
+        _shard_shape((4, *shape), spec, {"model": n})
+        if all(d % n == 0 for d in shape):
+            # the intended axis fits every dim: the primary rule wins verbatim
+            assert entries[1:] == rule, (name, rule, entries)

@@ -91,3 +91,58 @@ def test_section_norm_order_sorts_sections(key):
     order = sws.section_norm_order(sections)
     means = jnp.mean(jnp.abs(sections), axis=-1)[order]
     assert bool(jnp.all(means[1:] >= means[:-1]))
+
+
+# ---------------------------------------------------------------------------
+# host-callback sort routing (single-core deadlock guard)
+# ---------------------------------------------------------------------------
+
+def test_usable_cores_respects_affinity_mask(monkeypatch):
+    """The guard counts cores THIS process may run on, not the whole box."""
+    import os
+
+    monkeypatch.setattr(os, "sched_getaffinity", lambda pid: {0}, raising=False)
+    assert sws._usable_cores() == 1
+    monkeypatch.setattr(os, "sched_getaffinity", lambda pid: {0, 1, 5}, raising=False)
+    assert sws._usable_cores() == 3
+
+    def boom(pid):
+        raise OSError("no affinity syscall")
+
+    monkeypatch.setattr(os, "sched_getaffinity", boom, raising=False)
+    monkeypatch.setattr(os, "cpu_count", lambda: 4)
+    assert sws._usable_cores() == 4
+
+
+def test_use_host_sort_keys_on_cores_not_devices(monkeypatch):
+    """Regression: the routing guard must be independent of
+    ``jax.device_count()`` — emulated host-platform devices
+    (``--xla_force_host_platform_device_count``) add execution streams
+    without adding the second core the pending pure_callback needs, so a
+    pinned single-core process must take the device sort no matter how many
+    devices jax reports (the subprocess test in tests/test_tp_shard.py pins
+    the full emulated-mesh run)."""
+    monkeypatch.setattr(sws, "_usable_cores", lambda: 1)
+    monkeypatch.setattr(jax, "device_count", lambda: 64, raising=False)
+    assert sws._use_host_sort() is False
+    monkeypatch.setattr(sws, "_usable_cores", lambda: 2)
+    assert sws._use_host_sort() == (jax.default_backend() == "cpu")
+
+
+def test_stable_argsort_same_permutation_on_both_routes(monkeypatch):
+    """The two routes are interchangeable: forcing the device route yields
+    the exact permutation (and inverse) of the host-callback route."""
+    keys = jax.random.normal(jax.random.PRNGKey(7), (4096,))
+    monkeypatch.setattr(sws, "_use_host_sort", lambda: False)
+    dev_perm, dev_inv = sws.stable_argsort(keys, with_inverse=True)
+    monkeypatch.undo()
+    if sws._use_host_sort():
+        host_perm, host_inv = sws.stable_argsort(keys, with_inverse=True)
+        np.testing.assert_array_equal(np.asarray(host_perm), np.asarray(dev_perm))
+        np.testing.assert_array_equal(np.asarray(host_inv), np.asarray(dev_inv))
+    np.testing.assert_array_equal(
+        np.asarray(dev_perm), np.argsort(np.asarray(keys), kind="stable")
+    )
+    np.testing.assert_array_equal(
+        np.asarray(dev_inv)[np.asarray(dev_perm)], np.arange(4096)
+    )
